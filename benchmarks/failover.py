@@ -1,0 +1,57 @@
+"""Failover & straggler mitigation: the decentralized-control-plane claims.
+
+1. kill the serving cluster mid-training-job; measure attempts + total
+   virtual time to completion and verify checkpoint resume.
+2. straggler mitigation via multicast duplication: completion time equals
+   the FAST cluster's, not the slow one's.
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+from repro.core.strategy import MulticastStrategy
+from repro.runtime.fleet import build_fleet, resilient_run
+
+
+def run() -> List[Tuple]:
+    rows: List[Tuple] = []
+
+    # --- failover + named-checkpoint resume
+    sys_ = build_fleet(n_clusters=2, chips=16, archs=["lidc-demo"],
+                       ckpt_every=5)
+    fields = {"app": "train", "arch": "lidc-demo", "shape": "custom",
+              "chips": 4, "steps": 20, "bench": "failover"}
+    killed = {"done": False}
+    orig = sys_.lake.put_json
+
+    def hook(name, obj, **kw):
+        r = orig(name, obj, **kw)
+        if ("ckpt" in str(name) and "latest" in str(name)
+                and not killed["done"] and obj.get("step", 0) >= 10):
+            killed["done"] = True
+            sys_.overlay.fail_cluster(next(iter(sys_.overlay.clusters)))
+        return r
+
+    sys_.lake.put_json = hook
+    t0 = sys_.net.now
+    h, attempts = resilient_run(sys_, fields)
+    assert h is not None and h.state == "Completed" and killed["done"]
+    resumed = h.result.get("resumed_from") or 0
+    rows.append(("failover_resume", sys_.net.now - t0, resumed))
+    rows.append(("failover_attempts", attempts, 20))
+
+    # --- straggler mitigation: duplicate to 2, fast one wins
+    for strat, label in [(None, "best_route"),
+                         (MulticastStrategy(k=2), "multicast2")]:
+        sys2 = build_fleet(n_clusters=2, chips=16, archs=["lidc-demo"],
+                           ckpt_every=100,
+                           latencies=[0.5, 0.001],    # cluster0 is a straggler
+                           strategy=strat)
+        t0 = sys2.net.now
+        h = sys2.client.run_job({"app": "blast", "srr": "SRR2931415",
+                                 "db": "human", "mem": 4, "cpu": 2,
+                                 "s": label})
+        assert h is not None and h.state == "Completed"
+        rows.append((f"straggler_{label}", sys2.net.now - t0, 0))
+    return rows

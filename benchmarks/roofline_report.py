@@ -1,0 +1,68 @@
+"""Aggregate the dry-run artifacts into the §Roofline table.
+
+Reads artifacts/dryrun/*.json (written by launch/dryrun.py) and emits one
+row per (arch × shape × mesh): the three roofline terms, the dominant
+bottleneck, and the MODEL_FLOPS/HLO_FLOPs utilization ratio.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import List, Tuple
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load_reports(tag: str = "") -> List[dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        base = os.path.basename(path)
+        if tag:
+            if not base.endswith(f"__{tag}.json"):
+                continue
+        elif base.count("__") > 2:
+            continue    # skip tagged variants in the baseline table
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def run() -> List[Tuple]:
+    rows: List[Tuple] = []
+    for r in load_reports():
+        if r.get("status") != "ok":
+            rows.append((f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",
+                         -1.0, "FAILED"))
+            continue
+        dom_s = {"compute": r["compute_s"], "memory": r["memory_s"],
+                 "collective": r["collective_s"]}[r["dominant"]]
+        rows.append((
+            f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",
+            dom_s * 1e6,                                  # us of dominant term
+            f"dom={r['dominant']},ratio={r['useful_ratio']:.3f}"))
+    return rows
+
+
+def markdown_table(tag: str = "") -> str:
+    lines = ["| arch | shape | mesh | compute s | memory s | collective s "
+             "| dominant | MODEL/HLO | args GB/dev | temp GB/dev |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(load_reports(tag),
+                    key=lambda r: (r["arch"], r["shape"], r.get("mesh", ""))):
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r.get('mesh','?')} "
+                         f"| FAILED | | | | | | |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']:.4f} | {r['memory_s']:.4f} "
+            f"| {r['collective_s']:.4f} | {r['dominant']} "
+            f"| {r['useful_ratio']:.3f} | {r['argument_bytes']/1e9:.2f} "
+            f"| {r['temp_bytes']/1e9:.2f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(markdown_table())

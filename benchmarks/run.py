@@ -1,0 +1,42 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Each module's ``run()`` returns rows of (name, value, derived); this driver
+prints them as ``name,us_per_call,derived`` CSV (value semantics noted per
+table: virtual seconds for workflow benches, wall microseconds for step
+benches, dominant-term microseconds for roofline rows).
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (caching, failover, placement, roofline_report,
+                   step_bench, table1_compute)
+    modules = [
+        ("table1_compute", table1_compute),
+        ("placement", placement),
+        ("caching", caching),
+        ("failover", failover),
+        ("step_bench", step_bench),
+        ("roofline_report", roofline_report),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in modules:
+        try:
+            for row in mod.run():
+                label, value, derived = row
+                print(f"{label},{value},{derived}")
+        except Exception as e:
+            failures += 1
+            print(f"{name},ERROR,{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(f"{failures} benchmark module(s) failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Real compute micro-benchmarks on the host: wall time per train/decode
+step for reduced configs of every family (grounds the virtual cost model).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ShapeConfig, smoke_of
+from repro.models import bundle_for, synth_batch
+from repro.optim import AdamW, constant
+from repro.train.step import make_train_state, make_train_step
+
+ARCHS = ["qwen2-0.5b", "qwen3-moe-30b-a3b", "zamba2-2.7b", "xlstm-350m",
+         "seamless-m4t-large-v2"]
+
+
+def run() -> List[Tuple]:
+    rows: List[Tuple] = []
+    key = jax.random.PRNGKey(0)
+    shape = ShapeConfig("bench", "train", 64, 4)
+    for arch in ARCHS:
+        cfg = smoke_of(arch)
+        bundle = bundle_for(cfg)
+        opt = AdamW(lr=constant(1e-3))
+        state = make_train_state(cfg, key, opt)
+        step = jax.jit(make_train_step(cfg, opt), donate_argnums=0)
+        batch = jax.tree.map(jnp.asarray, synth_batch(cfg, shape, key))
+        state, m = step(state, batch)             # compile + warmup
+        jax.block_until_ready(m["loss"])
+        n = 5
+        t0 = time.perf_counter()
+        for _ in range(n):
+            state, m = step(state, batch)
+        jax.block_until_ready(m["loss"])
+        us = (time.perf_counter() - t0) / n * 1e6
+        tokens_per_s = shape.tokens / (us / 1e6)
+        rows.append((f"train_step_{arch}", us, tokens_per_s))
+    return rows

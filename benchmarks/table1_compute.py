@@ -1,0 +1,47 @@
+"""Paper Table I analog: computation performance vs resource configuration.
+
+The paper BLASTs SRA samples under varying cpu/mem and reports run time +
+output size, observing that resource variation barely moves run time.  We
+reproduce that table through the LIDC workflow (named Interests, status
+polls, result retrieval), then extend it with the ML-era version: a fixed
+training job under varying chip grants, where more chips DO help — the
+contrast the paper's §VII intelligence needs to learn.
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+from repro.runtime.fleet import build_fleet
+
+
+def run() -> List[Tuple]:
+    rows: List[Tuple] = []
+    sys_ = build_fleet(n_clusters=2, chips=64, archs=["lidc-demo"],
+                       ckpt_every=100)
+
+    # --- the paper's own rows (virtual run time from the calibrated model)
+    for srr, db, mem, cpu in [
+        ("SRR2931415", "human", 4, 2),
+        ("SRR2931415", "human", 4, 4),
+        ("SRR5139395", "human", 4, 2),
+        ("SRR5139395", "human", 6, 2),
+    ]:
+        h = sys_.client.run_job({"app": "blast", "srr": srr, "db": db,
+                                 "mem": mem, "cpu": cpu})
+        assert h is not None and h.state == "Completed", (srr, h and h.state)
+        rows.append((f"blast_{srr}_mem{mem}_cpu{cpu}",
+                     h.result["run_time_s"],
+                     h.result["output_bytes"]))
+
+    # --- the ML-era extension: same training job, varying chips
+    for chips in [4, 8, 16, 32]:
+        h = sys_.client.run_job({"app": "train", "arch": "lidc-demo",
+                                 "shape": "custom", "chips": chips,
+                                 "steps": 10, "sweep": chips})
+        assert h is not None and h.state == "Completed", (chips,
+                                                          h and h.state)
+        virtual = h.result["step_time_s"] * h.result["steps"]
+        rows.append((f"train_lidc-demo_chips{chips}", virtual,
+                     h.result["output_bytes"]))
+    return rows

@@ -1,0 +1,49 @@
+"""The paper's §IV deployment: a genomics workflow over LIDC.
+
+Reproduces the protocol of Fig. 5 with the Magic-BLAST stand-in app:
+  1. client expresses /lidc/compute/blast/... with SRR id + resources,
+  2. gateway validates the SRR_ID (paper §IV.B application validation),
+  3. the job runs; client polls /lidc/status/<cluster>/<job_id>,
+  4. results land in the data lake; client retrieves them by name,
+  5. the Table-I sweep: cpu/mem variations barely change run time.
+
+    PYTHONPATH=src python examples/genomics_workflow.py
+"""
+
+from repro.core.names import Name
+from repro.runtime.fleet import build_fleet
+
+system = build_fleet(n_clusters=2, chips=16, archs=["lidc-demo"])
+
+# --- a bad request first: application-specific validation rejects it
+bad = system.client.submit({"app": "blast", "srr": "not-an-srr"})
+print(f"malformed SRR -> {'rejected (no receipt)' if bad is None else bad.state}")
+
+# --- Table I, row by row, through the network
+print(f"\n{'SRR_ID':12s} {'db':6s} {'mem':>3s} {'cpu':>3s} "
+      f"{'run time':>12s} {'output':>10s}")
+for srr, db, mem, cpu in [
+    ("SRR2931415", "human", 4, 2),
+    ("SRR2931415", "human", 4, 4),
+    ("SRR5139395", "human", 4, 2),
+    ("SRR5139395", "human", 6, 2),
+]:
+    h = system.client.run_job({"app": "blast", "srr": srr, "db": db,
+                               "mem": mem, "cpu": cpu})
+    assert h is not None and h.state == "Completed"
+    t = h.result["run_time_s"]
+    hh, rem = divmod(int(t), 3600)
+    mm, ss = divmod(rem, 60)
+    print(f"{srr:12s} {db:6s} {mem:3d} {cpu:3d} "
+          f"{f'{hh}h{mm}m{ss}s':>12s} {h.result['output_bytes']/2**20:8.0f}MB")
+
+# --- retrieve the (cached) result object from the data lake by name
+rname = Name.parse(h.receipt["result_name"])
+data = system.client.fetch(rname)
+print(f"\nfetched {rname}")
+print(f"  alignment score (real Smith-Waterman on synthetic reads): "
+      f"{data.json()['alignment_score']}")
+print("\nTakeaway (paper §VI): cpu/mem variation changes run time <5% — "
+      "the workload is I/O-bound,\nwhich is why the network-level "
+      "completion-time model (core/scheduler.py) is what should pick "
+      "configurations.")

@@ -1,0 +1,18 @@
+import os, sys
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import jax
+from repro.configs.base import get_config, get_shape
+from repro.launch.dryrun import lower_cell
+from repro.launch.mesh import make_production_mesh
+from repro.roofline.hloparse import analyze_hlo
+
+arch, shape_name = sys.argv[1], sys.argv[2]
+remat = sys.argv[3] if len(sys.argv) > 3 else "full"
+mb = int(sys.argv[4]) if len(sys.argv) > 4 else 1
+compiled, _ = lower_cell(get_config(arch), get_shape(shape_name),
+                         make_production_mesh(), remat=remat, microbatch=mb)
+st = analyze_hlo(compiled.as_text())
+print(f"flops/dev={st.flops:.3e} hbm/dev={st.hbm_bytes/1e9:.1f}GB coll/dev={st.collective_bytes/1e9:.2f}GB")
+print("-- top byte ops (xMULT already applied) --")
+for b, comp, op, ty in st.top_ops[:14]:
+    print(f"  {b/1e9:8.2f}GB {comp[:44]:44s} {op:18s} {ty}")

@@ -1,0 +1,199 @@
+"""ComputeCluster: a TPU pod with a gateway node, endpoints and a job runtime.
+
+One ComputeCluster is the analog of one MicroK8s cluster in the paper:
+a gateway forwarder (the paper's gateway-NFD pod), a set of named service
+endpoints, a chip-capacity accountant, and a connection to the data lake.
+Job execution is pluggable: tests run *real* JAX steps on tiny configs;
+benchmarks use a calibrated cost model so the virtual clock reflects
+Table-I-style run times without hours of wall time.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from .forwarder import Forwarder, Network
+from .jobs import Job, JobSpec, JobState, result_name_for
+from .matchmaker import Matchmaker, MatchError, ServiceEndpoint
+from .names import Name
+
+__all__ = ["ComputeCluster", "ExecResult"]
+
+
+@dataclass
+class ExecResult:
+    """What an executor returns: result payload + virtual duration."""
+
+    payload: Dict[str, Any]
+    duration: float
+    arrays: Optional[Dict[str, Any]] = None  # large outputs -> lake arrays
+
+
+@dataclass
+class ExecPlan:
+    """Phased execution: [(virtual_duration, work_fn), ...] + finalize.
+
+    Each phase's ``work_fn`` performs that phase's real side effects
+    (train steps + checkpoint into the lake).  If the cluster dies between
+    phases, completed phases' checkpoints survive — a retransmitted job
+    resumes from them on another cluster.
+    """
+
+    phases: List[Tuple[float, Callable[[], None]]]
+    finalize: Callable[[], ExecResult]
+
+
+# executor(job, cluster) -> ExecResult | ExecPlan ; may raise to fail the job
+Executor = Callable[[Job, "ComputeCluster"], ExecResult]
+
+
+class ComputeCluster:
+    def __init__(self, net: Network, name: str, *, chips: int = 256,
+                 hbm_gb_per_chip: float = 16.0, lake=None,
+                 memory_model=None, region: str = "local",
+                 strategy=None):
+        self.net = net
+        self.name = name
+        self.chips = chips
+        self.hbm_gb_per_chip = hbm_gb_per_chip
+        self.region = region
+        self.lake = lake
+        self.node = Forwarder(net, name=f"{name}-gateway", strategy=strategy)
+        self.endpoints: List[ServiceEndpoint] = []
+        self.matchmaker = Matchmaker(memory_model=memory_model,
+                                     hbm_gb_per_chip=hbm_gb_per_chip)
+        self.jobs: Dict[str, Job] = {}
+        self.free_chips = chips
+        self.alive = True
+        self.completed_jobs = 0
+        self.failed_jobs = 0
+        # queue of (job, endpoint, grant) waiting for chips
+        self._waitq: List[Tuple[Job, ServiceEndpoint, int]] = []
+
+    # -- capability view used by validators --------------------------------
+    def capabilities(self) -> Dict[str, Any]:
+        archs: set = set()
+        shapes: set = set()
+        apps: set = set()
+        for e in self.endpoints:
+            apps.add(e.app)
+            archs.update(e.archs)
+            shapes.update(e.shapes)
+        return {
+            "apps": tuple(sorted(apps)),
+            "archs": tuple(sorted(archs)),
+            "shapes": tuple(sorted(shapes)),
+            "chips": self.chips,
+            "hbm_gb_total": self.chips * self.hbm_gb_per_chip,
+            "blast_dbs": ("human", "mouse"),
+            "region": self.region,
+        }
+
+    def add_endpoint(self, endpoint: ServiceEndpoint) -> None:
+        self.endpoints.append(endpoint)
+
+    # -- job lifecycle -------------------------------------------------------
+    def submit(self, spec: JobSpec, now: float) -> Job:
+        """Bind, admit and schedule a job. Raises MatchError if infeasible."""
+        endpoint, grant = self.matchmaker.match(spec, self.endpoints,
+                                                self.free_chips)
+        job = Job(spec=spec, cluster=self.name, submitted_at=now,
+                  granted_chips=grant, endpoint=endpoint.service)
+        self.jobs[job.job_id] = job
+        self._start(job, endpoint, grant)
+        return job
+
+    def _start(self, job: Job, endpoint: ServiceEndpoint, grant: int) -> None:
+        assert grant <= self.free_chips
+        self.free_chips -= grant
+        endpoint.running += 1
+        job.start(self.net.now)
+        try:
+            assert endpoint.executor is not None, f"{endpoint.service} has no executor"
+            res = endpoint.executor(job, self)
+        except Exception as e:  # execution failed synchronously
+            self._finish(job, endpoint, grant, error=f"{type(e).__name__}: {e}")
+            return
+        if isinstance(res, ExecPlan):
+            self._run_phase(job, endpoint, grant, res, 0)
+            return
+        # completion lands after the job's *virtual* duration
+        self.net.schedule(res.duration,
+                          lambda: self._finish(job, endpoint, grant, res=res))
+
+    def _run_phase(self, job: Job, endpoint: ServiceEndpoint, grant: int,
+                   plan: "ExecPlan", i: int) -> None:
+        if i >= len(plan.phases):
+            try:
+                res = plan.finalize()
+            except Exception as e:
+                self._finish(job, endpoint, grant,
+                             error=f"{type(e).__name__}: {e}")
+                return
+            self._finish(job, endpoint, grant, res=res)
+            return
+        duration, work = plan.phases[i]
+
+        def complete_phase() -> None:
+            if not self.alive:
+                return  # died mid-phase: this phase's work never happened
+            try:
+                work()
+            except Exception as e:
+                self._finish(job, endpoint, grant,
+                             error=f"{type(e).__name__}: {e}")
+                return
+            self._run_phase(job, endpoint, grant, plan, i + 1)
+
+        self.net.schedule(duration, complete_phase)
+
+    def _finish(self, job: Job, endpoint: ServiceEndpoint, grant: int,
+                res: Optional[ExecResult] = None,
+                error: Optional[str] = None) -> None:
+        self.free_chips += grant
+        endpoint.running -= 1
+        if not self.alive:
+            return  # cluster died mid-job: job stays Running forever (paper:
+                    # clients time out, retransmit, land on another cluster)
+        now = self.net.now
+        if error is not None or res is None:
+            job.fail(now, error or "executor returned nothing")
+            self.failed_jobs += 1
+        else:
+            job.complete(now, res.payload)
+            self.completed_jobs += 1
+            if self.lake is not None:
+                rname = result_name_for(job.spec)
+                self.lake.put_json(rname, {"job_id": job.job_id,
+                                           "cluster": self.name,
+                                           **res.payload})
+                if res.arrays:
+                    self.lake.put_arrays(rname.append("arrays"), res.arrays)
+        self._drain_waitq()
+
+    def _drain_waitq(self) -> None:
+        still: List[Tuple[Job, ServiceEndpoint, int]] = []
+        for job, endpoint, grant in self._waitq:
+            if grant <= self.free_chips and self.alive:
+                self._start(job, endpoint, grant)
+            else:
+                still.append((job, endpoint, grant))
+        self._waitq = still
+
+    # -- failure injection ----------------------------------------------------
+    def fail(self) -> None:
+        """The whole cluster goes dark (power/network loss)."""
+        self.alive = False
+        for f in self.node.faces.values():
+            f.down = True
+
+    def restore(self) -> None:
+        self.alive = True
+        for f in self.node.faces.values():
+            f.down = False
+
+    # -- utilization ----------------------------------------------------------
+    @property
+    def utilization(self) -> float:
+        return 1.0 - self.free_chips / max(self.chips, 1)

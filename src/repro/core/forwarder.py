@@ -1,0 +1,385 @@
+"""The NDN forwarding plane: faces, forwarders, and a virtual-clock network.
+
+The paper's deployment runs NFD forwarders over real links; this container
+has one host, so the plane is an **in-process discrete-event simulation**
+with deterministic virtual time.  Everything observable about the paper's
+mechanism — LPM forwarding, PIT aggregation, duplicate-nonce suppression,
+Content-Store hits, NACK-driven failover, interest-lifetime retransmission —
+behaves identically; only the transport differs (see DESIGN.md §8).
+
+Topology model::
+
+    consumer app ──face── Forwarder ──face── Forwarder ──face── producer app
+                           (client)            (gateway node of a cluster)
+
+Producers attach to a node by registering a prefix with a handler.  The
+handler may answer immediately (Data / Nack) or asynchronously by calling
+``publish`` later (long-running compute jobs).
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from .names import Name
+from .packets import Data, Interest
+from .tables import ContentStore, Fib, Pit
+
+__all__ = ["Nack", "Network", "Face", "Forwarder", "Consumer"]
+
+
+@dataclass(frozen=True)
+class Nack:
+    """Negative acknowledgement (no route / rejected / no capacity)."""
+
+    interest: Interest
+    reason: str
+
+    @property
+    def name(self) -> Name:
+        return self.interest.name
+
+
+# ---------------------------------------------------------------------------
+# Virtual-clock event network
+# ---------------------------------------------------------------------------
+
+class Network:
+    """Deterministic discrete-event scheduler shared by all nodes."""
+
+    def __init__(self) -> None:
+        self._queue: List[Tuple[float, int, Callable[[], None]]] = []
+        self._seq = itertools.count()
+        self.now = 0.0
+        self.events_processed = 0
+
+    def schedule(self, delay: float, fn: Callable[[], None]) -> None:
+        heapq.heappush(self._queue, (self.now + max(delay, 0.0), next(self._seq), fn))
+
+    def run(self, until: Optional[float] = None, max_events: int = 1_000_000) -> None:
+        """Process events in time order until quiescence (or `until`)."""
+        n = 0
+        while self._queue and n < max_events:
+            t, _, fn = self._queue[0]
+            if until is not None and t > until:
+                break
+            heapq.heappop(self._queue)
+            self.now = max(self.now, t)
+            fn()
+            n += 1
+        self.events_processed += n
+
+    def idle(self) -> bool:
+        return not self._queue
+
+
+# ---------------------------------------------------------------------------
+# Faces
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Face:
+    """A unidirectionally-addressed attachment point on a forwarder.
+
+    ``deliver`` sends a packet *out* of this face toward the peer; the
+    network schedules arrival after ``latency`` seconds.  Faces can be
+    taken ``down`` to model link/cluster failure (paper: clusters leaving
+    the overlay).
+    """
+
+    face_id: int
+    latency: float = 0.001
+    down: bool = False
+    # packet counters for benchmarks
+    tx_interests: int = 0
+    tx_data: int = 0
+    tx_nacks: int = 0
+    _peer_recv: Optional[Callable[[Any], None]] = None
+    _net: Optional[Network] = None
+
+    def connect(self, net: Network, peer_recv: Callable[[Any], None]) -> None:
+        self._net = net
+        self._peer_recv = peer_recv
+
+    def send(self, packet: Any) -> None:
+        if self.down or self._peer_recv is None or self._net is None:
+            return  # packets into a dead face vanish — exactly like the wire
+        if isinstance(packet, Interest):
+            self.tx_interests += 1
+        elif isinstance(packet, Data):
+            self.tx_data += 1
+        elif isinstance(packet, Nack):
+            self.tx_nacks += 1
+        recv = self._peer_recv
+        self._net.schedule(self.latency, lambda: recv(packet))
+
+
+def link(net: Network, a: "Forwarder", b: "Forwarder", latency: float = 0.001
+         ) -> Tuple[Face, Face]:
+    """Create a bidirectional link between two forwarders."""
+    fa = a.add_face(latency=latency)
+    fb = b.add_face(latency=latency)
+    fa.connect(net, lambda pkt, f=fb: b.receive(f.face_id, pkt))
+    fb.connect(net, lambda pkt, f=fa: a.receive(f.face_id, pkt))
+    return fa, fb
+
+
+# ---------------------------------------------------------------------------
+# Forwarder
+# ---------------------------------------------------------------------------
+
+ProducerHandler = Callable[[Interest, Callable[[Data], None], float], Optional[Any]]
+
+
+class Forwarder:
+    """One NDN node: FIB + PIT + CS + strategy, with attached producer apps."""
+
+    def __init__(self, net: Network, name: str, strategy=None, cs_capacity: int = 4096):
+        from .strategy import BestRouteStrategy  # local import to avoid cycle
+        self.net = net
+        self.name = name
+        self.fib = Fib()
+        self.pit = Pit()
+        self.cs = ContentStore(capacity=cs_capacity)
+        self.strategy = strategy or BestRouteStrategy()
+        self.faces: Dict[int, Face] = {}
+        self._next_face = itertools.count(1)
+        # local producers: prefix -> handler
+        self._producers: Dict[Tuple[str, ...], ProducerHandler] = {}
+        self.stats = {"in_interest": 0, "in_data": 0, "in_nack": 0,
+                      "cs_hit": 0, "dropped": 0, "agg": 0}
+
+    # -- wiring -------------------------------------------------------------
+    def add_face(self, latency: float = 0.001) -> Face:
+        f = Face(face_id=next(self._next_face), latency=latency)
+        self.faces[f.face_id] = f
+        return f
+
+    def attach_producer(self, prefix: Name, handler: ProducerHandler) -> None:
+        """Local application serving a prefix (gateway, data lake, ...)."""
+        self._producers[prefix.components] = handler
+
+    def register_route(self, prefix: Name, face: Face, cost: float = 1.0) -> None:
+        self.fib.register(prefix, face.face_id, cost)
+
+    def fail_face(self, face: Face) -> None:
+        """Link/cluster failure: drop routes and stop delivery."""
+        face.down = True
+        self.fib.remove_face(face.face_id)
+
+    # -- packet entry point ---------------------------------------------------
+    def receive(self, face_id: int, packet: Any) -> None:
+        if isinstance(packet, Interest):
+            self._on_interest(face_id, packet)
+        elif isinstance(packet, Data):
+            self._on_data(face_id, packet)
+        elif isinstance(packet, Nack):
+            self._on_nack(face_id, packet)
+
+    # -- interest pipeline ----------------------------------------------------
+    def _on_interest(self, in_face: int, interest: Interest) -> None:
+        now = self.net.now
+        self.stats["in_interest"] += 1
+        self.pit.expire(now)
+        if interest.hop_limit <= 0:
+            self.stats["dropped"] += 1
+            return
+        # 1. Content Store (this is also the paper's §VII result cache)
+        cached = self.cs.match(interest, now)
+        if cached is not None:
+            self.stats["cs_hit"] += 1
+            self._send(in_face, cached)
+            return
+        # 2. Local producer? (longest-prefix over registered producers)
+        for prefix in interest.name.prefixes():
+            handler = self._producers.get(prefix.components)
+            if handler is not None:
+                self._dispatch_producer(handler, in_face, interest)
+                return
+        # 3. PIT insert (aggregation / duplicate suppression)
+        entry, is_new, dup = self.pit.insert(interest, in_face, now)
+        if dup:
+            self.stats["dropped"] += 1
+            return
+        if not is_new:
+            self.stats["agg"] += 1      # aggregated onto existing entry
+            return
+        # 4. FIB lookup + strategy choice
+        matched, hops = self.fib.lookup(interest.name)
+        live = [h for h in hops if h.healthy and not self.faces[h.face_id].down
+                and h.face_id != in_face]
+        if not live:
+            self.pit.satisfy(interest.name)
+            self._send(in_face, Nack(interest, "no-route"))
+            return
+        chosen = self.strategy.choose(interest, entry, live, now)
+        fwd = interest.decrement_hop()
+        for h in chosen:
+            entry.out_faces.add(h.face_id)
+            entry.sent_at[h.face_id] = now
+            self._send(h.face_id, fwd)
+
+    def _dispatch_producer(self, handler: ProducerHandler, in_face: int,
+                           interest: Interest) -> None:
+        now = self.net.now
+        entry, is_new, dup = self.pit.insert(interest, in_face, now)
+        if dup:
+            return
+        if not is_new:
+            self.stats["agg"] += 1
+            return
+
+        def publish(data: Data) -> None:
+            self._on_data(face_id=-1, data=data)  # as if it arrived locally
+
+        result = handler(interest, publish, now)
+        if isinstance(result, Data):
+            publish(result)
+        elif isinstance(result, Nack):
+            self.pit.satisfy(interest.name)
+            self._send(in_face, result)
+        # None => producer will publish() asynchronously.
+
+    # -- data pipeline ----------------------------------------------------------
+    def _on_data(self, face_id: int, data: Data) -> None:
+        now = self.net.now
+        self.stats["in_data"] += 1
+        entries = self.pit.satisfy(data.name)
+        if not entries:
+            self.stats["dropped"] += 1   # unsolicited data
+            return
+        self.cs.insert(data)
+        for entry in entries:
+            # measurement feedback for strategies (rtt per upstream face)
+            if face_id in entry.sent_at:
+                rtt = now - entry.sent_at[face_id]
+                matched, _ = self.fib.lookup(entry.name)
+                if matched is not None:
+                    hop = self.fib.nexthops(matched).get(face_id)
+                    if hop is not None:
+                        hop.record(True, rtt)
+            for down in entry.in_faces:
+                if down != face_id and down in self.faces:
+                    self._send(down, data)
+
+    # -- nack pipeline -------------------------------------------------------------
+    def _on_nack(self, face_id: int, nack: Nack) -> None:
+        now = self.net.now
+        self.stats["in_nack"] += 1
+        entry = self.pit.get(nack.name)
+        if entry is None:
+            return
+        # mark the upstream unhealthy for this prefix and try an alternate
+        matched, _ = self.fib.lookup(nack.name)
+        if matched is not None:
+            hop = self.fib.nexthops(matched).get(face_id)
+            if hop is not None:
+                hop.record(False)
+        _, hops = self.fib.lookup(nack.name)
+        untried = [h for h in hops
+                   if h.face_id not in entry.out_faces
+                   and h.healthy and not self.faces[h.face_id].down]
+        if untried:
+            chosen = self.strategy.choose(nack.interest, entry, untried, now)
+            fwd = nack.interest.decrement_hop()
+            for h in chosen:
+                entry.out_faces.add(h.face_id)
+                entry.sent_at[h.face_id] = now
+                self._send(h.face_id, fwd)
+            return
+        # exhausted: propagate NACK downstream
+        for entry in self.pit.satisfy(nack.name):
+            for down in entry.in_faces:
+                if down in self.faces:
+                    self._send(down, nack)
+
+    # -- helpers -----------------------------------------------------------
+    def _send(self, face_id: int, packet: Any) -> None:
+        if face_id < 0:
+            return
+        face = self.faces.get(face_id)
+        if face is not None:
+            face.send(packet)
+
+
+# ---------------------------------------------------------------------------
+# Consumer
+# ---------------------------------------------------------------------------
+
+class Consumer:
+    """A client application attached to a forwarder node.
+
+    Implements the retransmission loop that, combined with PIT expiry and
+    strategy failover upstream, gives LIDC its resilience: if the chosen
+    cluster dies, the retransmitted Interest (fresh nonce) is routed to
+    another announcing cluster.
+    """
+
+    def __init__(self, net: Network, node: Forwarder, name: str = "consumer"):
+        self.net = net
+        self.node = node
+        self.name = name
+        self.face = node.add_face(latency=0.0005)
+        self._pending: Dict[Tuple[str, ...], Dict[str, Any]] = {}
+        self.face.connect(net, self._receive)
+        self.nacks: List[Nack] = []
+
+    def express(self, interest: Interest,
+                on_data: Callable[[Data], None],
+                on_fail: Optional[Callable[[str], None]] = None,
+                retries: int = 3) -> None:
+        key = interest.name.components
+        self._pending[key] = {"on_data": on_data, "on_fail": on_fail,
+                              "retries": retries, "interest": interest,
+                              "sent": self.net.now}
+        self.net.schedule(0.0, lambda: self.node.receive(self.face.face_id, interest))
+        self._arm_timeout(interest)
+
+    def get(self, name: Name, retries: int = 3, **kw) -> Dict[str, Any]:
+        """Express and run the network to quiescence; returns a result box."""
+        box: Dict[str, Any] = {}
+        self.express(Interest(name=name, **kw),
+                     on_data=lambda d: box.__setitem__("data", d),
+                     on_fail=lambda r: box.__setitem__("error", r),
+                     retries=retries)
+        self.net.run()
+        return box
+
+    def _arm_timeout(self, interest: Interest) -> None:
+        key = interest.name.components
+
+        def timeout() -> None:
+            st = self._pending.get(key)
+            if st is None or st["interest"].nonce != interest.nonce:
+                return  # answered, or superseded by a retransmission
+            if st["retries"] > 0:
+                st["retries"] -= 1
+                fresh = interest.refresh()
+                st["interest"] = fresh
+                self.node.receive(self.face.face_id, fresh)
+                self._arm_timeout(fresh)
+            else:
+                del self._pending[key]
+                if st["on_fail"]:
+                    st["on_fail"]("timeout")
+
+        self.net.schedule(interest.lifetime, timeout)
+
+    def _receive(self, packet: Any) -> None:
+        if isinstance(packet, Data):
+            for key in list(self._pending):
+                if Name(key).is_prefix_of(packet.name) or key == packet.name.components:
+                    st = self._pending.pop(key)
+                    st["on_data"](packet)
+        elif isinstance(packet, Nack):
+            self.nacks.append(packet)
+            st = self._pending.get(packet.name.components)
+            # NACK is advisory: keep the timeout armed (a retransmission may
+            # reach a cluster that just joined), but report if out of retries.
+            if st is not None and st["retries"] == 0:
+                self._pending.pop(packet.name.components)
+                if st["on_fail"]:
+                    st["on_fail"](f"nack:{packet.reason}")

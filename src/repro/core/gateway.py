@@ -1,0 +1,136 @@
+"""The cluster gateway (paper §III.C, Fig. 4): parse → validate → spawn.
+
+"The Gateway acts as a decision-maker, determining how to process the
+incoming Interest.  If the Interest relates to computational tasks, the
+Gateway parses the Interest to understand details such as the specific
+application to be activated, the target dataset, and other application
+parameters like memory capacity and CPU needs.  Once these details are
+clear, the Gateway initiates a Kubernetes job."
+
+Our gateway attaches three producers to the cluster's forwarder node:
+
+* ``/lidc/compute`` — parse the semantic name, run the per-app validator,
+  check the result cache, matchmake to a named endpoint, admit, and answer
+  with a signed *receipt* (job_id + where status/results will live).
+* ``/lidc/status/<job_id>`` — the paper's four-state status protocol.
+* ``/lidc/data`` — delegated to the data lake (the fileserver pod).
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Any, Callable, Dict, Optional
+
+from .cluster import ComputeCluster
+from .forwarder import Nack
+from .jobs import Job, JobSpec, JobState, result_name_for  # noqa: F401
+from .matchmaker import MatchError
+from .names import COMPUTE_PREFIX, STATUS_PREFIX, Name, job_fields_of
+from .packets import Data, Interest, sign_data
+from .validation import ValidationError, ValidatorRegistry, default_registry
+
+__all__ = ["Gateway"]
+
+
+class Gateway:
+    def __init__(self, cluster: ComputeCluster,
+                 validators: Optional[ValidatorRegistry] = None,
+                 signing_key: bytes = b"lidc-gateway-key"):
+        self.cluster = cluster
+        self.validators = validators or default_registry()
+        self.key = signing_key
+        self.receipts_served = 0
+        self.cache_shortcuts = 0
+        self.rejections: Dict[str, int] = {}
+        self._jobs_by_sig: Dict[str, str] = {}
+        node = cluster.node
+        node.attach_producer(Name.parse(COMPUTE_PREFIX), self._on_compute)
+        node.attach_producer(Name.parse(STATUS_PREFIX), self._on_status)
+        if cluster.lake is not None:
+            cluster.lake.attach(node)
+
+    # ------------------------------------------------------------- compute
+    def _on_compute(self, interest: Interest, publish: Callable[[Data], None],
+                    now: float):
+        fields = job_fields_of(interest.name)
+        if fields is None:
+            return self._reject(interest, "malformed-job-name")
+        app = fields.pop("app")
+        # 1. application-specific validation (paper §IV.B)
+        try:
+            self.validators.validate(app, fields, self.cluster.capabilities())
+        except ValidationError as e:
+            return self._reject(interest, f"validation:{e}")
+        spec = JobSpec(app=app, fields=fields)
+        # 2. result cache: identical canonical request already computed?
+        #    (paper §VII: "identical requests ... uniquely identifying names")
+        if self.cluster.lake is not None:
+            rname = result_name_for(spec)
+            if self.cluster.lake.has(rname):
+                self.cache_shortcuts += 1
+                cached = self.cluster.lake.get_json(rname) or {}
+                return self._receipt(interest, now, state="Completed",
+                                     job_id=cached.get("job_id", "cached"),
+                                     spec=spec)
+        # 3. same canonical job already running here? return its receipt
+        #    (dedupes multicast duplicates and client retransmissions)
+        sig = spec.signature()
+        existing_id = self._jobs_by_sig.get(sig)
+        if existing_id is not None:
+            job = self.cluster.jobs.get(existing_id)
+            if job is not None and job.state not in (JobState.FAILED,):
+                return self._receipt(interest, now, state=job.state.value,
+                                     job_id=job.job_id, spec=spec)
+        # 4. matchmake + admit (the K8s-job spawn)
+        if not self.cluster.alive:
+            return self._reject(interest, "cluster-down")
+        try:
+            job = self.cluster.submit(spec, now)
+        except MatchError as e:
+            return self._reject(interest, f"no-capacity:{e}")
+        self._jobs_by_sig[sig] = job.job_id
+        return self._receipt(interest, now, state=job.state.value,
+                             job_id=job.job_id, spec=spec)
+
+    # ------------------------------------------------------------- status
+    def _on_status(self, interest: Interest, publish: Callable[[Data], None],
+                   now: float):
+        comps = interest.name.components
+        base = Name.parse(STATUS_PREFIX)
+        # status names are /lidc/status/<cluster>/<job_id> so they route by
+        # prefix to the owning cluster (announced in overlay.py)
+        if len(comps) < len(base) + 2:
+            return self._reject(interest, "status-needs-job-id")
+        job_id = comps[len(base) + 1]
+        job = self.cluster.jobs.get(job_id)
+        if job is None:
+            return self._reject(interest, "unknown-job")
+        d = Data.from_json(interest.name, job.status_payload(),
+                           created_at=now, freshness=0.25)
+        return sign_data(d, self.key, self.cluster.name)
+
+    # ------------------------------------------------------------- helpers
+    def _receipt(self, interest: Interest, now: float, *, state: str,
+                 job_id: str, spec: JobSpec) -> Data:
+        self.receipts_served += 1
+        payload = {
+            "job_id": job_id,
+            "state": state,
+            "cluster": self.cluster.name,
+            "status_name": str(Name.parse(STATUS_PREFIX).append(
+                self.cluster.name, job_id)),
+            "result_name": str(result_name_for(spec)),
+        }
+        # Completed receipts are durable cache entries (the §VII result
+        # cache); Pending/Running receipts go stale fast so a retransmitted
+        # Interest after a cluster failure is NOT satisfied by a stale
+        # pointer to a dead cluster's job.
+        freshness = 300.0 if state == "Completed" else 1.0
+        d = Data.from_json(interest.name, payload, created_at=now,
+                           freshness=freshness)
+        return sign_data(d, self.key, self.cluster.name)
+
+    def _reject(self, interest: Interest, reason: str) -> Nack:
+        self.rejections[reason.split(":")[0]] = \
+            self.rejections.get(reason.split(":")[0], 0) + 1
+        return Nack(interest, reason)

@@ -1,0 +1,120 @@
+"""Job specifications and the Pending/Running/Completed/Failed state machine.
+
+The paper's status protocol (§IV.A) defines exactly four client-visible
+states; we keep them verbatim.  A job's *result name* is derived from the
+canonical job name's digest, so identical requests share one result object
+in the data lake — the unique-name mapping the paper proposes for result
+caching (§VII).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import itertools
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Any, Dict, Optional
+
+from .names import DATA_PREFIX, Name, canonical_job_name
+
+__all__ = ["JobState", "JobSpec", "Job", "result_name_for"]
+
+
+class JobState(str, Enum):
+    PENDING = "Pending"
+    RUNNING = "Running"
+    COMPLETED = "Completed"
+    FAILED = "Failed"
+
+
+@dataclass(frozen=True)
+class JobSpec:
+    """Parsed, validated job description (from the Interest name)."""
+
+    app: str
+    fields: Dict[str, Any] = field(default_factory=dict)
+
+    @property
+    def arch(self) -> Optional[str]:
+        return self.fields.get("arch")
+
+    @property
+    def shape(self) -> Optional[str]:
+        return self.fields.get("shape")
+
+    def chips(self, default: int = 1) -> int:
+        return int(self.fields.get("chips", default))
+
+    def steps(self, default: int = 1) -> int:
+        return int(self.fields.get("steps", default))
+
+    def name(self) -> Name:
+        return canonical_job_name({"app": self.app, **self.fields})
+
+    def signature(self) -> str:
+        """Stable identity of the *work* (drives caching & the scheduler)."""
+        return hashlib.sha256(str(self.name()).encode()).hexdigest()[:16]
+
+
+def result_name_for(spec: JobSpec) -> Name:
+    """Deterministic result location: /lidc/data/results/<job-signature>."""
+    return Name.parse(DATA_PREFIX).append("results", spec.signature())
+
+
+_job_seq = itertools.count(1)
+
+
+@dataclass
+class Job:
+    spec: JobSpec
+    cluster: str
+    job_id: str = ""
+    state: JobState = JobState.PENDING
+    submitted_at: float = 0.0
+    started_at: Optional[float] = None
+    finished_at: Optional[float] = None
+    error: Optional[str] = None
+    result: Optional[Dict[str, Any]] = None
+    # resources actually granted by the matchmaker
+    granted_chips: int = 0
+    endpoint: Optional[str] = None
+
+    def __post_init__(self) -> None:
+        if not self.job_id:
+            self.job_id = f"{self.cluster}-job-{next(_job_seq)}"
+
+    # -- state machine -------------------------------------------------------
+    def start(self, now: float) -> None:
+        assert self.state == JobState.PENDING, self.state
+        self.state = JobState.RUNNING
+        self.started_at = now
+
+    def complete(self, now: float, result: Dict[str, Any]) -> None:
+        assert self.state == JobState.RUNNING, self.state
+        self.state = JobState.COMPLETED
+        self.finished_at = now
+        self.result = result
+
+    def fail(self, now: float, error: str) -> None:
+        self.state = JobState.FAILED
+        self.finished_at = now
+        self.error = error
+
+    @property
+    def duration(self) -> Optional[float]:
+        if self.started_at is None or self.finished_at is None:
+            return None
+        return self.finished_at - self.started_at
+
+    def status_payload(self) -> Dict[str, Any]:
+        """The body of a /lidc/status/<job_id> answer (paper §IV.A)."""
+        out: Dict[str, Any] = {"job_id": self.job_id, "state": self.state.value,
+                               "cluster": self.cluster}
+        if self.state == JobState.COMPLETED:
+            out["result_name"] = str(result_name_for(self.spec))
+            if self.result:
+                out["summary"] = {k: v for k, v in self.result.items()
+                                  if isinstance(v, (int, float, str, bool))}
+        elif self.state == JobState.FAILED:
+            out["error"] = self.error or "unknown"
+        return out

@@ -1,0 +1,99 @@
+"""Matching named jobs to named service endpoints inside a cluster.
+
+This is the K8s half of the paper's design (§III.A-B): once the network has
+delivered a compute Interest to a cluster's gateway, the job must be bound
+to a *named service endpoint* — the group of pods that actually executes the
+application.  Our endpoints carry K8s-style DNS names
+(``train-qwen3-1p7b.lidck8s.svc.cluster.local``) and capability sets; the
+matchmaker scores candidates on capability fit, resource availability and a
+memory model, then grants chips.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from .jobs import JobSpec
+
+__all__ = ["ServiceEndpoint", "MatchError", "Matchmaker"]
+
+
+class MatchError(Exception):
+    pass
+
+
+# (spec, chips) -> estimated bytes per chip, or None if unknown
+MemoryModel = Callable[[JobSpec, int], Optional[float]]
+
+
+@dataclass
+class ServiceEndpoint:
+    """A named K8s-service-like executable endpoint."""
+
+    service: str                      # e.g. "train-lm.lidck8s.svc.cluster.local"
+    app: str                          # "train" | "serve" | "blast" | ...
+    archs: Tuple[str, ...] = ()      # empty = any
+    shapes: Tuple[str, ...] = ()     # empty = any
+    min_chips: int = 1
+    max_chips: int = 1 << 20
+    executor: Optional[Callable] = None  # (job, cluster) -> (result, duration)
+    running: int = 0                  # concurrently bound jobs (load signal)
+
+    def serves(self, spec: JobSpec) -> bool:
+        if self.app != spec.app:
+            return False
+        if self.archs and spec.arch is not None and spec.arch not in self.archs:
+            return False
+        if self.archs and spec.arch is None:
+            return False
+        if self.shapes and spec.shape is not None and spec.shape not in self.shapes:
+            return False
+        return True
+
+
+class Matchmaker:
+    """Bind a validated JobSpec to an endpoint + chip grant."""
+
+    def __init__(self, memory_model: Optional[MemoryModel] = None,
+                 hbm_gb_per_chip: float = 16.0):
+        self.memory_model = memory_model
+        self.hbm_bytes_per_chip = hbm_gb_per_chip * 1e9
+
+    def match(self, spec: JobSpec, endpoints: Sequence[ServiceEndpoint],
+              free_chips: int) -> Tuple[ServiceEndpoint, int]:
+        candidates = [e for e in endpoints if e.serves(spec)]
+        if not candidates:
+            raise MatchError(f"no endpoint serves app={spec.app} "
+                             f"arch={spec.arch} shape={spec.shape}")
+        want = spec.chips(default=1)
+        feasible: List[Tuple[float, ServiceEndpoint, int]] = []
+        for e in candidates:
+            grant = min(want, e.max_chips)
+            if grant < e.min_chips or grant > free_chips:
+                continue
+            if self.memory_model is not None:
+                est = self.memory_model(spec, grant)
+                if est is not None and est > self.hbm_bytes_per_chip:
+                    # try scaling chips up to fit memory, within the request
+                    fitted = None
+                    g = grant
+                    while g * 2 <= min(free_chips, e.max_chips, max(want, 1) * 8):
+                        g *= 2
+                        est2 = self.memory_model(spec, g)
+                        if est2 is not None and est2 <= self.hbm_bytes_per_chip:
+                            fitted = g
+                            break
+                    if fitted is None:
+                        continue
+                    grant = fitted
+            # score: prefer least-loaded, then most-specific arch match
+            specificity = (1 if e.archs else 0) + (1 if e.shapes else 0)
+            feasible.append((e.running - 0.1 * specificity, e, grant))
+        if not feasible:
+            raise MatchError(
+                f"no feasible endpoint for {spec.app}/{spec.arch} "
+                f"(want {want} chips, free {free_chips})")
+        feasible.sort(key=lambda t: (t[0], t[1].service))
+        _, endpoint, grant = feasible[0]
+        return endpoint, grant

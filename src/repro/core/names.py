@@ -1,0 +1,202 @@
+"""Hierarchical names and the semantic job-name codec.
+
+LIDC expresses *everything* — computations, datasets, checkpoints, status
+queries — as hierarchical names (paper §III.B).  A compute request name
+carries the application, its parameters and its resource requirements,
+e.g.::
+
+    /lidc/compute/app=train&arch=qwen3-1.7b&shape=train_4k&chips=256&steps=100
+
+This module implements:
+
+* :class:`Name` — an immutable hierarchical name with longest-prefix-match
+  helpers (the unit the FIB routes on).
+* :func:`encode_job` / :func:`parse_job` — the semantic codec between a
+  key-value job description and the final name component (the paper's
+  ``mem=4&cpu=6&app=BLAST`` convention).
+* :func:`canonical_job_name` — deterministic ordering of the key-value
+  pairs so that *identical requests produce identical names*, which is what
+  makes Content-Store result caching (paper §VII) sound.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Any, Dict, Iterable, Mapping, Optional, Tuple
+
+__all__ = [
+    "Name",
+    "encode_job",
+    "parse_job",
+    "canonical_job_name",
+    "COMPUTE_PREFIX",
+    "DATA_PREFIX",
+    "STATUS_PREFIX",
+    "CAPABILITY_PREFIX",
+]
+
+# Well-known prefixes, mirroring the paper's /ndn/k8s/{compute,data,status}.
+COMPUTE_PREFIX = "/lidc/compute"
+DATA_PREFIX = "/lidc/data"
+STATUS_PREFIX = "/lidc/status"
+# Capability announcements (cluster -> overlay); the analog of a cluster
+# exposing a named K8s service endpoint to the NDN network.
+CAPABILITY_PREFIX = "/lidc/cap"
+
+_COMPONENT_RE = re.compile(r"^[A-Za-z0-9_.,=&\-+%:]+$")
+
+
+@dataclass(frozen=True)
+class Name:
+    """An immutable hierarchical name: ``/a/b/c``.
+
+    Components are stored as a tuple of strings.  Comparison, hashing and
+    prefix tests are all component-wise (never substring-wise), matching NDN
+    semantics: ``/lidc/comp`` is *not* a prefix of ``/lidc/compute``.
+    """
+
+    components: Tuple[str, ...]
+
+    # -- construction ------------------------------------------------------
+    @staticmethod
+    def parse(uri: str) -> "Name":
+        uri = uri.strip()
+        if not uri.startswith("/"):
+            raise ValueError(f"name must start with '/': {uri!r}")
+        parts = tuple(p for p in uri.split("/") if p != "")
+        for p in parts:
+            if not _COMPONENT_RE.match(p):
+                raise ValueError(f"illegal name component {p!r} in {uri!r}")
+        return Name(parts)
+
+    @staticmethod
+    def of(*components: str) -> "Name":
+        out: list[str] = []
+        for c in components:
+            out.extend(p for p in str(c).split("/") if p)
+        return Name(tuple(out))
+
+    # -- algebra -----------------------------------------------------------
+    def append(self, *components: str) -> "Name":
+        return Name.of(str(self), *components)
+
+    def __truediv__(self, component: str) -> "Name":
+        return self.append(component)
+
+    def is_prefix_of(self, other: "Name") -> bool:
+        n = len(self.components)
+        return n <= len(other.components) and other.components[:n] == self.components
+
+    def prefixes(self) -> Iterable["Name"]:
+        """All prefixes of this name, longest first (for LPM walks)."""
+        for i in range(len(self.components), 0, -1):
+            yield Name(self.components[:i])
+
+    def __len__(self) -> int:
+        return len(self.components)
+
+    def __getitem__(self, i):
+        if isinstance(i, slice):
+            return Name(self.components[i])
+        return self.components[i]
+
+    def __str__(self) -> str:
+        return "/" + "/".join(self.components)
+
+    def __repr__(self) -> str:
+        return f"Name({str(self)!r})"
+
+
+# ---------------------------------------------------------------------------
+# Semantic job codec (the `mem=4&cpu=6&app=BLAST` convention, paper §III.C).
+# ---------------------------------------------------------------------------
+
+def _encode_value(v: Any) -> str:
+    if isinstance(v, bool):
+        return "1" if v else "0"
+    if isinstance(v, float) and v.is_integer():
+        return str(int(v))
+    return str(v)
+
+
+def encode_job(fields: Mapping[str, Any], *, canonical: bool = True) -> str:
+    """Encode a key-value job description into a single name component.
+
+    ``canonical=True`` sorts keys so identical requests yield identical
+    names (required for Content-Store result caching to hit).
+    """
+    items = fields.items()
+    if canonical:
+        items = sorted(items)
+    parts = []
+    for k, v in items:
+        if not re.match(r"^[A-Za-z0-9_.\-]+$", k):
+            raise ValueError(f"illegal job field key {k!r}")
+        parts.append(f"{k}={_encode_value(v)}")
+    return "&".join(parts)
+
+
+def parse_job(component: str) -> Dict[str, str]:
+    """Parse ``k=v&k=v`` back into a dict. Raises on malformed input."""
+    out: Dict[str, str] = {}
+    if not component:
+        return out
+    for kv in component.split("&"):
+        if "=" not in kv:
+            raise ValueError(f"malformed job field {kv!r} (expected k=v)")
+        k, v = kv.split("=", 1)
+        if k in out:
+            raise ValueError(f"duplicate job field {k!r}")
+        out[k] = v
+    return out
+
+
+def canonical_job_name(fields: Mapping[str, Any], prefix: str = COMPUTE_PREFIX) -> Name:
+    """Build the full, canonical compute name for a job description.
+
+    The name is *hierarchical* so that NDN longest-prefix-match can route on
+    it: well-known fields become components, everything else is a trailing
+    canonical ``k=v&...`` component (the paper's flat convention)::
+
+        /lidc/compute/<app>[/<arch>[/<shape>]]/[k=v&k=v...]
+
+    e.g. ``/lidc/compute/train/qwen3-1.7b/train_4k/chips=256&steps=100`` or
+    the paper's own example as ``/lidc/compute/blast/app_db=HUMAN&cpu=6&mem=4``.
+    A cluster may announce the generic ``/lidc/compute`` or a refined prefix
+    like ``/lidc/compute/train/qwen3-1.7b`` — LPM prefers the refined route.
+    """
+    f = dict(fields)
+    if "app" not in f:
+        raise ValueError("job description requires an 'app' field")
+    name = Name.parse(prefix).append(str(f.pop("app")))
+    arch = f.pop("arch", None)
+    shape = f.pop("shape", None)
+    if arch is not None:
+        name = name.append(str(arch))
+        if shape is not None:
+            name = name.append(str(shape))
+    elif shape is not None:
+        f["shape"] = shape  # shape without arch stays in the kv tail
+    if f:
+        name = name.append(encode_job(f, canonical=True))
+    return name
+
+
+def job_fields_of(name: Name) -> Optional[Dict[str, str]]:
+    """Invert :func:`canonical_job_name`; None if not a compute name."""
+    comp = Name.parse(COMPUTE_PREFIX)
+    if not comp.is_prefix_of(name) or len(name) <= len(comp):
+        return None
+    rest = list(name.components[len(comp):])
+    fields: Dict[str, str] = {}
+    if rest and "=" in rest[-1]:
+        fields.update(parse_job(rest.pop()))
+    positional = ["app", "arch", "shape"]
+    if len(rest) > len(positional):
+        return None
+    for key, value in zip(positional, rest):
+        fields[key] = value
+    if "app" not in fields:
+        return None
+    return fields

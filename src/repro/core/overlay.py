@@ -1,0 +1,247 @@
+"""The multi-cluster compute overlay + a client-side facade.
+
+Clusters join the overlay by *announcing name prefixes* (the analog of NLSR
+route announcement in the paper's NDN testbed): the generic
+``/lidc/compute/<app>`` plus refined per-arch prefixes, their status
+namespace, and — if they host a lake — the data namespace.  Leaving (or
+dying) withdraws the routes; consumers' retransmissions then reach the
+remaining clusters.  No central controller exists anywhere in this file —
+that is the point of the paper.
+
+:class:`LidcSystem` wires network + clusters + lake + client together for
+examples, tests and benchmarks.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from .cluster import ComputeCluster
+from .forwarder import Consumer, Face, Forwarder, Network, link
+from .gateway import Gateway
+from .jobs import JobSpec
+from .names import (COMPUTE_PREFIX, DATA_PREFIX, STATUS_PREFIX, Name,
+                    canonical_job_name)
+from .packets import Data, Interest
+from .strategy import BestRouteStrategy, Strategy
+
+__all__ = ["Overlay", "LidcClient", "LidcSystem"]
+
+
+class Overlay:
+    """A star/partial-mesh overlay rooted at an edge router.
+
+    The edge router is *not* a controller: it holds no job state, only FIB
+    routes learned from announcements, exactly like any NDN router.
+    """
+
+    def __init__(self, net: Network, strategy: Optional[Strategy] = None):
+        self.net = net
+        self.edge = Forwarder(net, "edge", strategy=strategy or BestRouteStrategy())
+        self.links: Dict[str, Tuple[Face, Face]] = {}
+        self.clusters: Dict[str, ComputeCluster] = {}
+        self.gateways: Dict[str, Gateway] = {}
+
+    # -- membership ----------------------------------------------------------
+    def announced_prefixes(self, cluster: ComputeCluster) -> List[Name]:
+        prefixes = [Name.parse(STATUS_PREFIX).append(cluster.name)]
+        seen = set()
+        for e in cluster.endpoints:
+            generic = Name.parse(COMPUTE_PREFIX).append(e.app)
+            if str(generic) not in seen:
+                seen.add(str(generic))
+                prefixes.append(generic)
+            for arch in e.archs:
+                refined = generic.append(arch)
+                if str(refined) not in seen:
+                    seen.add(str(refined))
+                    prefixes.append(refined)
+        if cluster.lake is not None:
+            prefixes.append(Name.parse(DATA_PREFIX))
+        return prefixes
+
+    def add_cluster(self, cluster: ComputeCluster, *, latency: float = 0.002,
+                    cost: float = 1.0, validators=None) -> Gateway:
+        """Join: link the gateway node and announce its prefixes."""
+        gw = Gateway(cluster, validators=validators)
+        edge_face, gw_face = link(self.net, self.edge, cluster.node, latency)
+        self.links[cluster.name] = (edge_face, gw_face)
+        self.clusters[cluster.name] = cluster
+        self.gateways[cluster.name] = gw
+        for prefix in self.announced_prefixes(cluster):
+            self.edge.register_route(prefix, edge_face, cost=cost)
+        return gw
+
+    def remove_cluster(self, name: str) -> None:
+        """Graceful leave: withdraw routes, drop the link."""
+        cluster = self.clusters.pop(name, None)
+        self.gateways.pop(name, None)
+        if cluster is None:
+            return
+        edge_face, gw_face = self.links.pop(name)
+        self.edge.fib.remove_face(edge_face.face_id)
+        edge_face.down = gw_face.down = True
+
+    def fail_cluster(self, name: str) -> None:
+        """Abrupt failure: the cluster goes dark *without* withdrawing routes.
+
+        The edge only discovers it through timeouts/NACK absence — this is
+        the hard case the paper's decentralized design must survive.
+        """
+        cluster = self.clusters[name]
+        cluster.fail()
+        edge_face, _ = self.links[name]
+        edge_face.down = True   # packets toward the dead cluster vanish
+
+    def heal_cluster(self, name: str) -> None:
+        cluster = self.clusters[name]
+        cluster.restore()
+        edge_face, _ = self.links[name]
+        edge_face.down = False
+
+
+# ---------------------------------------------------------------------------
+# Client facade
+# ---------------------------------------------------------------------------
+
+@dataclass
+class JobHandle:
+    request_name: Name
+    receipt: Dict[str, Any]
+    status_history: List[Dict[str, Any]] = field(default_factory=list)
+    result: Optional[Dict[str, Any]] = None
+    error: Optional[str] = None
+
+    @property
+    def job_id(self) -> Optional[str]:
+        return self.receipt.get("job_id")
+
+    @property
+    def state(self) -> str:
+        if self.status_history:
+            return self.status_history[-1]["state"]
+        return self.receipt.get("state", "Unknown")
+
+
+class LidcClient:
+    """The paper's sample client application (§IV.A): submit → poll → fetch."""
+
+    def __init__(self, net: Network, attach_to: Forwarder, name: str = "client"):
+        self.net = net
+        self.consumer = Consumer(net, attach_to, name=name)
+
+    # -- one-shot name fetch -------------------------------------------------
+    def fetch(self, name: Name, **kw) -> Optional[Data]:
+        box = self.consumer.get(name, **kw)
+        return box.get("data")
+
+    # -- job workflow ----------------------------------------------------------
+    def submit(self, fields: Dict[str, Any], retries: int = 3,
+               lifetime: float = 4.0) -> Optional[JobHandle]:
+        """Express a compute Interest; returns a handle with the receipt."""
+        name = canonical_job_name(fields)
+        box: Dict[str, Any] = {}
+        self.consumer.express(
+            Interest(name=name, lifetime=lifetime, must_be_fresh=True),
+            on_data=lambda d: box.__setitem__("data", d),
+            on_fail=lambda r: box.__setitem__("error", r),
+            retries=retries)
+        self.net.run()
+        if "data" not in box:
+            return None
+        return JobHandle(request_name=name, receipt=box["data"].json())
+
+    def poll_until_done(self, handle: JobHandle, *, interval: float = 0.5,
+                        max_polls: int = 10_000,
+                        on_poll: Optional[Callable[[Dict[str, Any]], None]] = None
+                        ) -> JobHandle:
+        """Poll /lidc/status/<cluster>/<job_id> until Completed/Failed.
+
+        Polling rides the virtual clock: each poll is scheduled ``interval``
+        seconds after the previous answer, so job "run time" elapses on the
+        network's clock, not wall time.
+        """
+        status_name = Name.parse(handle.receipt["status_name"])
+        if handle.receipt.get("state") == "Completed":   # cache shortcut
+            handle.status_history.append(
+                {"state": "Completed", "job_id": handle.job_id,
+                 "result_name": handle.receipt["result_name"]})
+            return handle
+        state = {"polls": 0, "done": False}
+
+        def poll() -> None:
+            if state["done"] or state["polls"] >= max_polls:
+                return
+            state["polls"] += 1
+            self.consumer.express(
+                Interest(name=status_name, must_be_fresh=True, lifetime=2.0),
+                on_data=on_answer,
+                on_fail=on_fail,
+                retries=1)
+
+        def on_answer(d: Data) -> None:
+            payload = d.json()
+            handle.status_history.append(payload)
+            if on_poll:
+                on_poll(payload)
+            if payload["state"] in ("Completed", "Failed"):
+                state["done"] = True
+                if payload["state"] == "Failed":
+                    handle.error = payload.get("error")
+            else:
+                self.net.schedule(interval, poll)
+
+        def on_fail(reason: str) -> None:
+            handle.error = reason
+            state["done"] = True
+
+        poll()
+        self.net.run()
+        return handle
+
+    def fetch_result(self, handle: JobHandle) -> Optional[Dict[str, Any]]:
+        rname = Name.parse(handle.receipt["result_name"])
+        d = self.fetch(rname)
+        if d is None:
+            return None
+        handle.result = d.json()
+        return handle.result
+
+    def run_job(self, fields: Dict[str, Any], **poll_kw
+                ) -> Optional[JobHandle]:
+        """submit → poll → fetch, the full paper workflow (Fig. 5)."""
+        handle = self.submit(fields)
+        if handle is None:
+            return None
+        self.poll_until_done(handle, **poll_kw)
+        if handle.state == "Completed":
+            self.fetch_result(handle)
+        return handle
+
+
+# ---------------------------------------------------------------------------
+# Whole-system facade
+# ---------------------------------------------------------------------------
+
+class LidcSystem:
+    """Network + overlay + shared data lake + one client, pre-wired."""
+
+    def __init__(self, strategy: Optional[Strategy] = None):
+        from ..datalake.lake import DataLake
+        self.net = Network()
+        self.overlay = Overlay(self.net, strategy=strategy)
+        self.lake = DataLake()
+        self.client = LidcClient(self.net, self.overlay.edge)
+
+    def add_cluster(self, name: str, *, chips: int = 8, endpoints=(),
+                    latency: float = 0.002, hbm_gb_per_chip: float = 16.0,
+                    memory_model=None, validators=None) -> ComputeCluster:
+        cluster = ComputeCluster(self.net, name, chips=chips,
+                                 hbm_gb_per_chip=hbm_gb_per_chip,
+                                 lake=self.lake, memory_model=memory_model)
+        for e in endpoints:
+            cluster.add_endpoint(e)
+        self.overlay.add_cluster(cluster, latency=latency,
+                                 validators=validators)
+        return cluster

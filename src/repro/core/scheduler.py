@@ -1,0 +1,111 @@
+"""Completion-time intelligence — the paper's §VII future work, implemented.
+
+From the paper: "we aim to enable the network to identify the most suitable
+cluster for executing requests and optimize the system by leveraging machine
+learning algorithms to predict completion times."
+
+Their Table I is the training data shape: (job signature, resource config)
+-> run time.  We implement a small, dependency-free online predictor:
+
+* per (job-key, cluster/face) exponentially-weighted run-time estimate, and
+* a cross-cluster *ridge regression* on log-runtime over simple job
+  features (log tokens, log chips, moe flag, ...), used to cold-start
+  predictions for never-seen (job, cluster) pairs.
+
+Both are updated online whenever a Data packet carrying a completed job's
+measured duration flows back through the strategy layer.
+"""
+
+from __future__ import annotations
+
+import math
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Mapping, Optional, Tuple
+
+import numpy as np
+
+__all__ = ["CompletionModel"]
+
+
+def _job_key(fields: Mapping[str, Any]) -> Tuple:
+    """What makes two jobs 'the same work' for prediction purposes."""
+    return (fields.get("app"), fields.get("arch"), fields.get("shape"),
+            str(fields.get("steps", "")), str(fields.get("chips", "")))
+
+
+def _features(fields: Mapping[str, Any]) -> np.ndarray:
+    """Cheap numeric features for the cross-job regressor."""
+    chips = float(fields.get("chips", 1) or 1)
+    steps = float(fields.get("steps", 1) or 1)
+    f = [
+        1.0,
+        math.log(max(chips, 1.0)),
+        math.log(max(steps, 1.0)),
+        1.0 if fields.get("app") == "train" else 0.0,
+        1.0 if fields.get("app") == "serve" else 0.0,
+        float(len(str(fields.get("arch", "")))) / 16.0,  # crude arch proxy
+    ]
+    return np.asarray(f, dtype=np.float64)
+
+
+@dataclass
+class _Ewma:
+    value: float = 0.0
+    n: int = 0
+
+    def update(self, x: float, alpha: float = 0.35) -> None:
+        self.value = x if self.n == 0 else (1 - alpha) * self.value + alpha * x
+        self.n += 1
+
+
+class CompletionModel:
+    """Online completion-time predictor over (job, cluster) pairs."""
+
+    def __init__(self, ridge: float = 1e-2):
+        self._exact: Dict[Tuple, Dict[int, _Ewma]] = defaultdict(dict)
+        self._ridge = ridge
+        self._dim = len(_features({}))
+        # running ridge-regression sufficient statistics, per face
+        self._xtx: Dict[int, np.ndarray] = {}
+        self._xty: Dict[int, np.ndarray] = {}
+        self.observations: List[Tuple[Tuple, int, float]] = []
+
+    # -- learning ------------------------------------------------------------
+    def observe(self, fields: Mapping[str, Any], face_id: int,
+                duration: float) -> None:
+        key = _job_key(fields)
+        self._exact[key].setdefault(face_id, _Ewma()).update(duration)
+        x = _features(fields)
+        y = math.log(max(duration, 1e-9))
+        if face_id not in self._xtx:
+            self._xtx[face_id] = self._ridge * np.eye(self._dim)
+            self._xty[face_id] = np.zeros(self._dim)
+        self._xtx[face_id] += np.outer(x, x)
+        self._xty[face_id] += x * y
+        self.observations.append((key, face_id, duration))
+
+    # -- inference -----------------------------------------------------------
+    def predict(self, fields: Mapping[str, Any], face_id: int
+                ) -> Optional[float]:
+        key = _job_key(fields)
+        exact = self._exact.get(key, {}).get(face_id)
+        if exact is not None and exact.n > 0:
+            return exact.value
+        # cold start: regression fit for this cluster, if it has history
+        xtx = self._xtx.get(face_id)
+        if xtx is None:
+            return None
+        try:
+            w = np.linalg.solve(xtx, self._xty[face_id])
+        except np.linalg.LinAlgError:
+            return None
+        return float(math.exp(float(_features(fields) @ w)))
+
+    def best_face(self, fields: Mapping[str, Any], faces: List[int]
+                  ) -> Optional[int]:
+        scored = [(self.predict(fields, f), f) for f in faces]
+        known = [(p, f) for p, f in scored if p is not None]
+        if not known:
+            return None
+        return min(known)[1]

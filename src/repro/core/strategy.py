@@ -1,0 +1,116 @@
+"""Forwarding strategies — how the network *chooses the cluster*.
+
+This is the heart of the paper's claim: once clusters announce semantic
+prefixes, "the network can bring the compute request to the nearest (or
+the best) compute cluster" (paper §III.B).  The strategy is the policy
+point where that choice is made:
+
+* :class:`BestRouteStrategy` — lowest cost nexthop; on retransmission it
+  rotates to the next-best (this is what yields failover).
+* :class:`LoadShareStrategy` — deterministic weighted round-robin over
+  healthy nexthops (the paper's load-balancing capability).
+* :class:`MulticastStrategy` — send to k upstreams at once; with PIT
+  dedup of the returning Data this is the straggler-mitigation primitive
+  (first cluster to answer wins; duplicates are suppressed).
+* :class:`CompletionTimeStrategy` — the paper's §VII future-work
+  "intelligence in the network": rank clusters by a learned
+  completion-time model (see core/scheduler.py) fed by Table-I-style
+  observations.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from .names import Name, job_fields_of
+from .packets import Interest
+from .tables import NextHop, PitEntry
+
+__all__ = [
+    "Strategy",
+    "BestRouteStrategy",
+    "LoadShareStrategy",
+    "MulticastStrategy",
+    "CompletionTimeStrategy",
+]
+
+
+class Strategy:
+    def choose(self, interest: Interest, entry: PitEntry,
+               nexthops: List[NextHop], now: float) -> List[NextHop]:
+        raise NotImplementedError
+
+
+class BestRouteStrategy(Strategy):
+    """Lowest-cost upstream; retransmissions probe the next-best path."""
+
+    def choose(self, interest, entry, nexthops, now):
+        ranked = sorted(nexthops, key=lambda h: (h.cost, h.rtt_ewma or 1e9, h.face_id))
+        untried = [h for h in ranked if h.face_id not in entry.out_faces]
+        pool = untried or ranked
+        return [pool[0]]
+
+
+class LoadShareStrategy(Strategy):
+    """Deterministic weighted round-robin (weight = 1/cost)."""
+
+    def __init__(self) -> None:
+        self._credit: Dict[int, float] = {}
+
+    def choose(self, interest, entry, nexthops, now):
+        best: Optional[NextHop] = None
+        best_credit = float("-inf")
+        for h in nexthops:
+            c = self._credit.get(h.face_id, 0.0) + 1.0 / max(h.cost, 1e-6)
+            self._credit[h.face_id] = c
+            if c > best_credit:
+                best, best_credit = h, c
+        assert best is not None
+        self._credit[best.face_id] -= sum(1.0 / max(h.cost, 1e-6) for h in nexthops)
+        return [best]
+
+
+class MulticastStrategy(Strategy):
+    """Fan an Interest to up to ``k`` upstreams; first Data wins.
+
+    With PIT aggregation, the duplicate answers are dropped at the join
+    point — so duplicating work to 2 clusters costs bandwidth but bounds
+    tail latency by the *fastest* cluster: straggler mitigation at the
+    control plane, no coordination required.
+    """
+
+    def __init__(self, k: int = 2) -> None:
+        self.k = k
+
+    def choose(self, interest, entry, nexthops, now):
+        ranked = sorted(nexthops, key=lambda h: (h.cost, h.face_id))
+        return ranked[: self.k]
+
+
+class CompletionTimeStrategy(Strategy):
+    """Rank clusters by predicted completion time for *this job name*.
+
+    The predictor (core/scheduler.CompletionModel) learns per
+    (app, arch, shape) from observed run times — the "deploy intelligence
+    in the network ... learn from this data and pick the optimal
+    configuration" loop the paper sketches from its Table I.
+    """
+
+    def __init__(self, model, fallback: Optional[Strategy] = None) -> None:
+        self.model = model
+        self.fallback = fallback or BestRouteStrategy()
+
+    def choose(self, interest, entry, nexthops, now):
+        fields = job_fields_of(interest.name)
+        if not fields:
+            return self.fallback.choose(interest, entry, nexthops, now)
+        scored: List[Tuple[float, NextHop]] = []
+        for h in nexthops:
+            pred = self.model.predict(fields, face_id=h.face_id)
+            if pred is None:
+                pred = h.rtt_ewma if h.rtt_ewma > 0 else 1e6 + h.cost
+            scored.append((pred + h.rtt_ewma * 0.1, h))
+        scored.sort(key=lambda t: (t[0], t[1].face_id))
+        untried = [h for _, h in scored if h.face_id not in entry.out_faces]
+        return [untried[0] if untried else scored[0][1]]

@@ -1,0 +1,220 @@
+"""FIB, PIT and Content Store — the three NDN forwarding tables.
+
+* FIB: longest-prefix-match over announced name prefixes -> next-hop faces,
+  with per-nexthop cost and health (strategies rank on these).
+* PIT: pending Interests; aggregates same-name requests (many consumers,
+  one upstream fetch), suppresses duplicate nonces (loop prevention), and
+  expires entries at interest lifetime — expiry is what drives
+  retransmission and therefore failover.
+* Content Store: LRU cache of Data packets.  This is simultaneously NDN's
+  in-network cache and the paper's §VII future-work *result cache* —
+  because job names are canonical, two identical compute requests hash to
+  the same name and the second is served from the CS.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from .names import Name
+from .packets import Data, Interest
+
+__all__ = ["Fib", "NextHop", "Pit", "PitEntry", "ContentStore"]
+
+
+# ---------------------------------------------------------------------------
+# FIB
+# ---------------------------------------------------------------------------
+
+@dataclass
+class NextHop:
+    face_id: int
+    cost: float = 1.0
+    healthy: bool = True
+    # moving success statistics maintained by strategies / measurements
+    rtt_ewma: float = 0.0
+    successes: int = 0
+    failures: int = 0
+
+    def record(self, ok: bool, rtt: float = 0.0, alpha: float = 0.3) -> None:
+        if ok:
+            self.successes += 1
+            self.rtt_ewma = rtt if self.rtt_ewma == 0 else (1 - alpha) * self.rtt_ewma + alpha * rtt
+        else:
+            self.failures += 1
+
+
+class Fib:
+    """Longest-prefix-match forwarding table."""
+
+    def __init__(self) -> None:
+        self._table: Dict[Tuple[str, ...], Dict[int, NextHop]] = {}
+
+    def register(self, prefix: Name, face_id: int, cost: float = 1.0) -> None:
+        hops = self._table.setdefault(prefix.components, {})
+        if face_id in hops:
+            hops[face_id].cost = min(hops[face_id].cost, cost)
+            hops[face_id].healthy = True
+        else:
+            hops[face_id] = NextHop(face_id=face_id, cost=cost)
+
+    def unregister(self, prefix: Name, face_id: Optional[int] = None) -> None:
+        hops = self._table.get(prefix.components)
+        if hops is None:
+            return
+        if face_id is None:
+            del self._table[prefix.components]
+            return
+        hops.pop(face_id, None)
+        if not hops:
+            del self._table[prefix.components]
+
+    def remove_face(self, face_id: int) -> None:
+        """A face died (cluster left / link failure): purge every route."""
+        for prefix in list(self._table):
+            self._table[prefix].pop(face_id, None)
+            if not self._table[prefix]:
+                del self._table[prefix]
+
+    def lookup(self, name: Name) -> Tuple[Optional[Name], List[NextHop]]:
+        """Longest-prefix match; returns (matched_prefix, nexthops)."""
+        for prefix in name.prefixes():
+            hops = self._table.get(prefix.components)
+            if hops:
+                return prefix, sorted(hops.values(), key=lambda h: h.cost)
+        return None, []
+
+    def prefixes(self) -> Iterable[Name]:
+        return (Name(c) for c in self._table)
+
+    def nexthops(self, prefix: Name) -> Dict[int, NextHop]:
+        return self._table.get(prefix.components, {})
+
+    def __len__(self) -> int:
+        return len(self._table)
+
+
+# ---------------------------------------------------------------------------
+# PIT
+# ---------------------------------------------------------------------------
+
+@dataclass
+class PitEntry:
+    name: Name
+    expiry: float
+    in_faces: Set[int] = field(default_factory=set)     # downstream consumers
+    out_faces: Set[int] = field(default_factory=set)    # upstreams tried
+    nonces: Set[int] = field(default_factory=set)
+    sent_at: Dict[int, float] = field(default_factory=dict)  # face -> send time
+    retransmissions: int = 0
+
+
+class Pit:
+    """Pending Interest Table with aggregation and nonce loop-suppression."""
+
+    def __init__(self) -> None:
+        self._table: Dict[Tuple[str, ...], PitEntry] = {}
+
+    def insert(self, interest: Interest, in_face: int, now: float
+               ) -> Tuple[PitEntry, bool, bool]:
+        """Record an incoming Interest.
+
+        Returns (entry, is_new, is_duplicate_nonce).  ``is_new`` means no
+        pending entry existed (caller must forward upstream); aggregation
+        happens when an entry exists with a different nonce.
+        """
+        key = interest.name.components
+        entry = self._table.get(key)
+        if entry is None:
+            entry = PitEntry(name=interest.name, expiry=now + interest.lifetime)
+            entry.in_faces.add(in_face)
+            entry.nonces.add(interest.nonce)
+            self._table[key] = entry
+            return entry, True, False
+        if interest.nonce in entry.nonces:
+            return entry, False, True          # looped duplicate: drop
+        entry.nonces.add(interest.nonce)
+        entry.in_faces.add(in_face)
+        entry.expiry = max(entry.expiry, now + interest.lifetime)
+        return entry, False, False
+
+    def satisfy(self, name: Name) -> List[PitEntry]:
+        """Data arrived: pop every entry whose name it satisfies (exact or
+        the Data name extends the Interest name)."""
+        out = []
+        for key in list(self._table):
+            entry_name = Name(key)
+            if key == name.components or entry_name.is_prefix_of(name):
+                out.append(self._table.pop(key))
+        return out
+
+    def get(self, name: Name) -> Optional[PitEntry]:
+        return self._table.get(name.components)
+
+    def expire(self, now: float) -> List[PitEntry]:
+        """Pop expired entries (drives retransmission / failover upstream)."""
+        dead = [k for k, e in self._table.items() if e.expiry <= now]
+        return [self._table.pop(k) for k in dead]
+
+    def __len__(self) -> int:
+        return len(self._table)
+
+
+# ---------------------------------------------------------------------------
+# Content Store
+# ---------------------------------------------------------------------------
+
+class ContentStore:
+    """LRU cache of Data packets; doubles as the paper's result cache."""
+
+    def __init__(self, capacity: int = 4096) -> None:
+        self.capacity = capacity
+        self._store: "OrderedDict[Tuple[str, ...], Data]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def insert(self, data: Data) -> None:
+        key = data.name.components
+        if key in self._store:
+            self._store.move_to_end(key)
+        self._store[key] = data
+        while len(self._store) > self.capacity:
+            self._store.popitem(last=False)
+
+    def match(self, interest: Interest, now: float) -> Optional[Data]:
+        """Find a cached Data satisfying the Interest."""
+        key = interest.name.components
+        hit: Optional[Data] = None
+        exact = self._store.get(key)
+        if exact is not None:
+            hit = exact
+        elif interest.can_be_prefix:
+            for k, d in self._store.items():
+                if interest.name.is_prefix_of(Name(k)):
+                    hit = d
+                    break
+        if hit is not None and interest.must_be_fresh and not hit.is_fresh(now):
+            hit = None
+        if hit is None:
+            self.misses += 1
+            return None
+        self.hits += 1
+        self._store.move_to_end(hit.name.components)
+        return hit
+
+    def evict_prefix(self, prefix: Name) -> int:
+        """Invalidate everything under a prefix (e.g. checkpoint superseded)."""
+        doomed = [k for k in self._store if prefix.is_prefix_of(Name(k))]
+        for k in doomed:
+            del self._store[k]
+        return len(doomed)
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0

@@ -1,0 +1,4 @@
+from .lake import SEGMENT_SIZE, DataLake
+from .store import DirStore, MemoryStore, ObjectStore
+
+__all__ = ["DataLake", "SEGMENT_SIZE", "ObjectStore", "MemoryStore", "DirStore"]

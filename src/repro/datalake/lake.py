@@ -1,0 +1,124 @@
+"""The named data lake (paper §III.C): publish/retrieve datasets by name.
+
+Computations pull raw inputs from the lake and publish intermediate/final
+outputs back into it; clients later retrieve results with an ordinary data
+Interest ("/lidc/data/<identifier>").  Objects larger than one packet are
+segmented NDN-style (`.../seg=i` components plus a `.../manifest`), which is
+also how multi-gigabyte checkpoints are stored and fetched.
+
+The lake attaches to a forwarder as a producer on the `/lidc/data` prefix,
+exactly like the paper's data-lake NFD + fileserver pod behind the gateway.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Any, Callable, Dict, Iterable, List, Optional
+
+import numpy as np
+
+from ..core.names import DATA_PREFIX, Name
+from ..core.packets import Data, Interest, sign_data
+from ..core.forwarder import Forwarder, Nack
+from .store import MemoryStore, ObjectStore
+
+__all__ = ["DataLake", "SEGMENT_SIZE"]
+
+SEGMENT_SIZE = 1 << 20  # 1 MiB virtual packets
+
+
+class DataLake:
+    """A named object store with NDN segmentation and signed answers."""
+
+    def __init__(self, store: Optional[ObjectStore] = None,
+                 prefix: str = DATA_PREFIX,
+                 signer: str = "datalake", key: bytes = b"lidc-lake-key"):
+        self.store = store or MemoryStore()
+        self.prefix = Name.parse(prefix)
+        self.signer = signer
+        self.key = key
+        self.puts = 0
+        self.gets = 0
+
+    # ------------------------------------------------------------------ put
+    def put_bytes(self, name: Name, blob: bytes,
+                  meta: Optional[Dict[str, Any]] = None) -> Name:
+        """Store a blob under a name, segmenting if needed."""
+        assert self.prefix.is_prefix_of(name), f"{name} outside {self.prefix}"
+        self.puts += 1
+        if len(blob) <= SEGMENT_SIZE:
+            self.store.put(str(name), blob)
+            if meta:
+                self.store.put(str(name) + "#meta", json.dumps(meta).encode())
+            return name
+        nseg = (len(blob) + SEGMENT_SIZE - 1) // SEGMENT_SIZE
+        for i in range(nseg):
+            seg = blob[i * SEGMENT_SIZE:(i + 1) * SEGMENT_SIZE]
+            self.store.put(str(name.append(f"seg={i}")), seg)
+        manifest = {"segments": nseg, "size": len(blob), **(meta or {})}
+        self.store.put(str(name.append("manifest")), json.dumps(manifest).encode())
+        return name
+
+    def put_json(self, name: Name, obj: Any, **kw) -> Name:
+        return self.put_bytes(name, json.dumps(obj, sort_keys=True).encode(), **kw)
+
+    def put_arrays(self, name: Name, arrays: Dict[str, np.ndarray]) -> Name:
+        """Store a flat dict of numpy arrays (checkpoint shards use this)."""
+        import io
+        buf = io.BytesIO()
+        np.savez(buf, **arrays)
+        return self.put_bytes(name, buf.getvalue(),
+                              meta={"kind": "arrays", "n": len(arrays)})
+
+    # ------------------------------------------------------------------ get
+    def get_bytes(self, name: Name) -> Optional[bytes]:
+        self.gets += 1
+        blob = self.store.get(str(name))
+        if blob is not None:
+            return blob
+        man = self.store.get(str(name.append("manifest")))
+        if man is None:
+            return None
+        manifest = json.loads(man.decode())
+        parts: List[bytes] = []
+        for i in range(int(manifest["segments"])):
+            seg = self.store.get(str(name.append(f"seg={i}")))
+            if seg is None:
+                return None  # torn object
+            parts.append(seg)
+        return b"".join(parts)
+
+    def get_json(self, name: Name) -> Optional[Any]:
+        blob = self.get_bytes(name)
+        return None if blob is None else json.loads(blob.decode())
+
+    def get_arrays(self, name: Name) -> Optional[Dict[str, np.ndarray]]:
+        import io
+        blob = self.get_bytes(name)
+        if blob is None:
+            return None
+        with np.load(io.BytesIO(blob)) as z:
+            return {k: z[k] for k in z.files}
+
+    def has(self, name: Name) -> bool:
+        return (self.store.get(str(name)) is not None
+                or self.store.get(str(name.append("manifest"))) is not None)
+
+    def names(self) -> List[str]:
+        return [k for k in self.store.keys()
+                if not (k.endswith("#meta"))]
+
+    # ------------------------------------------------------- producer glue
+    def attach(self, node: Forwarder) -> None:
+        """Serve `/lidc/data` Interests on a forwarder (the fileserver pod)."""
+
+        def handler(interest: Interest, publish: Callable[[Data], None],
+                    now: float):
+            blob = self.get_bytes(interest.name)
+            if blob is None:
+                return Nack(interest, "data-not-found")
+            d = Data(name=interest.name, content=blob, created_at=now,
+                     freshness=30.0)
+            return sign_data(d, self.key, self.signer)
+
+        node.attach_producer(self.prefix, handler)

@@ -1,0 +1,110 @@
+"""Storage backends for the data lake — the 'PVC' layer.
+
+The paper mounts an NFS-backed PersistentVolumeClaim into the cluster and
+serves files from it.  We provide two equivalent backends:
+
+* :class:`MemoryStore` — dict-backed, used by tests/benchmarks.
+* :class:`DirStore` — directory-backed (one file per object), the analog of
+  the paper's NFS PVC; survives process restarts, which is what makes
+  checkpoint/restart across cluster failures real.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import tempfile
+from typing import Dict, Iterable, Optional, Tuple
+
+__all__ = ["ObjectStore", "MemoryStore", "DirStore"]
+
+
+class ObjectStore:
+    def put(self, key: str, blob: bytes) -> None:
+        raise NotImplementedError
+
+    def get(self, key: str) -> Optional[bytes]:
+        raise NotImplementedError
+
+    def delete(self, key: str) -> None:
+        raise NotImplementedError
+
+    def keys(self) -> Iterable[str]:
+        raise NotImplementedError
+
+    def __contains__(self, key: str) -> bool:
+        return self.get(key) is not None
+
+
+class MemoryStore(ObjectStore):
+    def __init__(self) -> None:
+        self._d: Dict[str, bytes] = {}
+
+    def put(self, key: str, blob: bytes) -> None:
+        self._d[key] = bytes(blob)
+
+    def get(self, key: str) -> Optional[bytes]:
+        return self._d.get(key)
+
+    def delete(self, key: str) -> None:
+        self._d.pop(key, None)
+
+    def keys(self):
+        return list(self._d)
+
+    def total_bytes(self) -> int:
+        return sum(len(v) for v in self._d.values())
+
+
+class DirStore(ObjectStore):
+    """One file per object; keys are sanitized via sha256 prefixing."""
+
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+        self._index_path = os.path.join(root, "_index.json")
+        self._index: Dict[str, str] = {}
+        if os.path.exists(self._index_path):
+            with open(self._index_path) as f:
+                self._index = json.load(f)
+
+    def _fname(self, key: str) -> str:
+        h = hashlib.sha256(key.encode()).hexdigest()[:32]
+        return os.path.join(self.root, h + ".bin")
+
+    def _save_index(self) -> None:
+        tmp = self._index_path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(self._index, f)
+        os.replace(tmp, self._index_path)   # atomic: no torn index on crash
+
+    def put(self, key: str, blob: bytes) -> None:
+        path = self._fname(key)
+        fd, tmp = tempfile.mkstemp(dir=self.root)
+        with os.fdopen(fd, "wb") as f:
+            f.write(blob)
+        os.replace(tmp, path)               # atomic object write
+        self._index[key] = os.path.basename(path)
+        self._save_index()
+
+    def get(self, key: str) -> Optional[bytes]:
+        if key not in self._index:
+            return None
+        path = os.path.join(self.root, self._index[key])
+        if not os.path.exists(path):
+            return None
+        with open(path, "rb") as f:
+            return f.read()
+
+    def delete(self, key: str) -> None:
+        name = self._index.pop(key, None)
+        if name:
+            try:
+                os.remove(os.path.join(self.root, name))
+            except FileNotFoundError:
+                pass
+            self._save_index()
+
+    def keys(self):
+        return list(self._index)

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the compute hot spots, with pure-jnp oracles.
+
+The paper (a control-plane contribution) has no kernel of its own; these
+serve the assigned architectures' hot loops — see DESIGN.md §6.
+"""
+
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,87 @@
+"""jit'd dispatch wrappers: one call site, three implementations.
+
+``impl`` policy (set_impl / REPRO_KERNEL_IMPL):
+
+* ``ref``      — pure-jnp oracle (default on CPU; what the dry-run lowers,
+                 since Pallas TPU kernels cannot lower on the host backend)
+* ``pallas``   — real Pallas kernels (TPU target)
+* ``interpret``— Pallas kernels in interpret mode (CPU correctness runs)
+"""
+
+from __future__ import annotations
+
+import os
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+
+__all__ = ["set_impl", "get_impl", "attention", "decode_attention",
+           "ssd_state_scan", "moe_gating"]
+
+_IMPL = os.environ.get("REPRO_KERNEL_IMPL", "ref")
+
+
+def set_impl(impl: str) -> None:
+    global _IMPL
+    assert impl in ("ref", "pallas", "interpret"), impl
+    _IMPL = impl
+
+
+def get_impl() -> str:
+    return _IMPL
+
+
+_CHUNK_THRESHOLD = 1024   # chunk the XLA fallback above this query length
+_CHUNK_Q = 512
+
+
+def set_chunking(threshold: int, chunk_q: int) -> None:
+    global _CHUNK_THRESHOLD, _CHUNK_Q
+    _CHUNK_THRESHOLD, _CHUNK_Q = threshold, chunk_q
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True) -> jax.Array:
+    if _IMPL == "ref":
+        if q.shape[1] > _CHUNK_THRESHOLD:
+            return ref.attention_chunked(q, k, v, causal=causal,
+                                         chunk_q=_CHUNK_Q)
+        return ref.attention_ref(q, k, v, causal=causal)
+    from .flash_attention import flash_attention
+    return flash_attention(q, k, v, causal=causal,
+                           interpret=(_IMPL == "interpret"))
+
+
+def decode_attention(q: jax.Array, cache_k: jax.Array, cache_v: jax.Array,
+                     length: jax.Array, *, seq_shard: bool = False
+                     ) -> jax.Array:
+    # seq_shard is handled transparently by the SPMD partitioner: with the
+    # cache sequence dim sharded over 'data', the softmax reductions become
+    # all-reduces. The flag is kept for the explicit shard_map path (perf
+    # iteration in EXPERIMENTS.md §Perf).
+    if _IMPL == "ref":
+        return ref.decode_attention_ref(q, cache_k, cache_v, length)
+    from .decode_attention import flash_decode
+    return flash_decode(q, cache_k, cache_v, length,
+                        interpret=(_IMPL == "interpret"))
+
+
+def ssd_state_scan(chunk_states: jax.Array, chunk_decays: jax.Array,
+                   init_state: Optional[jax.Array] = None
+                   ) -> Tuple[jax.Array, jax.Array]:
+    if _IMPL == "ref":
+        return ref.ssd_state_scan_ref(chunk_states, chunk_decays, init_state)
+    from .ssd_scan import ssd_state_scan as kernel
+    return kernel(chunk_states, chunk_decays, init_state,
+                  interpret=(_IMPL == "interpret"))
+
+
+def moe_gating(logits: jax.Array, k: int) -> Tuple[jax.Array, jax.Array]:
+    if _IMPL == "ref":
+        return ref.moe_gating_ref(logits, k)
+    from .moe_gating import moe_gating as kernel
+    return kernel(logits, k, interpret=(_IMPL == "interpret"))

@@ -1,0 +1,188 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the correctness ground truth: kernel tests sweep shapes/dtypes and
+assert allclose against these functions; the model code calls them through
+``ops.py`` whenever the Pallas path is unavailable (CPU) or disabled.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_ref", "decode_attention_ref", "ssd_state_scan_ref",
+           "moe_gating_ref"]
+
+
+def _repeat_kv(k: jax.Array, groups: int) -> jax.Array:
+    """(B, S, K, hd) -> (B, S, K*groups, hd) by repeating each kv head."""
+    if groups == 1:
+        return k
+    B, S, K, hd = k.shape
+    return jnp.repeat(k, groups, axis=2)
+
+
+def _gqa_constrain(qg: jax.Array, k: jax.Array, v: jax.Array, K: int,
+                   hd: int):
+    """Shard (q-grouped, k, v) so the GQA contraction never gathers the
+    kv tensors: kv heads over 'tp' when divisible, else head_dim on both
+    sides (partial contraction + psum).  Right for DECODE (logits are
+    B x S); for training use :func:`_train_layout` instead."""
+    from ..models.sharding import gqa_axes, shard
+    kv_ax, hd_ax = gqa_axes(K, hd)
+    qg = shard(qg, "batch", None, kv_ax, None, hd_ax)
+    k = shard(k, "batch", None, kv_ax, hd_ax)
+    v = shard(v, "batch", None, kv_ax, hd_ax)
+    return qg, k, v
+
+
+def _train_layout(q: jax.Array, k: jax.Array, v: jax.Array):
+    """Layout for full-sequence attention (training/prefill).
+
+    hd-sharding here would psum S x S logits — catastrophic.  Instead:
+    * K divides the axis -> grouped layout (B,S,K,G,hd), fully local;
+    * else repeat kv to H heads (transient, S*H*hd bytes — cheap next to
+      the S^2 work) and shard the composite head dim — fully local;
+    * else leave replicated (tiny models run pure-DP anyway).
+    Returns (q5 (B,S,K',G',hd), k, v (B,T,K',hd)) ready for the grouped
+    einsums.
+    """
+    from ..models.sharding import axis_size, gqa_axes, shard
+    from ..models.sharding import current_rules
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    tp = current_rules().get("tp")
+    n = axis_size(tp) if isinstance(tp, str) else 1
+    if n > 1 and K % n == 0:
+        qg = q.reshape(B, S, K, G, hd)
+        qg = shard(qg, "batch", None, "tp", None, None)
+        k = shard(k, "batch", None, "tp", None)
+        v = shard(v, "batch", None, "tp", None)
+        return qg, k, v
+    if n > 1 and H % n == 0 and G > 1:
+        k = jnp.repeat(k, G, axis=2)          # (B,T,H,hd)
+        v = jnp.repeat(v, G, axis=2)
+        qg = q.reshape(B, S, H, 1, hd)
+        qg = shard(qg, "batch", None, "tp", None, None)
+        k = shard(k, "batch", None, "tp", None)
+        v = shard(v, "batch", None, "tp", None)
+        return qg, k, v
+    return q.reshape(B, S, K, G, hd), k, v
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, scale: Optional[float] = None
+                  ) -> jax.Array:
+    """GQA attention, grouped-query form (no materialized kv repetition).
+
+    q: (B,S,H,hd), k/v: (B,T,K,hd) with H % K == 0.
+    """
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    scale = scale if scale is not None else hd ** -0.5
+    qg, k, v = _train_layout(q, k, v)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    if causal:
+        # queries are the *last* S positions of the T keys (prefill: S == T)
+        qpos = jnp.arange(S)[:, None] + (T - S)
+        kpos = jnp.arange(T)[None, :]
+        mask = kpos <= qpos
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(B, S, H, hd)
+
+
+def attention_chunked(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True, scale: Optional[float] = None,
+                      chunk_q: int = 256) -> jax.Array:
+    """Query-chunked exact attention: peak memory O(chunk·T) instead of
+    O(S·T).  This is what the dry-run lowers on hosts where the Pallas
+    kernel cannot (XLA still fuses the inner chunk well on TPU)."""
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    if S % chunk_q != 0 or S <= chunk_q:
+        return attention_ref(q, k, v, causal=causal, scale=scale)
+    scale = scale if scale is not None else hd ** -0.5
+    qg, k, v = _train_layout(q, k, v)
+    nq = S // chunk_q
+
+    @jax.checkpoint   # inner remat: never stack per-chunk probs residuals
+    def one_chunk(qi):
+        qc = jax.lax.dynamic_slice_in_dim(qg, qi * chunk_q, chunk_q, 1)
+        logits = jnp.einsum("bskgd,btkd->bkgst", qc, k,
+                            preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = (qi * chunk_q + jnp.arange(chunk_q))[:, None] + (T - S)
+            kpos = jnp.arange(T)[None, :]
+            logits = jnp.where((kpos <= qpos)[None, None, None],
+                               logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+        return jnp.einsum("bkgst,btkd->bskgd", probs, v)
+
+    chunks = jax.lax.map(one_chunk, jnp.arange(nq))    # (nq,B,cq,K,G,hd)
+    return jnp.moveaxis(chunks, 0, 1).reshape(B, S, H, hd)
+
+
+def decode_attention_ref(q: jax.Array, cache_k: jax.Array, cache_v: jax.Array,
+                         length: jax.Array) -> jax.Array:
+    """One-token decode, grouped-query form (the cache is NEVER repeated or
+    gathered: contraction over sharded head_dim lowers to a local partial
+    product + a psum of the small logits).
+
+    q: (B,1,H,hd), cache: (B,Smax,K,hd), length: scalar or (B,)."""
+    B, one, H, hd = q.shape
+    Smax, K = cache_k.shape[1], cache_k.shape[2]
+    G = H // K
+    qg = q.reshape(B, 1, K, G, hd)
+    qg, k, v = _gqa_constrain(qg, cache_k, cache_v, K, hd)
+    qg = qg[:, 0]                                              # (B,K,G,hd)
+    logits = jnp.einsum("bkgd,btkd->bkgt", qg, k,
+                        preferred_element_type=jnp.float32) * hd ** -0.5
+    pos = jnp.arange(Smax)
+    valid = pos[None, :] < jnp.reshape(length, (-1, 1))        # (B, Smax)
+    logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgt,btkd->bkgd", probs, v)
+    return out.reshape(B, 1, H, hd)
+
+
+def ssd_state_scan_ref(chunk_states: jax.Array, chunk_decays: jax.Array,
+                       init_state: Optional[jax.Array] = None
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Mamba2 inter-chunk state recurrence (the sequential hot spot).
+
+    chunk_states: (B, C, H, P, N) — per-chunk accumulated outer products.
+    chunk_decays: (B, C, H) — per-chunk total decay (prod of a_t in chunk).
+    Returns (prefix_states (B,C,H,P,N) — state *entering* each chunk,
+             final_state (B,H,P,N)).
+    """
+    B, C, H, P, N = chunk_states.shape
+    s0 = (jnp.zeros((B, H, P, N), chunk_states.dtype)
+          if init_state is None else init_state)
+
+    def step(s, inp):
+        x_c, a_c = inp
+        out = s                                  # state entering this chunk
+        s = a_c[..., None, None] * s + x_c
+        return s, out
+
+    xs = (jnp.moveaxis(chunk_states, 1, 0), jnp.moveaxis(chunk_decays, 1, 0))
+    final, prefix = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(prefix, 0, 1), final
+
+
+def moe_gating_ref(logits: jax.Array, k: int
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Fused router: softmax over experts then top-k, renormalized.
+
+    logits: (T, E) -> (weights (T,k) f32, ids (T,k) i32).
+    """
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    w, ids = jax.lax.top_k(probs, k)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    return w, ids.astype(jnp.int32)

@@ -1,0 +1,9 @@
+from .model import (ModelBundle, bundle_for, input_specs, memory_estimate,
+                    model_flops, param_count, synth_batch)
+from .sharding import (DEFAULT_RULES, FSDP_RULES, param_pspecs, set_rules,
+                       shard, use_rules)
+
+__all__ = ["ModelBundle", "bundle_for", "input_specs", "model_flops",
+           "param_count", "synth_batch", "memory_estimate",
+           "DEFAULT_RULES", "FSDP_RULES", "param_pspecs", "set_rules",
+           "shard", "use_rules"]

@@ -1,0 +1,224 @@
+"""Encoder-decoder backbone (seamless-m4t-large-v2).
+
+The speech frontend is a STUB per the assignment: the model consumes
+precomputed frame embeddings (B, frames, d_model) — ``input_specs`` in
+model.py provides them.  24 bidirectional encoder layers + 24 causal
+decoder layers with cross-attention; the text decoder owns the 256206
+vocabulary.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..configs.base import ArchConfig
+from . import layers as L
+from . import transformer as T
+from .sharding import shard
+
+Params = Dict[str, Any]
+
+
+def init_dec_block(cfg: ArchConfig, key, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "norm1": L.init_rmsnorm(cfg.d_model, dtype),
+        "attn": L.init_attention(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                 cfg.hd, dtype=dtype),
+        "norm2": L.init_rmsnorm(cfg.d_model, dtype),
+        "xattn": L.init_attention(k2, cfg.d_model, cfg.n_heads,
+                                  cfg.n_kv_heads, cfg.hd, dtype=dtype),
+        "norm3": L.init_rmsnorm(cfg.d_model, dtype),
+        "mlp": L.init_mlp(k3, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def init(cfg: ArchConfig, key) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    ke, kenc, kdec, kh = jax.random.split(key, 4)
+    enc_keys = jax.random.split(kenc, cfg.enc_layers)
+    dec_keys = jax.random.split(kdec, cfg.dec_layers)
+    return {
+        "embed": L.init_embed(ke, cfg.vocab, cfg.d_model, dtype),
+        "enc_blocks": jax.vmap(lambda k: T.init_block(cfg, k, dtype))(enc_keys),
+        "enc_norm": L.init_rmsnorm(cfg.d_model, dtype),
+        "dec_blocks": jax.vmap(lambda k: init_dec_block(cfg, k, dtype))(dec_keys),
+        "final_norm": L.init_rmsnorm(cfg.d_model, dtype),
+        "lm_head": {"w": L._dense_init(kh, (cfg.d_model, cfg.vocab),
+                                       cfg.d_model, dtype)},
+    }
+
+
+def encode(cfg: ArchConfig, params: Params, frames: jax.Array, *,
+           remat: str = "none") -> jax.Array:
+    """frames: (B, F, D) precomputed frontend embeddings (stub)."""
+    x = shard(frames, "batch", None, None)
+
+    def body(h, blk):
+        hn = L.rms_norm(blk["norm1"], h, cfg.norm_eps)
+        h = h + L.attention_block(blk["attn"], hn, n_heads=cfg.n_heads,
+                                  n_kv=cfg.n_kv_heads, head_dim=cfg.hd,
+                                  theta=cfg.rope_theta, causal=False,
+                                  eps=cfg.norm_eps)
+        hn = L.rms_norm(blk["norm2"], h, cfg.norm_eps)
+        h = h + L.mlp_block(blk["mlp"], hn)
+        return shard(h, "batch", None, None), None
+
+    body = T._remat_wrap(body, remat)
+    x, _ = lax.scan(body, x, params["enc_blocks"])
+    return L.rms_norm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _dec_block_fwd(cfg: ArchConfig, x: jax.Array, blk: Params,
+                   enc_kv: Tuple[jax.Array, jax.Array]) -> jax.Array:
+    hn = L.rms_norm(blk["norm1"], x, cfg.norm_eps)
+    x = x + L.attention_block(blk["attn"], hn, n_heads=cfg.n_heads,
+                              n_kv=cfg.n_kv_heads, head_dim=cfg.hd,
+                              theta=cfg.rope_theta, eps=cfg.norm_eps)
+    hn = L.rms_norm(blk["norm2"], x, cfg.norm_eps)
+    x = x + L.attention_block(blk["xattn"], hn, n_heads=cfg.n_heads,
+                              n_kv=cfg.n_kv_heads, head_dim=cfg.hd,
+                              theta=0.0, eps=cfg.norm_eps,
+                              kv_override=enc_kv)
+    hn = L.rms_norm(blk["norm3"], x, cfg.norm_eps)
+    x = x + L.mlp_block(blk["mlp"], hn)
+    return shard(x, "batch", None, None)
+
+
+def _enc_kv(cfg: ArchConfig, blk: Params, enc_out: jax.Array):
+    B, F, _ = enc_out.shape
+    k = (enc_out @ blk["xattn"]["wk"]).reshape(B, F, cfg.n_kv_heads, cfg.hd)
+    v = (enc_out @ blk["xattn"]["wv"]).reshape(B, F, cfg.n_kv_heads, cfg.hd)
+    return k, v
+
+
+def hidden(cfg: ArchConfig, params: Params, batch_inputs, *,
+           remat: str = "none") -> jax.Array:
+    """batch_inputs: dict with 'frames' (B,F,D) and 'tokens' (B,S)."""
+    frames, tokens = batch_inputs["frames"], batch_inputs["tokens"]
+    enc_out = encode(cfg, params, frames, remat=remat)
+    x = L.embed_lookup(params["embed"], tokens)
+    x = shard(x, "batch", None, None)
+
+    def body(h, blk):
+        kv = _enc_kv(cfg, blk, enc_out)
+        return _dec_block_fwd(cfg, h, blk, kv), None
+
+    body = T._remat_wrap(body, remat)
+    x, _ = lax.scan(body, x, params["dec_blocks"])
+    return x
+
+
+def apply(cfg: ArchConfig, params: Params, batch_inputs, *,
+          remat: str = "none") -> jax.Array:
+    return T.logits_of(cfg, params,
+                       hidden(cfg, params, batch_inputs, remat=remat))
+
+
+def loss_fn(cfg: ArchConfig, params: Params, batch: Dict[str, jax.Array], *,
+            remat: str = "none") -> jax.Array:
+    x = hidden(cfg, params, {"frames": batch["frames"],
+                             "tokens": batch["tokens"]}, remat=remat)
+    return T.lm_loss(cfg, params, x, batch["labels"])
+
+
+# ---------------------------------------------------------------------------
+# serving: cache = decoder self-attn KV + precomputed encoder cross KV
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int, enc_len: int = 0,
+               dtype=None) -> Params:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    enc_len = enc_len or max_seq
+    Ld = cfg.dec_layers
+    return {
+        "k": jnp.zeros((Ld, batch, max_seq, cfg.n_kv_heads, cfg.hd), dtype),
+        "v": jnp.zeros((Ld, batch, max_seq, cfg.n_kv_heads, cfg.hd), dtype),
+        "xk": jnp.zeros((Ld, batch, enc_len, cfg.n_kv_heads, cfg.hd), dtype),
+        "xv": jnp.zeros((Ld, batch, enc_len, cfg.n_kv_heads, cfg.hd), dtype),
+        "enc_len": jnp.asarray(enc_len, jnp.int32),
+        "index": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(cfg: ArchConfig, params: Params, batch_inputs,
+            max_seq: Optional[int] = None) -> Tuple[jax.Array, Params]:
+    """Encode the frames, precompute cross-attention K/V, prime the decoder
+    with the BOS token(s) in batch_inputs['tokens']."""
+    frames, tokens = batch_inputs["frames"], batch_inputs["tokens"]
+    B, S = tokens.shape
+    max_seq = max_seq or S
+    enc_out = encode(cfg, params, frames)
+
+    def kvs(blk):
+        return _enc_kv(cfg, blk, enc_out)
+
+    xk, xv = jax.vmap(kvs)(params["dec_blocks"])
+    cache = init_cache(cfg, B, max_seq, enc_len=enc_out.shape[1])
+    cache["xk"], cache["xv"] = xk, xv
+    x = L.embed_lookup(params["embed"], tokens)
+
+    def body(h, xs):
+        blk, xkl, xvl = xs
+        kv = (xkl, xvl)
+        hn = L.rms_norm(blk["norm1"], h, cfg.norm_eps)
+        from ..kernels import ops
+        q, kk, vv = L._project_qkv(blk["attn"], hn, cfg.n_heads,
+                                   cfg.n_kv_heads, cfg.hd, cfg.rope_theta,
+                                   cfg.norm_eps)
+        o = ops.attention(q, kk, vv, causal=True)
+        h = h + o.reshape(B, S, cfg.n_heads * cfg.hd) @ blk["attn"]["wo"]
+        hn = L.rms_norm(blk["norm2"], h, cfg.norm_eps)
+        h = h + L.attention_block(blk["xattn"], hn, n_heads=cfg.n_heads,
+                                  n_kv=cfg.n_kv_heads, head_dim=cfg.hd,
+                                  theta=0.0, eps=cfg.norm_eps, kv_override=kv)
+        hn = L.rms_norm(blk["norm3"], h, cfg.norm_eps)
+        h = h + L.mlp_block(blk["mlp"], hn)
+        return h, (kk, vv)
+
+    x, (ks, vs) = lax.scan(body, x, (params["dec_blocks"], xk, xv))
+    pad = max_seq - S
+    if pad > 0:
+        z = jnp.zeros((cfg.dec_layers, B, pad, cfg.n_kv_heads, cfg.hd),
+                      ks.dtype)
+        ks = jnp.concatenate([ks, z], axis=2)
+        vs = jnp.concatenate([vs, z], axis=2)
+    cache["k"], cache["v"] = ks, vs
+    cache["index"] = jnp.asarray(S, jnp.int32)
+    return T.logits_of(cfg, params, x[:, -1:]), cache
+
+
+def decode_step(cfg: ArchConfig, params: Params, cache: Params,
+                tokens: jax.Array) -> Tuple[jax.Array, Params]:
+    from ..kernels import ops
+    B = tokens.shape[0]
+    index = cache["index"]
+    x = L.embed_lookup(params["embed"], tokens)
+
+    def body(h, xs):
+        blk, ck, cv, xk, xv = xs
+        hn = L.rms_norm(blk["norm1"], h, cfg.norm_eps)
+        o, ck, cv = L.attention_decode(blk["attn"], hn, ck, cv, index,
+                                       n_heads=cfg.n_heads,
+                                       n_kv=cfg.n_kv_heads, head_dim=cfg.hd,
+                                       theta=cfg.rope_theta, eps=cfg.norm_eps)
+        h = h + o
+        hn = L.rms_norm(blk["norm2"], h, cfg.norm_eps)
+        q = (hn @ blk["xattn"]["wq"]).reshape(B, 1, cfg.n_heads, cfg.hd)
+        o = ops.decode_attention(q, xk, xv, cache["enc_len"])
+        o = o.reshape(B, 1, cfg.n_heads * cfg.hd) @ blk["xattn"]["wo"]
+        h = h + o
+        hn = L.rms_norm(blk["norm3"], h, cfg.norm_eps)
+        h = h + L.mlp_block(blk["mlp"], hn)
+        return h, (ck, cv)
+
+    x, (ks, vs) = lax.scan(body, x, (params["dec_blocks"], cache["k"],
+                                     cache["v"], cache["xk"], cache["xv"]))
+    logits = T.logits_of(cfg, params, x)
+    new_cache = dict(cache)
+    new_cache.update({"k": ks, "v": vs, "index": index + 1})
+    return logits, new_cache

@@ -1,0 +1,289 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one *shared* attention block.
+
+Per arXiv:2411.15242 the shared transformer block (attention + MLP, weights
+shared across all applications) is interleaved every ``attn_every`` Mamba2
+blocks; its input is the concatenation of the current hidden state with the
+original embedding, mapped through a small per-invocation projection.  We
+scan over "super-blocks" of (attn_every Mamba2 blocks + 1 shared-attention
+application) so compile time stays depth-independent.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..configs.base import ArchConfig
+from . import layers as L
+from . import mamba2 as M
+from . import transformer as T
+from .sharding import shard
+
+Params = Dict[str, Any]
+
+
+def n_super(cfg: ArchConfig) -> int:
+    assert cfg.n_layers % cfg.attn_every == 0, (cfg.n_layers, cfg.attn_every)
+    return cfg.n_layers // cfg.attn_every
+
+
+def init(cfg: ArchConfig, key) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    ke, km, ks, kp, kh = jax.random.split(key, 5)
+    S = n_super(cfg)
+    mamba_keys = jax.random.split(km, cfg.n_layers).reshape(S, cfg.attn_every, 2)
+
+    def init_super(keys):
+        return jax.vmap(lambda k: M.init_ssm_block(cfg, k, dtype))(keys)
+
+    kp1, kp2 = jax.random.split(kp)
+    params: Params = {
+        "embed": L.init_embed(ke, cfg.vocab, cfg.d_model, dtype),
+        # (S, attn_every, ...) doubly-stacked mamba blocks
+        "mamba": jax.vmap(init_super)(mamba_keys),
+        # ONE shared attention+MLP block
+        "shared": T.init_block(cfg, ks, dtype),
+        # per-invocation adapters: concat(x, embed0) 2D -> D in, D -> D out
+        "proj_in": {"w": jax.vmap(
+            lambda k: L._dense_init(k, (2 * cfg.d_model, cfg.d_model),
+                                    2 * cfg.d_model, dtype))(
+            jax.random.split(kp1, S))},
+        "proj_out": {"w": jax.vmap(
+            lambda k: L._dense_init(k, (cfg.d_model, cfg.d_model),
+                                    cfg.d_model, dtype))(
+            jax.random.split(kp2, S))},
+        "final_norm": L.init_rmsnorm(cfg.d_model, dtype),
+        "lm_head": {"w": L._dense_init(kh, (cfg.d_model, cfg.vocab),
+                                       cfg.d_model, dtype)},
+    }
+    return params
+
+
+def _shared_attn(cfg: ArchConfig, shared: Params, x: jax.Array,
+                 x0: jax.Array, w_in: jax.Array, w_out: jax.Array
+                 ) -> jax.Array:
+    h = jnp.concatenate([x, x0], axis=-1) @ w_in
+    h = T._block_fwd(cfg, h, shared)
+    return x + h @ w_out
+
+
+def apply(cfg: ArchConfig, params: Params, tokens: jax.Array, *,
+          remat: str = "none") -> jax.Array:
+    x0 = L.embed_lookup(params["embed"], tokens)
+    x0 = shard(x0, "batch", None, None)
+    x = x0
+
+    def superblock(x, xs):
+        mamba_blks, w_in, w_out = xs
+
+        def inner(h, blk):
+            return M.ssm_block_apply(cfg, blk, h), None
+
+        x, _ = lax.scan(inner, x, mamba_blks)
+        x = _shared_attn(cfg, params["shared"], x, x0, w_in, w_out)
+        return shard(x, "batch", None, None), None
+
+    body = T._remat_wrap(superblock, remat)
+    x, _ = lax.scan(body, x, (params["mamba"], params["proj_in"]["w"],
+                              params["proj_out"]["w"]))
+    return T.logits_of(cfg, params, x)
+
+
+def hidden(cfg: ArchConfig, params: Params, tokens: jax.Array, *,
+           remat: str = "none") -> jax.Array:
+    x0 = L.embed_lookup(params["embed"], tokens)
+    x0 = shard(x0, "batch", None, None)
+    x = x0
+
+    def superblock(x, xs):
+        mamba_blks, w_in, w_out = xs
+
+        def inner(h, blk):
+            return M.ssm_block_apply(cfg, blk, h), None
+
+        x, _ = lax.scan(inner, x, mamba_blks)
+        x = _shared_attn(cfg, params["shared"], x, x0, w_in, w_out)
+        return shard(x, "batch", None, None), None
+
+    body = T._remat_wrap(superblock, remat)
+    x, _ = lax.scan(body, x, (params["mamba"], params["proj_in"]["w"],
+                              params["proj_out"]["w"]))
+    return x
+
+
+def loss_fn(cfg: ArchConfig, params: Params, batch: Dict[str, jax.Array], *,
+            remat: str = "none") -> jax.Array:
+    x = hidden(cfg, params, batch["tokens"], remat=remat)
+    return T.lm_loss(cfg, params, x, batch["labels"])
+
+
+# ---------------------------------------------------------------------------
+# serving: the SSM state is O(1); the shared-attn KV cache is the only
+# sequence-length state (sharded over 'seq' for long_500k).
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype=None) -> Params:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    S = n_super(cfg)
+    kv = (S, batch, max_seq, cfg.n_kv_heads, cfg.hd)
+    cache = M.init_ssm_cache(cfg, cfg.n_layers, batch, dtype)
+    cache["k"] = jnp.zeros(kv, dtype)
+    cache["v"] = jnp.zeros(kv, dtype)
+    cache["index"] = jnp.zeros((), jnp.int32)
+    return cache
+
+
+def prefill(cfg: ArchConfig, params: Params, tokens: jax.Array,
+            max_seq: Optional[int] = None) -> Tuple[jax.Array, Params]:
+    """Prefill by running the train-mode forward and extracting caches.
+
+    SSD final states come from the chunk scan; shared-attn K/V from the
+    attention projections.  (For simplicity the conv cache keeps the last
+    K-1 inputs of each block — recomputed here.)
+    """
+    from ..kernels import ops
+    B, S = tokens.shape
+    max_seq = max_seq or S
+    Ssup = n_super(cfg)
+    d_inner, H, P, N = M.dims(cfg)
+    x0 = L.embed_lookup(params["embed"], tokens)
+    x = x0
+    cache = init_cache(cfg, B, max_seq)
+    ssm_states = []
+    conv_caches = []
+    ks, vs = [], []
+    # unrolled prefill (used on small configs / tests; production serving
+    # uses decode_step after a scan-based warmup)
+    mamba = params["mamba"]
+    for s in range(Ssup):
+        for j in range(cfg.attn_every):
+            blk = jax.tree.map(lambda t: t[s, j], mamba)
+            x, fin, conv = _ssm_apply_with_state(cfg, blk, x)
+            ssm_states.append(fin)
+            conv_caches.append(conv)
+        w_in = params["proj_in"]["w"][s]
+        w_out = params["proj_out"]["w"][s]
+        h = jnp.concatenate([x, x0], axis=-1) @ w_in
+        hn = L.rms_norm(params["shared"]["norm1"], h, cfg.norm_eps)
+        q, kk, vv = L._project_qkv(params["shared"]["attn"], hn, cfg.n_heads,
+                                   cfg.n_kv_heads, cfg.hd, cfg.rope_theta,
+                                   cfg.norm_eps)
+        o = ops.attention(q, kk, vv, causal=True)
+        h = h + o.reshape(B, S, cfg.n_heads * cfg.hd) @ params["shared"]["attn"]["wo"]
+        hn = L.rms_norm(params["shared"]["norm2"], h, cfg.norm_eps)
+        h = h + L.mlp_block(params["shared"]["mlp"], hn)
+        x = x + h @ w_out
+        ks.append(kk)
+        vs.append(vv)
+    pad = max_seq - S
+    kst = jnp.stack(ks)
+    vst = jnp.stack(vs)
+    if pad > 0:
+        z = jnp.zeros((Ssup, B, pad, cfg.n_kv_heads, cfg.hd), kst.dtype)
+        kst = jnp.concatenate([kst, z], axis=2)
+        vst = jnp.concatenate([vst, z], axis=2)
+    cache["k"], cache["v"] = kst, vst
+    cache["state"] = jnp.stack(ssm_states)
+    cache["conv"] = jnp.stack(conv_caches)
+    cache["index"] = jnp.asarray(S, jnp.int32)
+    return T.logits_of(cfg, params, x[:, -1:]), cache
+
+
+def _ssm_apply_with_state(cfg, blk, x):
+    """ssm_block_apply that also returns final SSD state + conv cache."""
+    from ..kernels import ops
+    d_inner, H, P, N = M.dims(cfg)
+    p = blk["ssm"]
+    B, S, _ = x.shape
+    h = L.rms_norm(blk["norm1"], x, cfg.norm_eps)
+    z, xin, Bm, Cm, dtp = M._split_proj(cfg, h @ p["in_proj"])
+    xbc = jnp.concatenate([xin, Bm, Cm], axis=-1)
+    conv_cache = xbc[:, -(cfg.conv_kernel - 1):, :]
+    xbc = M._causal_conv(xbc, p["conv_w"])
+    xin, Bm, Cm = (xbc[..., :d_inner], xbc[..., d_inner:d_inner + N],
+                   xbc[..., d_inner + N:])
+    dt = jax.nn.softplus(dtp.astype(jnp.float32) + p["dt_bias"])
+    xh = xin.reshape(B, S, H, P)
+    # replicate ssd_forward but keep the final state
+    Q = min(cfg.chunk, S)
+    S0 = S
+    S0_, (xh, dt, Bm, Cm) = M._pad_to_chunks(Q, xh, dt, Bm, Cm)
+    S = xh.shape[1]
+    nc = S // Q
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    a = dt * A
+    xd = xh * dt[..., None].astype(xh.dtype)
+    ch = lambda t: t.reshape(B, nc, Q, *t.shape[2:])
+    a_c, xd_c, B_c, C_c = ch(a), ch(xd), ch(Bm), ch(Cm)
+    a_cs = jnp.cumsum(a_c, axis=2)
+    Lmat = jnp.exp(M._segsum(jnp.moveaxis(a_c, -1, 2)))
+    y_diag = jnp.einsum("bcsn,bctn,bchst,bcthp->bcshp",
+                        C_c.astype(jnp.float32), B_c.astype(jnp.float32),
+                        Lmat, xd_c.astype(jnp.float32))
+    decay_states = jnp.exp(a_cs[:, :, -1:, :] - a_cs)
+    states = jnp.einsum("bctn,bcth,bcthp->bchpn", B_c.astype(jnp.float32),
+                        decay_states, xd_c.astype(jnp.float32))
+    chunk_decay = jnp.exp(a_cs[:, :, -1, :])
+    prefix, fin = ops.ssd_state_scan(states, chunk_decay)
+    y_off = jnp.einsum("bcsn,bchpn,bcsh->bcshp", C_c.astype(jnp.float32),
+                       prefix, jnp.exp(a_cs))
+    y = (y_diag + y_off).reshape(B, S, H, P).astype(xh.dtype)
+    y = y + xh * p["d_skip"].astype(xh.dtype)[None, None, :, None]
+    y = y[:, :S0].reshape(B, S0, d_inner)
+    y = M._gated_headnorm(y, z, p["norm"], H, cfg.norm_eps)
+    return x + y @ p["out_proj"], fin, conv_cache
+
+
+def decode_step(cfg: ArchConfig, params: Params, cache: Params,
+                tokens: jax.Array) -> Tuple[jax.Array, Params]:
+    B = tokens.shape[0]
+    index = cache["index"]
+    Ssup = n_super(cfg)
+    x0 = L.embed_lookup(params["embed"], tokens)
+    x = x0
+
+    mamba = params["mamba"]   # (S, k, ...)
+    flat = jax.tree.map(
+        lambda t: t.reshape(cfg.n_layers, *t.shape[2:]), mamba)
+
+    def mamba_group(x, s):
+        def inner(carry, xs):
+            h = carry
+            blk, st, cv, _i = xs
+            h, st, cv = M.ssm_decode_step(cfg, blk, h, st, cv)
+            return h, (st, cv)
+        idx = s * cfg.attn_every + jnp.arange(cfg.attn_every)
+        grp = jax.tree.map(lambda t: t[idx], flat)
+        sts = cache["state"][idx]
+        cvs = cache["conv"][idx]
+        x, (new_st, new_cv) = lax.scan(inner, x, (grp, sts, cvs, idx))
+        return x, idx, new_st, new_cv
+
+    new_states = cache["state"]
+    new_convs = cache["conv"]
+    new_k, new_v = cache["k"], cache["v"]
+    for s in range(Ssup):
+        x, idx, st, cv = mamba_group(x, s)
+        new_states = new_states.at[idx].set(st)
+        new_convs = new_convs.at[idx].set(cv)
+        # shared attention with KV cache
+        w_in = params["proj_in"]["w"][s]
+        w_out = params["proj_out"]["w"][s]
+        h = jnp.concatenate([x, x0], axis=-1) @ w_in
+        hn = L.rms_norm(params["shared"]["norm1"], h, cfg.norm_eps)
+        o, ck, cv2 = L.attention_decode(
+            params["shared"]["attn"], hn, new_k[s], new_v[s], index,
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.hd,
+            theta=cfg.rope_theta, eps=cfg.norm_eps)
+        new_k = new_k.at[s].set(ck)
+        new_v = new_v.at[s].set(cv2)
+        h = h + o
+        hn = L.rms_norm(params["shared"]["norm2"], h, cfg.norm_eps)
+        h = h + L.mlp_block(params["shared"]["mlp"], hn)
+        x = x + h @ w_out
+    logits = T.logits_of(cfg, params, x)
+    return logits, {"state": new_states, "conv": new_convs, "k": new_k,
+                    "v": new_v, "index": index + 1}

@@ -1,0 +1,218 @@
+"""Mamba2 (SSD) blocks — the zamba2 backbone.
+
+Implementation notes (TPU adaptation, DESIGN.md §6):
+
+* The fused ``in_proj`` of the reference CUDA code is split into separate
+  z/x/B/C/dt projections so tensor-parallel sharding stays clean (z, x, dt
+  head-sharded over 'model'; the small B/C (N=64) replicated).
+* The SSD computation uses the chunked algorithm: quadratic intra-chunk
+  einsums (MXU-friendly) + an inter-chunk state recurrence that routes
+  through ``kernels.ops.ssd_state_scan`` (Pallas kernel on TPU).
+* The gated output norm is per-head RMS (group norm with one group per
+  value head) so the reduction never crosses a model-parallel shard.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..configs.base import ArchConfig
+from . import layers as L
+from .sharding import shard
+
+Params = Dict[str, Any]
+
+
+def dims(cfg: ArchConfig) -> Tuple[int, int, int, int]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    H = cfg.ssm_heads
+    P = d_inner // H
+    N = cfg.ssm_state
+    return d_inner, H, P, N
+
+
+def init_ssm_block(cfg: ArchConfig, key, dtype) -> Params:
+    d_inner, H, P, N = dims(cfg)
+    D = cfg.d_model
+    ks = jax.random.split(key, 7)
+    return {
+        "norm1": L.init_rmsnorm(D, dtype),
+        "ssm": {
+            "in_proj": L._dense_init(ks[0], (D, 2 * d_inner + 2 * N + H),
+                                     D, dtype),
+            "conv_w": (jax.random.normal(ks[1], (cfg.conv_kernel,
+                                                 d_inner + 2 * N))
+                       * 0.1).astype(dtype),
+            "dt_bias": jnp.zeros((H,), jnp.float32),
+            "a_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+            "d_skip": jnp.ones((H,), jnp.float32),
+            "norm": jnp.ones((d_inner,), dtype),
+            "out_proj": L._dense_init(ks[2], (d_inner, D), d_inner, dtype),
+        },
+    }
+
+
+def _split_proj(cfg: ArchConfig, proj: jax.Array):
+    d_inner, H, P, N = dims(cfg)
+    z = proj[..., :d_inner]
+    xin = proj[..., d_inner:2 * d_inner]
+    Bm = proj[..., 2 * d_inner:2 * d_inner + N]
+    Cm = proj[..., 2 * d_inner + N:2 * d_inner + 2 * N]
+    dt = proj[..., 2 * d_inner + 2 * N:]
+    return z, xin, Bm, Cm, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d. xbc: (B, S, C), w: (K, C)."""
+    K = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc)
+    for i in range(K):  # K is 4: unrolled adds beat a conv op here
+        out = out + pad[:, i:i + xbc.shape[1], :] * w[i]
+    return jax.nn.silu(out)
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """a: (..., Q) log-decay increments -> (..., Q, Q) lower-tri cumulative
+    sums: out[s, t] = sum_{t < tau <= s} a[tau], -inf above diagonal."""
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    s_idx = jnp.arange(Q)[:, None]
+    t_idx = jnp.arange(Q)[None, :]
+    return jnp.where(t_idx <= s_idx, diff, -jnp.inf)
+
+
+def _pad_to_chunks(Q: int, *arrays):
+    """Zero-pad the seq dim (axis 1) to a multiple of Q.  Padded steps have
+    dt=0 => decay=1, contribution=0: states and outputs are unaffected."""
+    S = arrays[0].shape[1]
+    pad = (-S) % Q
+    if pad == 0:
+        return S, arrays
+    padded = tuple(
+        jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        for a in arrays)
+    return S, padded
+
+
+def ssd_forward(cfg: ArchConfig, x: jax.Array, dt: jax.Array, a_log: jax.Array,
+                Bm: jax.Array, Cm: jax.Array, d_skip: jax.Array
+                ) -> jax.Array:
+    """Chunked SSD. x: (B,S,H,P), dt: (B,S,H) (post-softplus),
+    Bm/Cm: (B,S,N). Returns y: (B,S,H,P)."""
+    from ..kernels import ops
+    Q = min(cfg.chunk, x.shape[1])
+    S0, (x, dt, Bm, Cm) = _pad_to_chunks(Q, x, dt, Bm, Cm)
+    Bb, S, H, P = x.shape
+    N = Bm.shape[-1]
+    nc = S // Q
+
+    A = -jnp.exp(a_log.astype(jnp.float32))                 # (H,)
+    a = dt * A                                               # (B,S,H) log decay
+    xd = x * dt[..., None].astype(x.dtype)                  # dt-discretized
+
+    # chunk: (B, nc, Q, ...)
+    ch = lambda t: t.reshape(Bb, nc, Q, *t.shape[2:])
+    a_c, xd_c = ch(a), ch(xd)
+    B_c, C_c = ch(Bm), ch(Cm)
+
+    a_cs = jnp.cumsum(a_c, axis=2)                           # (B,nc,Q,H)
+    # intra-chunk (quadratic, MXU-friendly)
+    Lmat = jnp.exp(_segsum(jnp.moveaxis(a_c, -1, 2)))        # (B,nc,H,Q,Q)
+    y_diag = jnp.einsum("bcsn,bctn,bchst,bcthp->bcshp",
+                        C_c.astype(jnp.float32), B_c.astype(jnp.float32),
+                        Lmat, xd_c.astype(jnp.float32))
+    # chunk states: decay each position to the chunk end
+    decay_states = jnp.exp(a_cs[:, :, -1:, :] - a_cs)        # (B,nc,Q,H)
+    states = jnp.einsum("bctn,bcth,bcthp->bchpn",
+                        B_c.astype(jnp.float32), decay_states,
+                        xd_c.astype(jnp.float32))            # (B,nc,H,P,N)
+    chunk_decay = jnp.exp(a_cs[:, :, -1, :])                 # (B,nc,H)
+    # inter-chunk recurrence (Pallas kernel on TPU)
+    prefix, _ = ops.ssd_state_scan(states, chunk_decay)
+    y_off = jnp.einsum("bcsn,bchpn,bcsh->bcshp",
+                       C_c.astype(jnp.float32), prefix, jnp.exp(a_cs))
+    y = (y_diag + y_off).reshape(Bb, S, H, P).astype(x.dtype)
+    y = y + x * d_skip.astype(x.dtype)[None, None, :, None]
+    return y[:, :S0]
+
+
+def _gated_headnorm(y: jax.Array, z: jax.Array, w: jax.Array, H: int,
+                    eps: float) -> jax.Array:
+    """Per-head RMS over P of (y * silu(z)); w: (d_inner,)."""
+    B, S, d_inner = y.shape
+    g = y * jax.nn.silu(z)
+    g = g.reshape(B, S, H, d_inner // H)
+    gf = g.astype(jnp.float32)
+    var = jnp.mean(gf * gf, axis=-1, keepdims=True)
+    g = (gf * lax.rsqrt(var + eps)).astype(y.dtype).reshape(B, S, d_inner)
+    return g * w
+
+
+def ssm_block_apply(cfg: ArchConfig, blk: Params, x: jax.Array) -> jax.Array:
+    """One Mamba2 block (pre-norm residual). x: (B,S,D)."""
+    d_inner, H, P, N = dims(cfg)
+    p = blk["ssm"]
+    h = L.rms_norm(blk["norm1"], x, cfg.norm_eps)
+    z, xin, Bm, Cm, dtp = _split_proj(cfg, h @ p["in_proj"])
+    xbc = jnp.concatenate([xin, Bm, Cm], axis=-1)
+    xbc = _causal_conv(xbc, p["conv_w"])
+    xin, Bm, Cm = (xbc[..., :d_inner], xbc[..., d_inner:d_inner + N],
+                   xbc[..., d_inner + N:])
+    dt = jax.nn.softplus(dtp.astype(jnp.float32) + p["dt_bias"])
+    Bsz, S = x.shape[:2]
+    xh = xin.reshape(Bsz, S, H, P)
+    xh = shard(xh, "batch", None, "tp", None)
+    y = ssd_forward(cfg, xh, dt, p["a_log"], Bm, Cm, p["d_skip"])
+    y = y.reshape(Bsz, S, d_inner)
+    y = _gated_headnorm(y, z, p["norm"], H, cfg.norm_eps)
+    return x + y @ p["out_proj"]
+
+
+# ---------------------------------------------------------------------------
+# decode (recurrent O(1) step)
+# ---------------------------------------------------------------------------
+
+def init_ssm_cache(cfg: ArchConfig, n_blocks: int, batch: int, dtype=None
+                   ) -> Params:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    d_inner, H, P, N = dims(cfg)
+    return {
+        "state": jnp.zeros((n_blocks, batch, H, P, N), jnp.float32),
+        "conv": jnp.zeros((n_blocks, batch, cfg.conv_kernel - 1,
+                           d_inner + 2 * N), dtype),
+    }
+
+
+def ssm_decode_step(cfg: ArchConfig, blk: Params, x: jax.Array,
+                    state: jax.Array, conv_cache: jax.Array
+                    ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x: (B,1,D); state: (B,H,P,N); conv_cache: (B,K-1,conv_dim)."""
+    d_inner, H, P, N = dims(cfg)
+    p = blk["ssm"]
+    h = L.rms_norm(blk["norm1"], x, cfg.norm_eps)
+    z, xin, Bm, Cm, dtp = _split_proj(cfg, h @ p["in_proj"])
+    xbc = jnp.concatenate([xin, Bm, Cm], axis=-1)             # (B,1,conv_dim)
+    window = jnp.concatenate([conv_cache, xbc], axis=1)       # (B,K,conv_dim)
+    new_conv = window[:, 1:]
+    conv_out = jax.nn.silu(jnp.einsum("bkc,kc->bc", window, p["conv_w"]))
+    xin = conv_out[:, None, :d_inner]
+    Bm = conv_out[:, None, d_inner:d_inner + N]
+    Cm = conv_out[:, None, d_inner + N:]
+    dt = jax.nn.softplus(dtp.astype(jnp.float32) + p["dt_bias"])[:, 0]  # (B,H)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    a = jnp.exp(dt * A)                                       # (B,H)
+    Bsz = x.shape[0]
+    xh = xin[:, 0].reshape(Bsz, H, P).astype(jnp.float32)
+    upd = (dt[..., None] * xh)[..., None] * Bm[:, 0, None, None, :].astype(jnp.float32)
+    state = a[..., None, None] * state + upd                  # (B,H,P,N)
+    y = jnp.einsum("bhpn,bn->bhp", state, Cm[:, 0].astype(jnp.float32))
+    y = y + xh * p["d_skip"][None, :, None]
+    y = y.reshape(Bsz, 1, d_inner).astype(x.dtype)
+    y = _gated_headnorm(y, z, p["norm"], H, cfg.norm_eps)
+    return x + y @ p["out_proj"], state, new_conv

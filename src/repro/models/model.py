@@ -1,0 +1,206 @@
+"""Unified model interface: config -> {init, loss, prefill, decode, specs}.
+
+Every architecture family plugs into the same five entry points so the
+launcher, dry-run, trainer and server never special-case an arch beyond
+selecting its bundle.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeConfig
+
+Params = Dict[str, Any]
+
+
+@dataclass(frozen=True)
+class ModelBundle:
+    family: str
+    init: Callable[[ArchConfig, jax.Array], Params]
+    loss_fn: Callable[..., jax.Array]
+    apply: Callable[..., jax.Array]
+    prefill: Callable[..., Tuple[jax.Array, Params]]
+    decode_step: Callable[..., Tuple[jax.Array, Params]]
+    init_cache: Callable[..., Params]
+
+
+def bundle_for(cfg: ArchConfig) -> ModelBundle:
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        from . import transformer as m
+        return ModelBundle("dense", m.init, m.loss_fn, m.apply, m.prefill,
+                           m.decode_step, m.init_cache)
+    if fam == "moe":
+        from . import moe as m
+        return ModelBundle("moe", m.init, m.loss_fn, m.apply, m.prefill,
+                           m.decode_step, m.init_cache)
+    if fam == "hybrid":
+        from . import hybrid as m
+        return ModelBundle("hybrid", m.init, m.loss_fn, m.apply, m.prefill,
+                           m.decode_step, m.init_cache)
+    if fam == "ssm":
+        from . import xlstm as m
+        return ModelBundle("ssm", m.init, m.loss_fn, m.apply, m.prefill,
+                           m.decode_step, m.init_cache)
+    if fam == "encdec":
+        from . import encdec as m
+        return ModelBundle("encdec", m.init, m.loss_fn, m.apply, m.prefill,
+                           m.decode_step, m.init_cache)
+    raise ValueError(f"unknown family {fam}")
+
+
+# ---------------------------------------------------------------------------
+# exact parameter counts via eval_shape (no allocation)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=64)
+def _param_count_cached(cfg: ArchConfig) -> int:
+    b = bundle_for(cfg)
+    shapes = jax.eval_shape(lambda k: b.init(cfg, k),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    return int(sum(x.size for x in jax.tree.leaves(shapes)))
+
+
+def param_count(cfg: ArchConfig, active_only: bool = False) -> int:
+    n = _param_count_cached(cfg)
+    if active_only and cfg.is_moe:
+        inactive = (cfg.n_experts - cfg.top_k) * 3 * cfg.d_model * cfg.d_ff \
+            * cfg.n_layers
+        n -= inactive
+    return n
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins, the dry-run pattern)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStructs for every model input of this (arch, shape) cell.
+
+    * train:    token/label batches (plus stub frame embeddings for encdec)
+    * prefill:  the prompt batch
+    * decode:   one new token + the full KV/SSM cache at seq_len
+    """
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    if shape.kind == "train":
+        specs = {"tokens": _sds((B, S), jnp.int32),
+                 "labels": _sds((B, S), jnp.int32)}
+        if cfg.family == "encdec":
+            # frontend stub: precomputed frame embeddings
+            specs["frames"] = _sds((B, S, cfg.d_model), dt)
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": _sds((B, S), jnp.int32)}
+        if cfg.family == "encdec":
+            specs = {"frames": _sds((B, S, cfg.d_model), dt),
+                     "tokens": _sds((B, 1), jnp.int32)}
+        return specs
+    if shape.kind == "decode":
+        b = bundle_for(cfg)
+        if cfg.family == "encdec":
+            cache = jax.eval_shape(lambda: b.init_cache(cfg, B, S, enc_len=S))
+        else:
+            cache = jax.eval_shape(lambda: b.init_cache(cfg, B, S))
+        return {"tokens": _sds((B, 1), jnp.int32), "cache": cache}
+    raise ValueError(shape.kind)
+
+
+def synth_batch(cfg: ArchConfig, shape: ShapeConfig, key) -> Dict[str, Any]:
+    """Real (small!) arrays matching input_specs — for smoke tests."""
+    specs = input_specs(cfg, shape)
+    out = {}
+    for name, spec in specs.items():
+        if name == "cache":
+            b = bundle_for(cfg)
+            if cfg.family == "encdec":
+                out[name] = b.init_cache(cfg, shape.global_batch,
+                                         shape.seq_len, enc_len=shape.seq_len)
+            else:
+                out[name] = b.init_cache(cfg, shape.global_batch,
+                                         shape.seq_len)
+            continue
+        if jnp.issubdtype(spec.dtype, jnp.integer):
+            key, sub = jax.random.split(key)
+            out[name] = jax.random.randint(sub, spec.shape, 0, cfg.vocab,
+                                           dtype=spec.dtype)
+        else:
+            key, sub = jax.random.split(key)
+            out[name] = jax.random.normal(sub, spec.shape, spec.dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# analytic model FLOPs (for the roofline utilization ratio)
+# ---------------------------------------------------------------------------
+
+def model_flops(cfg: ArchConfig, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS = 6·N·D (train) / 2·N·D (inference fwd), N = active
+    params, D = tokens processed; plus the quadratic attention term where
+    the family has one."""
+    N = param_count(cfg, active_only=True)
+    T = shape.tokens
+    hd, H, Lc = cfg.hd, cfg.n_heads, cfg.n_layers
+    if shape.kind == "train":
+        flops = 6.0 * N * T
+        attn = 0.0
+        if cfg.family in ("dense", "vlm", "moe", "encdec"):
+            # causal QK^T + PV, fwd+bwd (12 = 2 matmuls * 2 flops * 3x bwd)
+            attn = 12.0 * Lc * shape.global_batch * H * hd \
+                * shape.seq_len ** 2 / 2
+        elif cfg.family == "hybrid":
+            n_attn = cfg.n_layers // cfg.attn_every
+            attn = 12.0 * n_attn * shape.global_batch * H * hd \
+                * shape.seq_len ** 2 / 2
+        return flops + attn
+    if shape.kind == "prefill":
+        flops = 2.0 * N * T
+        if cfg.family in ("dense", "vlm", "moe", "encdec"):
+            flops += 4.0 * Lc * shape.global_batch * H * hd \
+                * shape.seq_len ** 2 / 2
+        elif cfg.family == "hybrid":
+            n_attn = cfg.n_layers // cfg.attn_every
+            flops += 4.0 * n_attn * shape.global_batch * H * hd \
+                * shape.seq_len ** 2 / 2
+        return flops
+    # decode: one token per sequence + attention against the cache
+    flops = 2.0 * N * shape.global_batch
+    if cfg.family in ("dense", "vlm", "moe", "encdec"):
+        flops += 4.0 * Lc * shape.global_batch * H * hd * shape.seq_len
+    elif cfg.family == "hybrid":
+        n_attn = cfg.n_layers // cfg.attn_every
+        flops += 4.0 * n_attn * shape.global_batch * H * hd * shape.seq_len
+    return flops
+
+
+def memory_estimate(cfg: ArchConfig, shape: ShapeConfig, chips: int,
+                    train: Optional[bool] = None) -> float:
+    """Bytes/chip estimate for matchmaker admission (coarse, fp32 optimizer)."""
+    N = param_count(cfg)
+    train = shape.kind == "train" if train is None else train
+    param_bytes = 2 * N
+    opt_bytes = 8 * N if train else 0
+    act_bytes = 0.0
+    if train:
+        # full-remat floor: one (B,S,D) residual per layer in bf16
+        act_bytes = 2.0 * shape.global_batch * shape.seq_len * cfg.d_model \
+            * cfg.n_layers
+    cache_bytes = 0.0
+    if shape.kind == "decode":
+        kv = 2 * cfg.n_kv_heads * cfg.hd * shape.seq_len * shape.global_batch
+        n_attn = cfg.n_layers if cfg.family != "hybrid" \
+            else cfg.n_layers // cfg.attn_every
+        if cfg.family == "ssm":
+            kv, n_attn = 0, 0
+        cache_bytes = 2.0 * kv * n_attn
+    return (param_bytes + opt_bytes + act_bytes + cache_bytes) / max(chips, 1)

@@ -1,0 +1,529 @@
+"""xLSTM (sLSTM + mLSTM blocks) — xlstm-350m, arXiv:2405.04517.
+
+* mLSTM: matrix-memory cell. Training/prefill uses the stabilized
+  *parallel* (attention-like) form; decode uses the O(1) recurrent form —
+  this is what makes the 500k-token decode cell run with constant state.
+* sLSTM: scalar-memory cell with block-diagonal recurrent weights — it is
+  inherently sequential, so training scans over time (lax.scan).
+* Block pattern: one sLSTM per ``slstm_every`` blocks (xLSTM[7:1]).
+* d_ff = 0 per the assignment: there is no separate FFN; the up/down
+  projections live inside each block.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..configs.base import ArchConfig
+from . import layers as L
+from . import transformer as T
+from .sharding import shard
+
+Params = Dict[str, Any]
+
+
+def dims(cfg: ArchConfig) -> Tuple[int, int, int]:
+    d_inner = 2 * cfg.d_model
+    H = cfg.n_heads
+    return d_inner, H, d_inner // H
+
+
+def n_groups(cfg: ArchConfig) -> int:
+    assert cfg.n_layers % cfg.slstm_every == 0
+    return cfg.n_layers // cfg.slstm_every
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_mlstm_block(cfg: ArchConfig, key, dtype) -> Params:
+    D = cfg.d_model
+    d_inner, H, hd = dims(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "norm1": L.init_rmsnorm(D, dtype),
+        "mlstm": {
+            "w_up": L._dense_init(ks[0], (D, 2 * d_inner), D, dtype),
+            "conv_w": (jax.random.normal(ks[1], (cfg.conv_kernel, d_inner))
+                       * 0.1).astype(dtype),
+            "w_qkv": L._dense_init(ks[2], (d_inner, 3 * d_inner), d_inner,
+                                   dtype),
+            "w_if": L._dense_init(ks[3], (d_inner, 2 * H), d_inner,
+                                  jnp.float32),
+            "b_gates": jnp.concatenate([jnp.zeros((H,)),      # input gates
+                                        jnp.linspace(3.0, 6.0, H)]),  # forget
+            "gn": jnp.ones((d_inner,), dtype),
+            "w_down": L._dense_init(ks[4], (d_inner, D), d_inner, dtype),
+        },
+    }
+
+
+def init_slstm_block(cfg: ArchConfig, key, dtype) -> Params:
+    D = cfg.d_model
+    H = cfg.n_heads
+    hd = D // H
+    ks = jax.random.split(key, 4)
+    return {
+        "norm1": L.init_rmsnorm(D, dtype),
+        "slstm": {
+            "conv_w": (jax.random.normal(ks[0], (cfg.conv_kernel, D))
+                       * 0.1).astype(dtype),
+            # z, i, f, o preactivations from the input
+            "w_gates": L._dense_init(ks[1], (D, 4 * D), D, jnp.float32),
+            # block-diagonal recurrent weights per head, per gate
+            "r_gates": (jax.random.normal(ks[2], (4, H, hd, hd))
+                        / math.sqrt(hd)).astype(jnp.float32),
+            "b_gates": jnp.concatenate([jnp.zeros((2 * D,)),
+                                        jnp.full((D,), 3.0),   # forget bias
+                                        jnp.zeros((D,))]),
+            "gn": jnp.ones((D,), dtype),
+            "w_down": L._dense_init(ks[3], (D, D), D, dtype),
+        },
+    }
+
+
+def init(cfg: ArchConfig, key) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    G = n_groups(cfg)
+    m_per = cfg.slstm_every - 1
+    ke, km, ksl, kh = jax.random.split(key, 4)
+    mkeys = jax.random.split(km, G * m_per).reshape(G, m_per, 2)
+    skeys = jax.random.split(ksl, G)
+    return {
+        "embed": L.init_embed(ke, cfg.vocab, cfg.d_model, dtype),
+        "mlstm": jax.vmap(lambda kk: jax.vmap(
+            lambda k: init_mlstm_block(cfg, k, dtype))(kk))(mkeys),
+        "slstm": jax.vmap(lambda k: init_slstm_block(cfg, k, dtype))(skeys),
+        "final_norm": L.init_rmsnorm(cfg.d_model, dtype),
+        "lm_head": {"w": L._dense_init(kh, (cfg.d_model, cfg.vocab),
+                                       cfg.d_model, dtype)},
+    }
+
+
+# ---------------------------------------------------------------------------
+# mLSTM forward (parallel, stabilized) and recurrent step
+# ---------------------------------------------------------------------------
+
+def _mlstm_qkvif(cfg, p, x):
+    d_inner, H, hd = dims(cfg)
+    up = x @ p["w_up"]
+    xm, z = up[..., :d_inner], up[..., d_inner:]
+    from .mamba2 import _causal_conv
+    c = _causal_conv(xm, p["conv_w"])
+    qkv = c @ p["w_qkv"]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    v = xm * v                      # value path gated by the pre-conv branch
+    # gate matmul in the activation dtype with fp32 accumulation: the TP
+    # all-gather of xm moves bf16, not fp32 (and dedupes with qkv's)
+    gates = jax.lax.dot_general(
+        xm, p["w_if"].astype(xm.dtype), (((2,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32) + p["b_gates"]
+    i_pre, f_pre = gates[..., :H], gates[..., H:]
+    B, S = x.shape[:2]
+    rs = lambda t: t.reshape(B, S, H, hd)
+    return rs(q), rs(k), rs(v), i_pre, f_pre, z
+
+
+def mlstm_parallel(cfg: ArchConfig, p: Params, x: jax.Array) -> jax.Array:
+    """Stabilized parallel mLSTM. x: (B,S,D) -> (B,S,D)."""
+    d_inner, H, hd = dims(cfg)
+    B, S, _ = x.shape
+    q, k, v, i_pre, f_pre, z = _mlstm_qkvif(cfg, p, x)
+    logf = jax.nn.log_sigmoid(f_pre)                      # (B,S,H)
+    F = jnp.cumsum(logf, axis=1)
+    # logD[b,h,s,t] = F_s - F_t + i_t   (t <= s)
+    logD = (F.transpose(0, 2, 1)[:, :, :, None]
+            - F.transpose(0, 2, 1)[:, :, None, :]
+            + i_pre.transpose(0, 2, 1)[:, :, None, :])
+    s_idx = jnp.arange(S)[:, None]
+    t_idx = jnp.arange(S)[None, :]
+    logD = jnp.where(t_idx <= s_idx, logD, -jnp.inf)
+    m = jnp.max(logD, axis=-1)                            # (B,H,S)
+    Dmat = jnp.exp(logD - m[..., None])
+    scores = jnp.einsum("bshd,bthd->bhst", q, k).astype(jnp.float32)
+    scores = scores * (hd ** -0.5) * Dmat
+    norm = jnp.maximum(jnp.abs(scores.sum(-1)), jnp.exp(-m))  # (B,H,S)
+    y = jnp.einsum("bhst,bthd->bshd", (scores / norm[..., None]).astype(v.dtype), v)
+    y = y.reshape(B, S, d_inner)
+    yf = y.astype(jnp.float32).reshape(B, S, H, hd)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    y = (yf * lax.rsqrt(var + cfg.norm_eps)).reshape(B, S, d_inner)
+    y = (y * p["gn"].astype(jnp.float32)).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return y @ p["w_down"]
+
+
+def mlstm_chunkwise(cfg: ArchConfig, p: Params, x: jax.Array,
+                    return_state: bool = False):
+    """Chunkwise-parallel stabilized mLSTM (xLSTM paper App. A formulation).
+
+    Identical math to :func:`mlstm_parallel` but quadratic only within
+    chunks of length Q: working set drops from O(S^2) to O(S*Q) — this is
+    the memory-roofline fix for training (EXPERIMENTS.md §Perf).
+
+    ``return_state``: also return the decode cell {C, n, m, conv} after the
+    last position (prefill path).
+    """
+    d_inner, H, hd = dims(cfg)
+    B, S, _ = x.shape
+    Q = min(cfg.chunk, S)
+    if S % Q != 0:
+        assert not return_state, "prefill length must be chunk-aligned"
+        return mlstm_parallel(cfg, p, x)
+    nc = S // Q
+    q, k, v, i_pre, f_pre, z = _mlstm_qkvif(cfg, p, x)
+    scale = hd ** -0.5
+    kf = k.astype(jnp.float32) * scale
+    qf = q.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(f_pre)                      # (B,S,H)
+
+    ch = lambda t: t.reshape(B, nc, Q, *t.shape[2:])
+    qc, kc, vc = ch(qf), ch(kf), ch(vf)
+    ic, fc = ch(i_pre), ch(logf)
+    b = jnp.cumsum(fc, axis=2)                            # (B,nc,Q,H) incl.
+    b_tot = b[:, :, -1, :]                                # (B,nc,H)
+
+    # intra-chunk log weights lw[i,j] = b_i - b_j + i_j (j <= i)
+    lw = (b.transpose(0, 1, 3, 2)[..., :, None]
+          - b.transpose(0, 1, 3, 2)[..., None, :]
+          + ic.transpose(0, 1, 3, 2)[..., None, :])       # (B,nc,H,Q,Q)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    lw = jnp.where(tri, lw, -jnp.inf)
+    m_intra = jnp.max(lw, axis=-1)                        # (B,nc,H,Q)
+
+    def chunk_step(carry, xs):
+        C_prev, n_prev, m_prev = carry                    # (B,H,hd,hd) ...
+        # qx:(B,Q,H,hd) kx,vx same; bx:(B,Q,H); lwx:(B,H,Q,Q); m_in:(B,H,Q)
+        qx, kx, vx, bx, btot, lwx, m_in, ix = xs
+        w_inter = bx.transpose(0, 2, 1) + m_prev[..., None]   # (B,H,Q)
+        m_i = jnp.maximum(m_in, w_inter)
+        Dintra = jnp.exp(lwx - m_i[..., None])            # (B,H,Q,Q)
+        Dinter = jnp.exp(w_inter - m_i)                   # (B,H,Q)
+        scores = jnp.einsum("bqhd,bthd->bhqt", qx, kx) * Dintra
+        num = jnp.einsum("bhqt,bthd->bqhd", scores, vx) \
+            + jnp.einsum("bqhk,bhvk,bhq->bqhv", qx, C_prev, Dinter)
+        den_intra = jnp.sum(scores, axis=-1)              # (B,H,Q)
+        den_inter = jnp.einsum("bqhd,bhd,bhq->bhq", qx, n_prev, Dinter)
+        den = jnp.maximum(jnp.abs(den_intra + den_inter),
+                          jnp.exp(-m_i))                  # (B,H,Q)
+        y = num / den.transpose(0, 2, 1)[..., None]       # (B,Q,H,hd)
+        # carry update (stabilized)
+        # dj[b,q,h] = b_tot - b_q + i_q : decay of position q to chunk end
+        dj = btot[:, None, :] - bx + ix                   # (B,Q,H)
+        m_next = jnp.maximum(btot + m_prev, jnp.max(dj, axis=1))   # (B,H)
+        fs = jnp.exp(btot + m_prev - m_next)              # (B,H)
+        wj = jnp.exp(dj - m_next[:, None, :])             # (B,Q,H)
+        C_new = fs[..., None, None] * C_prev \
+            + jnp.einsum("bqhv,bqhk,bqh->bhvk", vx, kx, wj)
+        n_new = fs[..., None] * n_prev \
+            + jnp.einsum("bqhk,bqh->bhk", kx, wj)
+        return (C_new, n_new, m_next), y
+
+    carry0 = (jnp.zeros((B, H, hd, hd), jnp.float32),
+              jnp.zeros((B, H, hd), jnp.float32),
+              jnp.full((B, H), -1e30, jnp.float32))
+    xs = (jnp.moveaxis(qc, 1, 0), jnp.moveaxis(kc, 1, 0),
+          jnp.moveaxis(vc, 1, 0), jnp.moveaxis(b, 1, 0),
+          jnp.moveaxis(b_tot, 1, 0), jnp.moveaxis(lw, 1, 0),
+          jnp.moveaxis(m_intra, 1, 0), jnp.moveaxis(ic, 1, 0))
+    (C_f, n_f, m_f), ys = lax.scan(chunk_step, carry0, xs)  # (nc,B,Q,H,hd)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, d_inner)
+    yf = y.reshape(B, S, H, hd)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    y = (yf * lax.rsqrt(var + cfg.norm_eps)).reshape(B, S, d_inner)
+    y = (y * p["gn"].astype(jnp.float32)).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = y @ p["w_down"]
+    if not return_state:
+        return out
+    # conv cache holds the last K-1 raw (pre-conv) xm inputs
+    up = x @ p["w_up"]
+    xm = up[..., :d_inner]
+    cell = {"C": C_f, "n": n_f, "m": m_f,
+            "conv": xm[:, S - (cfg.conv_kernel - 1):, :]}
+    return out, cell
+
+
+def mlstm_step(cfg: ArchConfig, p: Params, x: jax.Array, cell: Dict
+               ) -> Tuple[jax.Array, Dict]:
+    """Recurrent O(1) step. x: (B,1,D); cell: {C (B,H,hd,hd), n (B,H,hd),
+    m (B,H), conv (B,K-1,d_inner)}."""
+    d_inner, H, hd = dims(cfg)
+    B = x.shape[0]
+    up = x @ p["w_up"]
+    xm, z = up[..., :d_inner], up[..., d_inner:]
+    window = jnp.concatenate([cell["conv"], xm], axis=1)
+    new_conv = window[:, 1:]
+    c = jax.nn.silu(jnp.einsum("bkc,kc->bc", window, p["conv_w"]))[:, None]
+    qkv = c @ p["w_qkv"]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    v = xm * v
+    gates = xm.astype(jnp.float32) @ p["w_if"] + p["b_gates"]
+    i_pre = gates[:, 0, :H]                               # (B,H)
+    f_pre = gates[:, 0, H:]
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + cell["m"], i_pre)
+    fs = jnp.exp(logf + cell["m"] - m_new)[..., None]
+    is_ = jnp.exp(i_pre - m_new)[..., None]
+    qh = q.reshape(B, H, hd).astype(jnp.float32)
+    kh_ = k.reshape(B, H, hd).astype(jnp.float32) * (hd ** -0.5)
+    vh = v.reshape(B, H, hd).astype(jnp.float32)
+    C = fs[..., None] * cell["C"] + is_[..., None] * (vh[..., :, None]
+                                                      * kh_[..., None, :])
+    n = fs * cell["n"] + is_ * kh_
+    num = jnp.einsum("bhij,bhj->bhi", C, qh)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhj,bhj->bh", n, qh)),
+                      jnp.exp(-m_new))[..., None]
+    y = (num / den).reshape(B, 1, d_inner)
+    yf = y.reshape(B, 1, H, hd)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    y = (yf * lax.rsqrt(var + cfg.norm_eps)).reshape(B, 1, d_inner)
+    y = (y * p["gn"].astype(jnp.float32)).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return y @ p["w_down"], {"C": C, "n": n, "m": m_new, "conv": new_conv}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM: sequential cell
+# ---------------------------------------------------------------------------
+
+def _slstm_cell(p: Params, H: int, hd: int, xt: jax.Array, state: Dict
+                ) -> Tuple[jax.Array, Dict]:
+    """One time step. xt: (B, 4D) preactivations (input part); state holds
+    h, c, n, m each (B, D)."""
+    B = xt.shape[0]
+    D = H * hd
+    h_prev = state["h"].reshape(B, H, hd)
+    rec = jnp.einsum("ghij,bhj->bghi", p["r_gates"], h_prev
+                     ).reshape(B, 4 * D)
+    pre = xt + rec
+    zp, ip, fp, op = jnp.split(pre, 4, axis=-1)
+    zt = jnp.tanh(zp)
+    ot = jax.nn.sigmoid(op)
+    logf = jax.nn.log_sigmoid(fp)
+    m_new = jnp.maximum(logf + state["m"], ip)
+    i_s = jnp.exp(ip - m_new)
+    f_s = jnp.exp(logf + state["m"] - m_new)
+    c = f_s * state["c"] + i_s * zt
+    n = f_s * state["n"] + i_s
+    h = ot * c / jnp.maximum(n, 1.0)
+    return h, {"h": h, "c": c, "n": n, "m": m_new}
+
+
+def slstm_forward(cfg: ArchConfig, p: Params, x: jax.Array,
+                  return_state: bool = False):
+    """Sequential sLSTM over time. x: (B,S,D)."""
+    D = cfg.d_model
+    H = cfg.n_heads
+    hd = D // H
+    B, S, _ = x.shape
+    from .mamba2 import _causal_conv
+    c = _causal_conv(x, p["conv_w"])
+    xg = c.astype(jnp.float32) @ p["w_gates"] + p["b_gates"]   # (B,S,4D)
+    state = {k: jnp.zeros((B, D), jnp.float32) for k in ("h", "c", "n")}
+    state["m"] = jnp.full((B, D), -1e30, jnp.float32)
+
+    def step(st, xt):
+        h, st = _slstm_cell(p, H, hd, xt, st)
+        return st, h
+
+    final, hs = lax.scan(step, state, jnp.moveaxis(xg, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1)                                  # (B,S,D)
+    yf = y.reshape(B, S, H, hd)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    y = (yf * lax.rsqrt(var + cfg.norm_eps)).reshape(B, S, D)
+    y = (y * p["gn"].astype(jnp.float32)).astype(x.dtype)
+    out = y @ p["w_down"]
+    if not return_state:
+        return out
+    final["conv"] = x[:, S - (cfg.conv_kernel - 1):, :]
+    return out, final
+
+
+def slstm_step(cfg: ArchConfig, p: Params, x: jax.Array, cell: Dict
+               ) -> Tuple[jax.Array, Dict]:
+    """x: (B,1,D); cell: {h,c,n,m (B,D), conv (B,K-1,D)}."""
+    D = cfg.d_model
+    H = cfg.n_heads
+    hd = D // H
+    B = x.shape[0]
+    window = jnp.concatenate([cell["conv"], x], axis=1)
+    new_conv = window[:, 1:]
+    c = jax.nn.silu(jnp.einsum("bkc,kc->bc", window, p["conv_w"]))
+    xg = c.astype(jnp.float32) @ p["w_gates"] + p["b_gates"]
+    st = {k: cell[k] for k in ("h", "c", "n", "m")}
+    h, st = _slstm_cell(p, H, hd, xg, st)
+    yf = h.reshape(B, H, hd)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    y = (yf * lax.rsqrt(var + cfg.norm_eps)).reshape(B, 1, D)
+    y = (y * p["gn"].astype(jnp.float32)).astype(x.dtype)
+    out = y @ p["w_down"]
+    st["conv"] = new_conv
+    return out, st
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+def _mlstm_block_fwd(cfg, blk, x):
+    import os
+    h = L.rms_norm(blk["norm1"], x, cfg.norm_eps)
+    # chunkwise-parallel above one chunk: O(S*Q) working set, not O(S^2).
+    # REPRO_XLSTM_PARALLEL=1 forces the quadratic form (perf ablations).
+    if (x.shape[1] > cfg.chunk
+            and not os.environ.get("REPRO_XLSTM_PARALLEL")):
+        return x + mlstm_chunkwise(cfg, blk["mlstm"], h)
+    return x + mlstm_parallel(cfg, blk["mlstm"], h)
+
+
+def _slstm_block_fwd(cfg, blk, x):
+    h = L.rms_norm(blk["norm1"], x, cfg.norm_eps)
+    return x + slstm_forward(cfg, blk["slstm"], h)
+
+
+def hidden(cfg: ArchConfig, params: Params, tokens: jax.Array, *,
+           remat: str = "none") -> jax.Array:
+    x = L.embed_lookup(params["embed"], tokens)
+    x = shard(x, "batch", None, None)
+
+    def group(x, xs):
+        mblocks, sblock = xs
+
+        def inner(h, blk):
+            return _mlstm_block_fwd(cfg, blk, h), None
+
+        x, _ = lax.scan(inner, x, mblocks)
+        x = _slstm_block_fwd(cfg, sblock, x)
+        return shard(x, "batch", None, None), None
+
+    body = T._remat_wrap(group, remat)
+    x, _ = lax.scan(body, x, (params["mlstm"], params["slstm"]))
+    return x
+
+
+def apply(cfg: ArchConfig, params: Params, tokens: jax.Array, *,
+          remat: str = "none") -> jax.Array:
+    return T.logits_of(cfg, params, hidden(cfg, params, tokens, remat=remat))
+
+
+def loss_fn(cfg: ArchConfig, params: Params, batch: Dict[str, jax.Array], *,
+            remat: str = "none") -> jax.Array:
+    x = hidden(cfg, params, batch["tokens"], remat=remat)
+    return T.lm_loss(cfg, params, x, batch["labels"])
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype=None) -> Params:
+    """State is O(1) in sequence length — nothing scales with max_seq."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    d_inner, H, hd = dims(cfg)
+    G = n_groups(cfg)
+    m_per = cfg.slstm_every - 1
+    D = cfg.d_model
+    return {
+        "m_C": jnp.zeros((G, m_per, batch, H, hd, hd), jnp.float32),
+        "m_n": jnp.zeros((G, m_per, batch, H, hd), jnp.float32),
+        "m_m": jnp.full((G, m_per, batch, H), -1e30, jnp.float32),
+        "m_conv": jnp.zeros((G, m_per, batch, cfg.conv_kernel - 1, d_inner),
+                            dtype),
+        "s_h": jnp.zeros((G, batch, D), jnp.float32),
+        "s_c": jnp.zeros((G, batch, D), jnp.float32),
+        "s_n": jnp.zeros((G, batch, D), jnp.float32),
+        "s_m": jnp.full((G, batch, D), -1e30, jnp.float32),
+        "s_conv": jnp.zeros((G, batch, cfg.conv_kernel - 1, D), dtype),
+        "index": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step(cfg: ArchConfig, params: Params, cache: Params,
+                tokens: jax.Array) -> Tuple[jax.Array, Params]:
+    x = L.embed_lookup(params["embed"], tokens)
+
+    def group(x, xs):
+        (mblocks, sblock, mC, mn, mm, mconv,
+         sh, sc, sn, sm, sconv) = xs
+
+        def inner(h, ys):
+            blk, C, n, m, conv = ys
+            hn = L.rms_norm(blk["norm1"], h, cfg.norm_eps)
+            out, cell = mlstm_step(cfg, blk["mlstm"], hn,
+                                   {"C": C, "n": n, "m": m, "conv": conv})
+            return h + out, (cell["C"], cell["n"], cell["m"], cell["conv"])
+
+        x, (nC, nn, nm, nconv) = lax.scan(inner, x,
+                                          (mblocks, mC, mn, mm, mconv))
+        hn = L.rms_norm(sblock["norm1"], x, cfg.norm_eps)
+        out, scell = slstm_step(cfg, sblock["slstm"], hn,
+                                {"h": sh, "c": sc, "n": sn, "m": sm,
+                                 "conv": sconv})
+        x = x + out
+        return x, (nC, nn, nm, nconv, scell["h"], scell["c"], scell["n"],
+                   scell["m"], scell["conv"])
+
+    x, news = lax.scan(group, x, (params["mlstm"], params["slstm"],
+                                  cache["m_C"], cache["m_n"], cache["m_m"],
+                                  cache["m_conv"], cache["s_h"], cache["s_c"],
+                                  cache["s_n"], cache["s_m"], cache["s_conv"]))
+    (nC, nn, nm, nconv, sh, sc, sn, sm, sconv) = news
+    logits = T.logits_of(cfg, params, x)
+    new_cache = {"m_C": nC, "m_n": nn, "m_m": nm, "m_conv": nconv,
+                 "s_h": sh, "s_c": sc, "s_n": sn, "s_m": sm, "s_conv": sconv,
+                 "index": cache["index"] + 1}
+    return logits, new_cache
+
+
+def prefill(cfg: ArchConfig, params: Params, tokens: jax.Array,
+            max_seq: Optional[int] = None) -> Tuple[jax.Array, Params]:
+    """Prefill with the chunkwise-parallel mLSTM (one matmul-heavy pass,
+    final decode cells extracted from the chunk scan) and the sequential
+    sLSTM over the prompt.  Falls back to token-by-token stepping only
+    for non-chunk-aligned prompts."""
+    B, S = tokens.shape
+    if S % min(cfg.chunk, S) != 0 or S <= cfg.conv_kernel:
+        cache = init_cache(cfg, B, max_seq or S)
+
+        def step(cache, tok):
+            logits, cache = decode_step(cfg, params, cache, tok[:, None])
+            return cache, logits
+
+        cache, logits = lax.scan(step, cache, jnp.moveaxis(tokens, 1, 0))
+        return logits[-1], cache
+
+    cache = init_cache(cfg, B, max_seq or S)
+    x = L.embed_lookup(params["embed"], tokens)
+    G = n_groups(cfg)
+    m_per = cfg.slstm_every - 1
+    for g in range(G):
+        for j in range(m_per):
+            blk = jax.tree.map(lambda t: t[g, j], params["mlstm"])
+            h = L.rms_norm(blk["norm1"], x, cfg.norm_eps)
+            out, cell = mlstm_chunkwise(cfg, blk["mlstm"], h,
+                                        return_state=True)
+            x = x + out
+            cache["m_C"] = cache["m_C"].at[g, j].set(cell["C"])
+            cache["m_n"] = cache["m_n"].at[g, j].set(cell["n"])
+            cache["m_m"] = cache["m_m"].at[g, j].set(cell["m"])
+            cache["m_conv"] = cache["m_conv"].at[g, j].set(cell["conv"])
+        sblk = jax.tree.map(lambda t: t[g], params["slstm"])
+        h = L.rms_norm(sblk["norm1"], x, cfg.norm_eps)
+        out, fin = slstm_forward(cfg, sblk["slstm"], h, return_state=True)
+        x = x + out
+        cache["s_h"] = cache["s_h"].at[g].set(fin["h"])
+        cache["s_c"] = cache["s_c"].at[g].set(fin["c"])
+        cache["s_n"] = cache["s_n"].at[g].set(fin["n"])
+        cache["s_m"] = cache["s_m"].at[g].set(fin["m"])
+        cache["s_conv"] = cache["s_conv"].at[g].set(fin["conv"])
+    cache["index"] = jnp.asarray(S, jnp.int32)
+    logits = T.logits_of(cfg, params, x[:, -1:])
+    return logits, cache

@@ -1,0 +1,6 @@
+from .adamw import AdamW, AdamWState
+from .compress import compress_grads_with_feedback, compressed_psum_pod
+from .schedule import constant, warmup_cosine
+
+__all__ = ["AdamW", "AdamWState", "warmup_cosine", "constant",
+           "compressed_psum_pod", "compress_grads_with_feedback"]

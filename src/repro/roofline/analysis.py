@@ -1,0 +1,201 @@
+"""Roofline analysis from compiled dry-run artifacts (no real hardware).
+
+Three terms per (arch × shape × mesh), TPU v5e constants:
+
+  compute    = HLO_FLOPs / (chips × 197e12)
+  memory     = HLO_bytes / (chips × 819e9)
+  collective = collective_bytes / (chips × 50e9)
+
+``cost_analysis()`` reports *per-device* flops/bytes of the SPMD-partitioned
+module, so global = per-device × chips and the division by chips cancels —
+we report both views.  Collective bytes are not in cost_analysis: we parse
+the post-optimization HLO text, attribute each collective op's output bytes
+to its computation, and multiply bodies of ``while`` loops (scan over
+layers!) by their trip count (recovered from the loop-condition constant).
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import asdict, dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+__all__ = ["HW", "collective_bytes_from_hlo", "analyze_compiled",
+           "RooflineReport"]
+
+# TPU v5e
+HW = {
+    "peak_flops": 197e12,   # bf16 FLOP/s per chip
+    "hbm_bw": 819e9,        # bytes/s per chip
+    "ici_bw": 50e9,         # bytes/s per link
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)\(")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\([^)]*\)\s*->")
+_WHILE_RE = re.compile(
+    r"while\(.*?\),\s*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclass
+class _Computation:
+    name: str
+    collectives: List[Tuple[str, int]] = field(default_factory=list)
+    whiles: List[Tuple[str, str]] = field(default_factory=list)  # (cond, body)
+    text: List[str] = field(default_factory=list)
+    is_entry: bool = False
+
+
+def _parse_computations(hlo: str) -> Dict[str, _Computation]:
+    comps: Dict[str, _Computation] = {}
+    current: Optional[_Computation] = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if not line.startswith(" ") and "->" in line and "{" in line:
+            m = _COMP_RE.match(line)
+            if m:
+                current = _Computation(name=m.group(1),
+                                       is_entry=line.startswith("ENTRY"))
+                comps[current.name] = current
+                continue
+        if current is None:
+            continue
+        current.text.append(stripped)
+        m = _OP_RE.match(line)
+        if m:
+            type_str, op = m.group(1), m.group(2)
+            base = op.replace("-start", "")
+            if base in _COLLECTIVES:
+                nbytes = _shape_bytes(type_str)
+                if op.endswith("-done"):
+                    continue
+                current.collectives.append((base, nbytes))
+        wm = _WHILE_RE.search(line)
+        if wm:
+            current.whiles.append((wm.group(1), wm.group(2)))
+    return comps
+
+
+def _trip_count(comps: Dict[str, _Computation], cond_name: str) -> int:
+    cond = comps.get(cond_name)
+    if cond is None:
+        return 1
+    best = 1
+    for line in cond.text:
+        for c in _CONST_RE.findall(line):
+            best = max(best, int(c))
+    return best
+
+
+def collective_bytes_from_hlo(hlo: str) -> Tuple[int, Dict[str, int]]:
+    """Total collective bytes (per device) and a per-kind breakdown,
+    with while-loop bodies multiplied by their trip counts."""
+    from .hloparse import analyze_hlo
+    stats = analyze_hlo(hlo)
+    return int(stats.collective_bytes), {
+        k: int(v) for k, v in stats.collectives_by_kind.items()}
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    # per-device quantities from the compiled module
+    device_flops: float
+    device_bytes: float
+    device_collective_bytes: float
+    collectives_by_kind: Dict[str, int]
+    # terms in seconds
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    # utilization
+    model_flops: float
+    hlo_total_flops: float
+    useful_ratio: float
+    # memory footprint
+    argument_bytes: int = 0
+    temp_bytes: int = 0
+    output_bytes: int = 0
+    notes: str = ""
+
+    def to_json(self) -> Dict[str, Any]:
+        return asdict(self)
+
+
+def analyze_compiled(compiled, *, arch: str, shape: str, mesh_name: str,
+                     chips: int, model_flops: float,
+                     notes: str = "") -> RooflineReport:
+    from .hloparse import analyze_hlo
+    hlo = compiled.as_text()
+    # while-aware totals (XLA's cost_analysis visits scan bodies once, so
+    # it under-reports by ~n_layers; our parser multiplies by trip count)
+    stats = analyze_hlo(hlo)
+    dev_flops = stats.flops
+    dev_bytes = stats.hbm_bytes
+    coll = stats.collective_bytes
+    by_kind = {k: int(v) for k, v in stats.collectives_by_kind.items()}
+
+    ca = compiled.cost_analysis() or {}
+    xla_flops = float(ca.get("flops", 0.0))
+    xla_bytes = float(ca.get("bytes accessed", 0.0))
+    # guard: if the parser somehow finds less than XLA's single-visit
+    # number, fall back to XLA's (it is a lower bound)
+    dev_flops = max(dev_flops, xla_flops)
+    dev_bytes = max(dev_bytes, xla_bytes)
+
+    compute_s = dev_flops / HW["peak_flops"]
+    memory_s = dev_bytes / HW["hbm_bw"]
+    collective_s = coll / HW["ici_bw"]
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+
+    total_flops = dev_flops * chips
+    ratio = model_flops / total_flops if total_flops else 0.0
+
+    mem = None
+    try:
+        mem = compiled.memory_analysis()
+    except Exception:
+        pass
+
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        device_flops=dev_flops, device_bytes=dev_bytes,
+        device_collective_bytes=float(coll), collectives_by_kind=by_kind,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant, model_flops=model_flops,
+        hlo_total_flops=total_flops, useful_ratio=ratio,
+        argument_bytes=getattr(mem, "argument_size_in_bytes", 0) if mem else 0,
+        temp_bytes=getattr(mem, "temp_size_in_bytes", 0) if mem else 0,
+        output_bytes=getattr(mem, "output_size_in_bytes", 0) if mem else 0,
+        notes=notes + f" xla_flops={xla_flops:.3g} xla_bytes={xla_bytes:.3g}")

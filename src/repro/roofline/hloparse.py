@@ -1,0 +1,355 @@
+"""While-aware HLO text analyzer.
+
+XLA's ``compiled.cost_analysis()`` visits each while body ONCE, so a model
+scanned over L layers under-reports flops/bytes by ~L x.  This parser walks
+the post-optimization HLO text, builds a per-computation symbol table,
+counts dot FLOPs / HBM-bytes / collective-bytes per computation, and
+multiplies while bodies by their trip counts (recovered from the loop
+condition constants).  These totals feed §Roofline.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["ModuleStats", "analyze_hlo"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OPNAME_RE = re.compile(r"\s*([\w\-\$]+)\(")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{")
+
+
+def _balanced(s: str, open_ch: str = "(", close_ch: str = ")") -> int:
+    """Index just past the matching close paren of s[0] (= open_ch)."""
+    depth = 0
+    for i, ch in enumerate(s):
+        if ch == open_ch:
+            depth += 1
+        elif ch == close_ch:
+            depth -= 1
+            if depth == 0:
+                return i + 1
+    return len(s)
+
+
+def _split_def(line: str):
+    """Parse '%name = TYPE op(args...), attrs' robustly (tuple types with
+    layout braces defeat a single regex)."""
+    s = line.strip()
+    if s.startswith("ROOT "):
+        s = s[5:]
+    if not s.startswith("%"):
+        return None
+    eq = s.find(" = ")
+    if eq < 0:
+        return None
+    name = s[:eq]
+    rest = s[eq + 3:]
+    if rest.startswith("("):
+        end = _balanced(rest)
+        type_str, rest = rest[:end], rest[end:]
+        # trailing layout braces of the tuple, if any
+        if rest.startswith("{"):
+            b = rest.find("}")
+            rest = rest[b + 1:]
+    else:
+        m = re.match(r"\S+", rest)
+        if not m:
+            return None
+        type_str, rest = m.group(0), rest[m.end():]
+    m = _OPNAME_RE.match(rest)
+    if not m:
+        return None
+    op = m.group(1)
+    args_onward = rest[m.end() - 1:]            # starts at '('
+    args_end = _balanced(args_onward)
+    args = args_onward[1:args_end - 1]
+    attrs = args_onward[args_end:]
+    return name, type_str, op, args, attrs
+_OPERAND_RE = re.compile(r"%[\w.\-]+")
+_CALLS_RE = re.compile(r"(?:calls|body|condition|to_apply)=%?([\w.\-]+)")
+_WHILE_RE = re.compile(
+    r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_DIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+# ops that don't touch HBM (layout/meta only)
+_FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "after-all", "partition-id", "replica-id"}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_dims(type_str: str) -> List[List[int]]:
+    out = []
+    for _, dims in _SHAPE_RE.findall(type_str):
+        out.append([int(d) for d in dims.split(",")] if dims else [])
+    return out
+
+
+@dataclass
+class _Op:
+    name: str
+    type_str: str
+    op: str
+    operands: List[str]
+    line: str
+
+
+@dataclass
+class _Comp:
+    name: str
+    is_entry: bool = False
+    ops: List[_Op] = field(default_factory=list)
+    symbols: Dict[str, str] = field(default_factory=dict)  # %name -> type
+    text: List[str] = field(default_factory=list)
+
+
+def _parse(hlo: str) -> Dict[str, _Comp]:
+    comps: Dict[str, _Comp] = {}
+    cur: Optional[_Comp] = None
+    for line in hlo.splitlines():
+        hdr = _COMP_HDR_RE.match(line)
+        if hdr and not line.startswith(" "):
+            cur = _Comp(name=hdr.group(2), is_entry=bool(hdr.group(1)))
+            comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        cur.text.append(line)
+        parts = _split_def(line)
+        if parts is None:
+            continue
+        name, type_str, op, args, attrs = parts
+        operands = _OPERAND_RE.findall(args)
+        o = _Op(name=name, type_str=type_str, op=op, operands=operands,
+                line=args + " " + attrs)
+        cur.ops.append(o)
+        cur.symbols[name] = type_str
+    return comps
+
+
+def _dot_flops(op: _Op, symbols: Dict[str, str]) -> float:
+    out_dims = _shape_dims(op.type_str)
+    out_elems = 1
+    for d in (out_dims[0] if out_dims else []):
+        out_elems *= d
+    m = _DIMS_RE.search(op.line)
+    contract = 1
+    if m and op.operands:
+        lhs_type = symbols.get(op.operands[0], "")
+        lhs_dims = _shape_dims(lhs_type)
+        if lhs_dims:
+            idxs = [int(i) for i in m.group(1).split(",") if i != ""]
+            for i in idxs:
+                if i < len(lhs_dims[0]):
+                    contract *= lhs_dims[0][i]
+    return 2.0 * out_elems * contract
+
+
+@dataclass
+class ModuleStats:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collectives_by_kind: Dict[str, float] = field(default_factory=dict)
+    dot_flops_by_comp: Dict[str, float] = field(default_factory=dict)
+    bytes_by_comp: Dict[str, float] = field(default_factory=dict)
+    top_ops: List[Tuple[float, str, str, str]] = field(default_factory=list)
+
+
+def analyze_hlo(hlo: str) -> ModuleStats:
+    comps = _parse(hlo)
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    stats = ModuleStats()
+    if entry is None:
+        return stats
+
+    def trip_count(cond_name: str) -> int:
+        cond = comps.get(cond_name)
+        if cond is None:
+            return 1
+        best = 1
+        for line in cond.text:
+            for c in _CONST_RE.findall(line):
+                best = max(best, int(c))
+        return best
+
+    def comp_flops_only(comp: _Comp, mult: float, seen: Tuple[str, ...]
+                        ) -> None:
+        """flops of fusion-called computations (no HBM bytes inside)."""
+        if comp.name in seen:
+            return
+        for op in comp.ops:
+            if op.op in ("dot", "convolution"):
+                f = _dot_flops(op, comp.symbols)
+                stats.flops += f * mult
+                stats.dot_flops_by_comp[comp.name] = \
+                    stats.dot_flops_by_comp.get(comp.name, 0.0) + f * mult
+
+    _PASS_THROUGH = {"bitcast", "reshape", "copy", "convert", "transpose"}
+
+    def _fusion_traffic(called: _Comp) -> Tuple[Dict[int, float],
+                                                Optional[float]]:
+        """(per-parameter physical read size, output write size override).
+
+        A parameter that flows (through bitcasts/reshapes) only into
+        dynamic-slice ops reads just the slices; the in-place target of a
+        root dynamic-update-slice neither reads nor writes its full size.
+        """
+        ordinals: Dict[str, int] = {}
+        for o in called.ops:
+            if o.op == "parameter":
+                m = re.search(r"parameter\((\d+)\)", o.line)
+                if m is None:   # fused comps print 'parameter()'; the
+                    m = re.search(r"%param_(\d+)", o.name)   # name has it
+                if m:
+                    ordinals[o.name] = int(m.group(1))
+        # aliases: value name -> originating parameter name
+        alias: Dict[str, str] = {n: n for n in ordinals}
+        for o in called.ops:
+            if o.op in _PASS_THROUGH and o.operands:
+                src = alias.get(o.operands[0])
+                if src is not None:
+                    alias[o.name] = src
+        # the root may be a chain of pass-throughs after the real producer;
+        # walk back to find whether the fusion's output is a dus in place
+        by_name = {o.name: o for o in called.ops}
+        root = called.ops[-1] if called.ops else None
+        while root is not None and root.op in _PASS_THROUGH and root.operands:
+            root = by_name.get(root.operands[0])
+        root_name = root.name if root is not None else None
+
+        sizes: Dict[int, float] = {}
+        root_override: Optional[float] = None
+        for o in called.ops:
+            if o.op in ("parameter",) or o.op in _PASS_THROUGH:
+                continue
+            for pos, ref in enumerate(o.operands):
+                src = alias.get(ref)
+                if src is None:
+                    continue
+                ordinal = ordinals[src]
+                full = _shape_bytes(called.symbols.get(src, ""))
+                if o.op == "dynamic-slice" and pos == 0:
+                    use = _shape_bytes(o.type_str)
+                elif o.op == "dynamic-update-slice" and pos == 0:
+                    upd = (called.symbols.get(o.operands[1], "")
+                           if len(o.operands) > 1 else "")
+                    use = _shape_bytes(upd)
+                    if o.name == root_name:
+                        root_override = float(_shape_bytes(upd))
+                else:
+                    use = full
+                sizes[ordinal] = max(sizes.get(ordinal, 0.0), use)
+        if root is not None and root.op == "dynamic-update-slice" \
+                and root_override is None:
+            upd = (called.symbols.get(root.operands[1], "")
+                   if len(root.operands) > 1 else "")
+            if upd:
+                root_override = float(_shape_bytes(upd))
+        return sizes, root_override
+
+    def _op_bytes(comp: _Comp, op: _Op) -> float:
+        """Physical HBM traffic estimate for one top-level op."""
+        if op.op == "dynamic-slice":
+            return 2.0 * _shape_bytes(op.type_str)
+        if op.op == "dynamic-update-slice":
+            upd = comp.symbols.get(op.operands[1], "") \
+                if len(op.operands) > 1 else op.type_str
+            return 2.0 * _shape_bytes(upd)
+        out_bytes = float(_shape_bytes(op.type_str))
+        slice_map: Dict[int, float] = {}
+        if op.op == "fusion":
+            for called_name in _CALLS_RE.findall(op.line):
+                c = comps.get(called_name)
+                if c is not None:
+                    slice_map, root_override = _fusion_traffic(c)
+                    if root_override is not None:
+                        out_bytes = root_override
+                    break
+        b = out_bytes
+        for pos, ref in enumerate(op.operands):
+            t = comp.symbols.get(ref)
+            if t is None:
+                continue
+            if op.op == "fusion" and pos in slice_map:
+                b += slice_map[pos]
+            else:
+                b += _shape_bytes(t)
+        return b
+
+    def visit(comp: _Comp, mult: float, seen: Tuple[str, ...]) -> None:
+        if comp.name in seen:
+            return
+        seen = seen + (comp.name,)
+        for op in comp.ops:
+            base = op.op.replace("-start", "")
+            if op.op in _FREE_OPS:
+                continue
+            if op.op.endswith("-done"):
+                continue
+            if base in _COLLECTIVES:
+                b = _shape_bytes(op.type_str)
+                stats.collective_bytes += b * mult
+                stats.collectives_by_kind[base] = \
+                    stats.collectives_by_kind.get(base, 0.0) + b * mult
+                stats.hbm_bytes += b * mult
+                continue
+            if op.op == "while":
+                m = _WHILE_RE.search(op.line)
+                if m:
+                    trips = trip_count(m.group(1))
+                    body = comps.get(m.group(2))
+                    if body is not None:
+                        visit(body, mult * trips, seen)
+                continue
+            if op.op in ("call", "conditional"):
+                for called in _CALLS_RE.findall(op.line):
+                    c = comps.get(called)
+                    if c is not None and not called.startswith("region"):
+                        visit(c, mult, seen)
+            if op.op in ("dot", "convolution"):
+                f = _dot_flops(op, comp.symbols)
+                stats.flops += f * mult
+                stats.dot_flops_by_comp[comp.name] = \
+                    stats.dot_flops_by_comp.get(comp.name, 0.0) + f * mult
+            if op.op == "fusion":
+                for called in _CALLS_RE.findall(op.line):
+                    c = comps.get(called)
+                    if c is not None:
+                        comp_flops_only(c, mult, ())
+            ob = _op_bytes(comp, op) * mult
+            stats.hbm_bytes += ob
+            stats.bytes_by_comp[comp.name] = \
+                stats.bytes_by_comp.get(comp.name, 0.0) + ob
+            if ob > 1e9:
+                stats.top_ops.append((ob, comp.name, op.op,
+                                      op.type_str[:60]))
+
+    visit(entry, 1.0, ())
+    stats.top_ops.sort(reverse=True)
+    del stats.top_ops[24:]
+    return stats

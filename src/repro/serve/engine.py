@@ -1,0 +1,124 @@
+"""Serving engine: prefill + decode with continuous batching.
+
+Slots hold independent sequences; each decode step advances every active
+slot by one token (per-slot cache positions via the vectorized ``index``
+path in layers.attention_decode).  New requests are prefilled (batch-1)
+into free slots without stopping the decode loop — the standard
+continuous-batching discipline, here for the dense/vlm families the
+LIDC serving endpoints expose.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from ..models.model import bundle_for
+
+__all__ = ["Request", "ServeEngine"]
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new: int = 16
+    eos: Optional[int] = None
+    out: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ArchConfig, params, *, max_batch: int = 4,
+                 max_seq: int = 256, greedy: bool = True):
+        assert cfg.family in ("dense", "vlm"), \
+            "continuous batching engine supports the dense families"
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        bundle = bundle_for(cfg)
+        self._decode = jax.jit(
+            lambda p, c, t: bundle.decode_step(cfg, p, c, t))
+        self._prefill = jax.jit(
+            lambda p, t: bundle.prefill(cfg, p, t, max_seq=max_seq),
+            static_argnames=())
+        self.cache = bundle.init_cache(cfg, max_batch, max_seq)
+        # vectorized per-slot positions
+        self.cache["index"] = jnp.zeros((max_batch,), jnp.int32)
+        self.slots: List[Optional[Request]] = [None] * max_batch
+        self.last_tokens = np.zeros((max_batch, 1), np.int32)
+        self.queue: List[Request] = []
+        self._rid = 0
+        self.decode_steps = 0
+        self.tokens_out = 0
+
+    # -- API -----------------------------------------------------------------
+    def submit(self, prompt: List[int], max_new: int = 16,
+               eos: Optional[int] = None) -> Request:
+        self._rid += 1
+        req = Request(rid=self._rid, prompt=list(prompt), max_new=max_new,
+                      eos=eos)
+        self.queue.append(req)
+        return req
+
+    def run(self, max_steps: int = 10_000) -> List[Request]:
+        done: List[Request] = []
+        steps = 0
+        while (self.queue or any(self.slots)) and steps < max_steps:
+            self._admit()
+            finished = self.step()
+            done.extend(finished)
+            steps += 1
+        return done
+
+    # -- internals --------------------------------------------------------------
+    def _admit(self) -> None:
+        for i in range(self.max_batch):
+            if self.slots[i] is None and self.queue:
+                req = self.queue.pop(0)
+                self._prefill_into_slot(i, req)
+
+    def _prefill_into_slot(self, slot: int, req: Request) -> None:
+        toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        logits, c1 = self._prefill(self.params, toks)
+        # copy the single-row cache into the slot
+        self.cache["k"] = self.cache["k"].at[:, slot].set(c1["k"][:, 0])
+        self.cache["v"] = self.cache["v"].at[:, slot].set(c1["v"][:, 0])
+        self.cache["index"] = self.cache["index"].at[slot].set(
+            len(req.prompt))
+        nxt = int(jnp.argmax(logits[0, -1]))
+        req.out.append(nxt)
+        self.last_tokens[slot, 0] = nxt
+        self.slots[slot] = req
+
+    def step(self) -> List[Request]:
+        """One decode step for all active slots."""
+        if not any(self.slots):
+            return []
+        tokens = jnp.asarray(self.last_tokens)
+        logits, self.cache = self._decode(self.params, self.cache, tokens)
+        nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1), np.int32)
+        self.decode_steps += 1
+        finished: List[Request] = []
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            tok = int(nxt[i])
+            req.out.append(tok)
+            self.tokens_out += 1
+            self.last_tokens[i, 0] = tok
+            full = len(req.prompt) + len(req.out) >= self.max_seq - 1
+            if (len(req.out) >= req.max_new or full
+                    or (req.eos is not None and tok == req.eos)):
+                req.done = True
+                finished.append(req)
+                self.slots[i] = None
+                self.cache["index"] = self.cache["index"].at[i].set(0)
+        return finished

@@ -1,0 +1,46 @@
+"""The dry-run CLI end to end (subprocess: it must own jax device init).
+
+One cheap cell on the full 512-device production meshes proves the
+pipeline: mesh build -> shardings -> lower -> compile -> roofline artifact.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_dryrun_single_cell(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)   # dryrun.py sets its own
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "qwen2-0.5b", "--shape", "decode_32k",
+         "--mesh", "single", "--out", str(tmp_path)],
+        capture_output=True, text=True, timeout=540, env=env, cwd=ROOT)
+    assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-2000:]
+    assert "[OK]" in out.stdout
+    art = tmp_path / "qwen2-0.5b__decode_32k__single.json"
+    assert art.exists()
+    r = json.loads(art.read_text())
+    assert r["status"] == "ok"
+    assert r["chips"] == 256
+    assert r["compute_s"] > 0 or r["memory_s"] > 0
+    assert r["dominant"] in ("compute", "memory", "collective")
+    assert r["argument_bytes"] > 0
+
+
+def test_dryrun_list():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--list"],
+        capture_output=True, text=True, timeout=120, env=env, cwd=ROOT)
+    assert out.returncode == 0
+    lines = [l for l in out.stdout.splitlines() if l.strip()]
+    # 10 archs x 3 shapes + 2 long_500k cells = 32
+    assert len(lines) == 32
+    assert sum("long_500k" in l for l in lines) == 2

@@ -1,0 +1,128 @@
+"""Forwarding plane behaviour: CS hits, NACKs, failover, straggler mitigation."""
+
+from repro.core.forwarder import Consumer, Forwarder, Nack, Network, link
+from repro.core.names import Name
+from repro.core.packets import Data, Interest
+from repro.core.strategy import (BestRouteStrategy, LoadShareStrategy,
+                                 MulticastStrategy)
+
+
+def _producer(node, prefix, value=b"v", delay=0.0, fail=False):
+    calls = {"n": 0}
+
+    def handler(interest, publish, now):
+        calls["n"] += 1
+        if fail:
+            return Nack(interest, "synthetic")
+        d = Data(name=interest.name, content=value, created_at=now,
+                 freshness=10.0)
+        if delay == 0:
+            return d
+        node.net.schedule(delay, lambda: publish(d))
+        return None
+
+    node.attach_producer(Name.parse(prefix), handler)
+    return calls
+
+
+def _star(n_leaves, latencies=None, strategy=None):
+    net = Network()
+    hub = Forwarder(net, "hub", strategy=strategy)
+    leaves = []
+    for i in range(n_leaves):
+        leaf = Forwarder(net, f"leaf{i}")
+        lat = latencies[i] if latencies else 0.001
+        hub_face, _ = link(net, hub, leaf, latency=lat)
+        leaves.append((leaf, hub_face))
+    return net, hub, leaves
+
+
+def test_basic_fetch_and_cs_hit():
+    net, hub, [(leaf, face)] = _star(1)
+    calls = _producer(leaf, "/data")
+    hub.register_route(Name.parse("/data"), face)
+    c = Consumer(net, hub)
+    r1 = c.get(Name.parse("/data/x"))
+    assert r1["data"].content == b"v" and calls["n"] == 1
+    r2 = c.get(Name.parse("/data/x"))
+    assert r2["data"].content == b"v"
+    assert calls["n"] == 1          # served from the hub's Content Store
+    assert hub.cs.hits >= 1
+
+
+def test_nack_no_route():
+    net, hub, _ = _star(0)
+    c = Consumer(net, hub)
+    box = c.get(Name.parse("/nowhere/x"), retries=0)
+    assert "error" in box and "nack" in box["error"]
+
+
+def test_nack_failover_to_second_route():
+    net, hub, leaves = _star(2)
+    (bad, f_bad), (good, f_good) = leaves
+    _producer(bad, "/svc", fail=True)
+    ok_calls = _producer(good, "/svc")
+    hub.register_route(Name.parse("/svc"), f_bad, cost=1.0)   # preferred
+    hub.register_route(Name.parse("/svc"), f_good, cost=2.0)
+    c = Consumer(net, hub)
+    box = c.get(Name.parse("/svc/x"))
+    assert box["data"].content == b"v"
+    assert ok_calls["n"] == 1
+
+
+def test_dead_cluster_failover_via_retransmission():
+    net, hub, leaves = _star(2)
+    (dead, f_dead), (alive, f_alive) = leaves
+    _producer(dead, "/svc")
+    alive_calls = _producer(alive, "/svc")
+    hub.register_route(Name.parse("/svc"), f_dead, cost=1.0)
+    hub.register_route(Name.parse("/svc"), f_alive, cost=2.0)
+    f_dead.down = True              # cluster goes dark: packets vanish
+    c = Consumer(net, hub)
+    box = c.get(Name.parse("/svc/x"))
+    # the first interest times out; retransmission tries the next route
+    assert box.get("data") is not None
+    assert alive_calls["n"] == 1
+
+
+def test_multicast_first_answer_wins_and_dedupes():
+    net, hub, leaves = _star(2, latencies=[0.05, 0.001],
+                             strategy=MulticastStrategy(k=2))
+    (slow, f_slow), (fast, f_fast) = leaves
+    _producer(slow, "/svc", value=b"slow", delay=1.0)
+    _producer(fast, "/svc", value=b"fast", delay=0.0)
+    hub.register_route(Name.parse("/svc"), f_slow, cost=1.0)
+    hub.register_route(Name.parse("/svc"), f_fast, cost=1.0)
+    c = Consumer(net, hub)
+    got = []
+    c.express(Interest(name=Name.parse("/svc/x")), on_data=got.append)
+    net.run()
+    assert len(got) == 1            # duplicate answer suppressed by PIT/CS
+    assert got[0].content == b"fast"
+
+
+def test_loadshare_distributes():
+    net, hub, leaves = _star(2, strategy=LoadShareStrategy())
+    calls = []
+    for leaf, face in leaves:
+        calls.append(_producer(leaf, "/svc"))
+        hub.register_route(Name.parse("/svc"), face, cost=1.0)
+    c = Consumer(net, hub)
+    for i in range(10):
+        c.get(Name.parse(f"/svc/{i}"))
+    assert calls[0]["n"] > 0 and calls[1]["n"] > 0
+    assert calls[0]["n"] + calls[1]["n"] == 10
+
+
+def test_hop_limit_drops():
+    net = Network()
+    a = Forwarder(net, "a")
+    b = Forwarder(net, "b")
+    fa, fb = link(net, a, b)
+    # route loop: a -> b and b -> a for the same prefix
+    a.register_route(Name.parse("/loop"), fa)
+    b.register_route(Name.parse("/loop"), fb)
+    c = Consumer(net, a)
+    box = c.get(Name.parse("/loop/x"), retries=0, hop_limit=8)
+    net.run()
+    assert "data" not in box        # died by hop limit / nonce suppression

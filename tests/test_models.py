@@ -1,0 +1,203 @@
+"""Per-arch smoke tests + mathematical consistency of the model families.
+
+Every assigned architecture instantiates its REDUCED config and runs one
+forward/train step on CPU with shape + finiteness asserts; family math is
+cross-checked (chunked SSD vs sequential scan, mLSTM parallel vs recurrent,
+decode vs teacher-forced full forward).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SHAPES, ShapeConfig, registry, smoke_of
+from repro.models import bundle_for, param_count, synth_batch
+from repro.models.model import input_specs, model_flops
+
+KEY = jax.random.PRNGKey(0)
+TRAIN = ShapeConfig("t", "train", 32, 2)
+
+ALL_ARCHS = [a for a in registry() if a != "lidc-demo"] + ["lidc-demo"]
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_train_step(arch):
+    """One real forward + grad step on the reduced config."""
+    cfg = smoke_of(arch)
+    bundle = bundle_for(cfg)
+    params = bundle.init(cfg, KEY)
+    batch = synth_batch(cfg, TRAIN, KEY)
+    loss, grads = jax.value_and_grad(
+        lambda p: bundle.loss_fn(cfg, p, batch))(params)
+    assert jnp.isfinite(loss), arch
+    gnorm = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree.leaves(grads))
+    assert jnp.isfinite(gnorm) and gnorm > 0, arch
+    # a gradient step moves the loss
+    params2 = jax.tree.map(lambda p, g: p - 0.05 * g.astype(p.dtype),
+                           params, grads)
+    loss2 = bundle.loss_fn(cfg, params2, batch)
+    assert jnp.isfinite(loss2)
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_decode_step(arch):
+    cfg = smoke_of(arch)
+    bundle = bundle_for(cfg)
+    params = bundle.init(cfg, KEY)
+    B, S = 2, 16
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+    if cfg.family == "encdec":
+        frames = jax.random.normal(KEY, (B, S, cfg.d_model),
+                                   jnp.dtype(cfg.dtype))
+        logits, cache = bundle.prefill(cfg, params,
+                                       {"frames": frames, "tokens": toks},
+                                       max_seq=S + 4)
+    else:
+        logits, cache = bundle.prefill(cfg, params, toks, max_seq=S + 4)
+    assert logits.shape[0] == B and logits.shape[-1] == cfg.vocab
+    nxt = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    l2, cache2 = bundle.decode_step(cfg, params, cache, nxt)
+    assert l2.shape == (B, 1, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(l2.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_param_count_and_flops_positive(arch):
+    cfg = smoke_of(arch)
+    n = param_count(cfg)
+    assert n > 0
+    assert param_count(cfg, active_only=True) <= n
+    for shape in SHAPES.values():
+        assert model_flops(cfg, shape) > 0
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "qwen2-0.5b",
+                                  "qwen3-moe-30b-a3b"])
+def test_decode_matches_teacher_forcing(arch):
+    """Greedy decode logits == full-forward logits at the same positions."""
+    import dataclasses
+    cfg = smoke_of(arch)
+    if cfg.is_moe:
+        # decode routes one token at a time; with production capacity the
+        # full-forward path may drop tokens the decode path keeps — give
+        # the consistency check drop-free capacity
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    bundle = bundle_for(cfg)
+    params = bundle.init(cfg, KEY)
+    toks = jax.random.randint(KEY, (1, 12), 0, cfg.vocab)
+    full = bundle.apply(cfg, params, toks)
+    _, cache = bundle.prefill(cfg, params, toks[:, :6], max_seq=12)
+    outs = []
+    for i in range(6, 12):
+        lg, cache = bundle.decode_step(cfg, params, cache, toks[:, i:i + 1])
+        outs.append(lg)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec, np.float32),
+                               np.asarray(full[:, 6:12], np.float32),
+                               atol=2e-2, rtol=2e-2)
+
+
+def test_ssd_chunked_matches_sequential():
+    """Mamba2 chunked SSD == naive per-step recurrence."""
+    from repro.configs.base import smoke_of
+    from repro.models import mamba2 as M
+    cfg = smoke_of("zamba2-2.7b")
+    d_inner, H, P, N = M.dims(cfg)
+    B, S = 2, 32
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (B, S, H, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    a_log = jnp.log(jnp.linspace(1.0, 4.0, H))
+    Bm = jax.random.normal(ks[2], (B, S, N), jnp.float32)
+    Cm = jax.random.normal(ks[3], (B, S, N), jnp.float32)
+    d_skip = jnp.zeros((H,))
+    y_chunk = M.ssd_forward(cfg, x, dt, a_log, Bm, Cm, d_skip)
+
+    # sequential reference
+    A = -jnp.exp(a_log)
+    state = jnp.zeros((B, H, P, N))
+    ys = []
+    for t in range(S):
+        a_t = jnp.exp(dt[:, t] * A)                      # (B,H)
+        upd = (dt[:, t, :, None] * x[:, t])[..., None] * Bm[:, t, None, None, :]
+        state = a_t[..., None, None] * state + upd
+        ys.append(jnp.einsum("bhpn,bn->bhp", state, Cm[:, t]))
+    y_seq = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_seq),
+                               atol=2e-4, rtol=2e-3)
+
+
+def test_mlstm_parallel_matches_recurrent():
+    """mLSTM stabilized parallel form == step-by-step recurrent cell."""
+    from repro.configs.base import smoke_of
+    from repro.models import xlstm as X
+    cfg = smoke_of("xlstm-350m")
+    bundle_params = X.init_mlstm_block(cfg, KEY, jnp.float32)
+    p = bundle_params["mlstm"]
+    d_inner, H, hd = X.dims(cfg)
+    B, S = 1, 12
+    x = jax.random.normal(jax.random.PRNGKey(7), (B, S, cfg.d_model),
+                          jnp.float32) * 0.3
+    y_par = X.mlstm_parallel(cfg, p, x)
+
+    cell = {"C": jnp.zeros((B, H, hd, hd)), "n": jnp.zeros((B, H, hd)),
+            "m": jnp.full((B, H), -1e30),
+            "conv": jnp.zeros((B, cfg.conv_kernel - 1, d_inner))}
+    outs = []
+    for t in range(S):
+        o, cell = X.mlstm_step(cfg, p, x[:, t:t + 1], cell)
+        outs.append(o)
+    y_rec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_par), np.asarray(y_rec),
+                               atol=3e-4, rtol=3e-3)
+
+
+def test_hybrid_decode_matches_prefill_continuation():
+    """zamba2: prefill(S) then decode == prefill(S+1) last logits."""
+    cfg = smoke_of("zamba2-2.7b")
+    bundle = bundle_for(cfg)
+    params = bundle.init(cfg, KEY)
+    toks = jax.random.randint(KEY, (1, 17), 0, cfg.vocab)
+    lg_full, _ = bundle.prefill(cfg, params, toks, max_seq=32)
+    _, cache = bundle.prefill(cfg, params, toks[:, :16], max_seq=32)
+    lg_dec, _ = bundle.decode_step(cfg, params, cache, toks[:, 16:17])
+    np.testing.assert_allclose(np.asarray(lg_dec[:, 0], np.float32),
+                               np.asarray(lg_full[:, -1], np.float32),
+                               atol=5e-2, rtol=5e-2)
+
+
+def test_moe_local_dispatch_matches_dense():
+    """Sort-based capacity dispatch == dense per-expert loop (no drops)."""
+    from repro.models import moe as MoE
+    cfg = smoke_of("qwen3-moe-30b-a3b")
+    cfg = type(cfg)(**{**cfg.__dict__, "capacity_factor": 8.0})  # no drops
+    p = MoE.init_moe(cfg, KEY, jnp.float32)
+    T, D = 64, cfg.d_model
+    x = jax.random.normal(jax.random.PRNGKey(3), (T, D), jnp.float32)
+    y, (f_e, p_e) = MoE._local_moe(cfg, x, p, 0, cfg.n_experts)
+    assert float(jnp.sum(f_e)) > 0      # load-balance stats present
+
+    # dense reference: every expert on every token, masked combine
+    from repro.kernels import ref as kref
+    logits = x @ p["router"]
+    w, ids = kref.moe_gating_ref(logits, cfg.top_k)
+    y_ref = jnp.zeros_like(x)
+    for e in range(cfg.n_experts):
+        h = jax.nn.silu(x @ p["w_gate"][e]) * (x @ p["w_up"][e])
+        o = h @ p["w_down"][e]
+        mask = (ids == e).astype(jnp.float32) * w            # (T,k)
+        y_ref = y_ref + o * jnp.sum(mask, axis=-1, keepdims=True)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               atol=1e-4, rtol=1e-3)
+
+
+def test_moe_capacity_drops_tokens():
+    from repro.models import moe as MoE
+    cfg = smoke_of("qwen3-moe-30b-a3b")
+    cfg = type(cfg)(**{**cfg.__dict__, "capacity_factor": 0.05})
+    p = MoE.init_moe(cfg, KEY, jnp.float32)
+    x = jax.random.normal(KEY, (64, cfg.d_model), jnp.float32)
+    y, _ = MoE._local_moe(cfg, x, p, 0, cfg.n_experts)
+    assert bool(jnp.all(jnp.isfinite(y)))   # drops must not produce NaNs

@@ -1,0 +1,91 @@
+"""Names, the semantic job codec, and NDN prefix semantics."""
+
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.names import (COMPUTE_PREFIX, Name, canonical_job_name,
+                              encode_job, job_fields_of, parse_job)
+
+
+def test_parse_and_str_roundtrip():
+    n = Name.parse("/lidc/compute/train/qwen3-1.7b")
+    assert str(n) == "/lidc/compute/train/qwen3-1.7b"
+    assert len(n) == 4
+    assert n[0] == "lidc"
+
+
+def test_component_prefix_semantics():
+    # NDN prefixes are component-wise, not substring-wise
+    assert Name.parse("/lidc/comp").is_prefix_of(Name.parse("/lidc/compute")) \
+        is False
+    assert Name.parse("/lidc").is_prefix_of(Name.parse("/lidc/compute"))
+    assert Name.parse("/lidc/compute").is_prefix_of(
+        Name.parse("/lidc/compute"))
+
+
+def test_append_and_truediv():
+    n = Name.parse("/a") / "b"
+    assert str(n.append("c", "d")) == "/a/b/c/d"
+
+
+def test_illegal_names():
+    with pytest.raises(ValueError):
+        Name.parse("no-slash")
+    with pytest.raises(ValueError):
+        Name.parse("/bad component with spaces")
+
+
+def test_job_codec_roundtrip():
+    fields = {"app": "train", "arch": "qwen2-0.5b", "shape": "train_4k",
+              "chips": 8, "steps": 100}
+    n = canonical_job_name(fields)
+    back = job_fields_of(n)
+    assert back["app"] == "train"
+    assert back["arch"] == "qwen2-0.5b"
+    assert back["chips"] == "8"
+    assert back["steps"] == "100"
+
+
+def test_canonical_name_is_order_independent():
+    a = canonical_job_name({"app": "blast", "srr": "SRR1", "mem": 4, "cpu": 2})
+    b = canonical_job_name({"cpu": 2, "mem": 4, "srr": "SRR1", "app": "blast"})
+    assert a == b   # identical requests -> identical names -> cacheable
+
+
+def test_paper_example_name_shape():
+    # the paper's /ndn/k8s/compute/mem=4&cpu=6&app=BLAST convention
+    n = canonical_job_name({"app": "blast", "mem": 4, "cpu": 6})
+    assert str(n) == "/lidc/compute/blast/cpu=6&mem=4"
+
+
+def test_arch_refines_prefix():
+    n = canonical_job_name({"app": "train", "arch": "qwen2-0.5b"})
+    assert Name.parse(COMPUTE_PREFIX + "/train/qwen2-0.5b").is_prefix_of(n)
+
+
+def test_parse_job_malformed():
+    with pytest.raises(ValueError):
+        parse_job("novalue")
+    with pytest.raises(ValueError):
+        parse_job("a=1&a=2")
+
+
+_field_keys = st.text(alphabet="abcdefghijklmnop_", min_size=1, max_size=8)
+_field_vals = st.one_of(st.integers(0, 10 ** 9),
+                        st.text(alphabet="abcXYZ0123-._", min_size=1,
+                                max_size=12))
+
+
+@given(st.dictionaries(_field_keys, _field_vals, min_size=1, max_size=6))
+def test_encode_parse_property(fields):
+    enc = encode_job(fields)
+    back = parse_job(enc)
+    assert back == {k: str(v) for k, v in fields.items()}
+
+
+@given(st.lists(st.sampled_from("abcdef"), min_size=1, max_size=6),
+       st.lists(st.sampled_from("abcdef"), min_size=1, max_size=6))
+def test_prefix_property(a, b):
+    na, nb = Name(tuple(a)), Name(tuple(b))
+    if na.is_prefix_of(nb):
+        assert list(nb.components[:len(na)]) == list(na.components)

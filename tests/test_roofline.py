@@ -1,0 +1,74 @@
+"""HLO parser: collective accounting with while-trip multiplication."""
+
+import numpy as np
+
+from repro.roofline.analysis import HW, collective_bytes_from_hlo
+from repro.roofline.hloparse import _shape_bytes, _split_def, analyze_hlo
+
+SYNTH_HLO = """
+HloModule synth
+
+%body (p: (s32[], f32[64,128])) -> (s32[], f32[64,128]) {
+  %p = (s32[], f32[64,128]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[64,128]{1,0} get-tuple-element(%p), index=1
+  %ag = f32[64,256]{1,0} all-gather(%x), channel_id=1, dimensions={1}
+  %dot = f32[64,64]{1,0} dot(%ag, %ag), lhs_contracting_dims={1}, rhs_contracting_dims={1}
+  %ar = f32[64,128]{1,0} all-reduce(%x), channel_id=2, to_apply=%add
+  ROOT %t = (s32[], f32[64,128]{1,0}) tuple(%i, %ar)
+}
+
+%cond (p: (s32[], f32[64,128])) -> pred[] {
+  %p = (s32[], f32[64,128]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %limit = s32[] constant(12)
+  ROOT %cmp = pred[] compare(%i, %limit), direction=LT
+}
+
+ENTRY %main (a: f32[64,128]) -> f32[64,128] {
+  %a = f32[64,128]{1,0} parameter(0)
+  %cp = f32[64,128]{1,0} collective-permute(%a), source_target_pairs={{0,1}}
+  %init = (s32[], f32[64,128]{1,0}) tuple(%a)
+  %w = (s32[], f32[64,128]{1,0}) while(%init), condition=%cond, body=%body
+  ROOT %out = f32[64,128]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[64,128]{1,0}") == 64 * 128 * 4
+    assert _shape_bytes("bf16[8]") == 16
+    assert _shape_bytes("(f32[2,2], s32[4])") == 16 + 16
+    assert _shape_bytes("pred[]") == 1
+
+
+def test_split_def_tuple_types():
+    parts = _split_def(
+        "  %w = (s32[], f32[3,128,32]{2,1,0}) while(%t), condition=%c, "
+        "body=%b")
+    assert parts is not None
+    name, type_str, op, args, attrs = parts
+    assert op == "while" and "condition=%c" in attrs
+
+
+def test_while_trip_multiplication():
+    total, by_kind = collective_bytes_from_hlo(SYNTH_HLO)
+    ag = 64 * 256 * 4          # inside while: x12
+    ar = 64 * 128 * 4          # inside while: x12
+    cp = 64 * 128 * 4          # entry: x1
+    assert by_kind["all-gather"] == ag * 12
+    assert by_kind["all-reduce"] == ar * 12
+    assert by_kind["collective-permute"] == cp
+    assert total == ag * 12 + ar * 12 + cp
+
+
+def test_dot_flops_with_trips():
+    stats = analyze_hlo(SYNTH_HLO)
+    # dot: out (64,64), contract 256 -> 2*64*64*256 flops, x12 trips
+    assert stats.flops == 2 * 64 * 64 * 256 * 12
+
+
+def test_hw_constants_present():
+    assert HW["peak_flops"] == 197e12
+    assert HW["hbm_bw"] == 819e9
+    assert HW["ici_bw"] == 50e9

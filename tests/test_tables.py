@@ -1,0 +1,98 @@
+"""FIB longest-prefix-match, PIT aggregation, Content Store caching."""
+
+from hypothesis import given, strategies as st
+
+from repro.core.names import Name
+from repro.core.packets import Data, Interest
+from repro.core.tables import ContentStore, Fib, Pit
+
+
+def test_fib_lpm_prefers_longest():
+    fib = Fib()
+    fib.register(Name.parse("/lidc/compute"), face_id=1)
+    fib.register(Name.parse("/lidc/compute/train/qwen2-0.5b"), face_id=2)
+    _, hops = fib.lookup(Name.parse("/lidc/compute/train/qwen2-0.5b/k=1"))
+    assert hops[0].face_id == 2
+    _, hops = fib.lookup(Name.parse("/lidc/compute/serve/x"))
+    assert hops[0].face_id == 1
+
+
+def test_fib_remove_face_purges_routes():
+    fib = Fib()
+    fib.register(Name.parse("/a"), 1)
+    fib.register(Name.parse("/a"), 2)
+    fib.remove_face(1)
+    _, hops = fib.lookup(Name.parse("/a/b"))
+    assert [h.face_id for h in hops] == [2]
+    fib.remove_face(2)
+    assert fib.lookup(Name.parse("/a/b")) == (None, [])
+
+
+def test_pit_aggregation_and_dup_nonce():
+    pit = Pit()
+    i1 = Interest(name=Name.parse("/x/y"))
+    e, new, dup = pit.insert(i1, in_face=1, now=0.0)
+    assert new and not dup
+    # same name, different consumer, different nonce -> aggregated
+    i2 = Interest(name=Name.parse("/x/y"))
+    e2, new2, dup2 = pit.insert(i2, in_face=2, now=0.0)
+    assert not new2 and not dup2 and e2 is e
+    assert e.in_faces == {1, 2}
+    # duplicate nonce (loop) -> dropped
+    _, _, dup3 = pit.insert(i1, in_face=3, now=0.0)
+    assert dup3
+
+
+def test_pit_expiry():
+    pit = Pit()
+    pit.insert(Interest(name=Name.parse("/x"), lifetime=1.0), 1, now=0.0)
+    assert pit.expire(now=0.5) == []
+    dead = pit.expire(now=1.5)
+    assert len(dead) == 1 and len(pit) == 0
+
+
+def test_pit_satisfy_prefix():
+    pit = Pit()
+    pit.insert(Interest(name=Name.parse("/x/y")), 1, now=0.0)
+    got = pit.satisfy(Name.parse("/x/y/z"))   # data name extends interest
+    assert len(got) == 1
+
+
+def test_cs_exact_and_freshness():
+    cs = ContentStore(capacity=10)
+    d = Data(name=Name.parse("/a/b"), content=b"v", freshness=5.0,
+             created_at=0.0)
+    cs.insert(d)
+    hit = cs.match(Interest(name=Name.parse("/a/b")), now=1.0)
+    assert hit is not None
+    stale = cs.match(Interest(name=Name.parse("/a/b"), must_be_fresh=True),
+                     now=100.0)
+    assert stale is None
+    ok = cs.match(Interest(name=Name.parse("/a/b"), must_be_fresh=True),
+                  now=2.0)
+    assert ok is not None
+
+
+def test_cs_lru_eviction():
+    cs = ContentStore(capacity=3)
+    for i in range(5):
+        cs.insert(Data(name=Name.parse(f"/n/{i}"), content=b"x"))
+    assert len(cs) == 3
+    assert cs.match(Interest(name=Name.parse("/n/0")), 0.0) is None
+    assert cs.match(Interest(name=Name.parse("/n/4")), 0.0) is not None
+
+
+def test_cs_prefix_match_flag():
+    cs = ContentStore()
+    cs.insert(Data(name=Name.parse("/a/b/seg=0"), content=b"x"))
+    assert cs.match(Interest(name=Name.parse("/a/b")), 0.0) is None
+    assert cs.match(Interest(name=Name.parse("/a/b"), can_be_prefix=True),
+                    0.0) is not None
+
+
+@given(st.lists(st.integers(0, 30), min_size=1, max_size=60))
+def test_cs_capacity_invariant(keys):
+    cs = ContentStore(capacity=8)
+    for k in keys:
+        cs.insert(Data(name=Name.parse(f"/k/{k}"), content=b"v"))
+    assert len(cs) <= 8
