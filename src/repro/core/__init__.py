@@ -3,29 +3,32 @@
 from .names import (COMPUTE_PREFIX, DATA_PREFIX, STATUS_PREFIX, Name,
                     canonical_job_name, encode_job, job_fields_of, parse_job)
 from .packets import Data, Interest, sign_data, verify_data
-from .tables import ContentStore, Fib, Pit
+from .tables import ContentStore, Fib, LinearFib, NextHop, Pit
 from .forwarder import Consumer, Forwarder, Nack, Network, link
-from .strategy import (BestRouteStrategy, CompletionTimeStrategy,
-                       LoadShareStrategy, MulticastStrategy, Strategy)
+from .strategy import (AdaptiveStrategy, BestRouteStrategy,
+                       CompletionTimeStrategy, LoadShareStrategy,
+                       MulticastStrategy, Strategy)
 from .jobs import Job, JobSpec, JobState, result_name_for
 from .validation import ValidationError, ValidatorRegistry, default_registry
 from .matchmaker import MatchError, Matchmaker, ServiceEndpoint
 from .cluster import ComputeCluster, ExecResult
 from .gateway import Gateway
-from .overlay import JobHandle, LidcClient, LidcSystem, Overlay
+from .overlay import (JobHandle, LidcClient, LidcSystem, MeshTopology,
+                      Overlay)
 from .scheduler import CompletionModel
 
 __all__ = [
     "Name", "canonical_job_name", "encode_job", "parse_job", "job_fields_of",
     "COMPUTE_PREFIX", "DATA_PREFIX", "STATUS_PREFIX",
     "Data", "Interest", "sign_data", "verify_data",
-    "ContentStore", "Fib", "Pit",
+    "ContentStore", "Fib", "LinearFib", "NextHop", "Pit",
     "Consumer", "Forwarder", "Nack", "Network", "link",
-    "Strategy", "BestRouteStrategy", "LoadShareStrategy", "MulticastStrategy",
+    "Strategy", "AdaptiveStrategy", "BestRouteStrategy", "LoadShareStrategy",
+    "MulticastStrategy",
     "CompletionTimeStrategy", "CompletionModel",
     "Job", "JobSpec", "JobState", "result_name_for",
     "ValidationError", "ValidatorRegistry", "default_registry",
     "MatchError", "Matchmaker", "ServiceEndpoint",
     "ComputeCluster", "ExecResult", "Gateway",
-    "JobHandle", "LidcClient", "LidcSystem", "Overlay",
+    "JobHandle", "LidcClient", "LidcSystem", "MeshTopology", "Overlay",
 ]

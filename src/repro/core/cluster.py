@@ -10,13 +10,12 @@ Table-I-style run times without hours of wall time.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from .forwarder import Forwarder, Network
-from .jobs import Job, JobSpec, JobState, result_name_for
-from .matchmaker import Matchmaker, MatchError, ServiceEndpoint
-from .names import Name
+from .jobs import Job, JobSpec, result_name_for
+from .matchmaker import Matchmaker, ServiceEndpoint
 
 __all__ = ["ComputeCluster", "ExecResult"]
 
@@ -52,7 +51,7 @@ class ComputeCluster:
     def __init__(self, net: Network, name: str, *, chips: int = 256,
                  hbm_gb_per_chip: float = 16.0, lake=None,
                  memory_model=None, region: str = "local",
-                 strategy=None):
+                 strategy=None, max_queue_depth: int = 0):
         self.net = net
         self.name = name
         self.chips = chips
@@ -62,7 +61,8 @@ class ComputeCluster:
         self.node = Forwarder(net, name=f"{name}-gateway", strategy=strategy)
         self.endpoints: List[ServiceEndpoint] = []
         self.matchmaker = Matchmaker(memory_model=memory_model,
-                                     hbm_gb_per_chip=hbm_gb_per_chip)
+                                     hbm_gb_per_chip=hbm_gb_per_chip,
+                                     max_queue_depth=max_queue_depth)
         self.jobs: Dict[str, Job] = {}
         self.free_chips = chips
         self.alive = True
@@ -95,13 +95,23 @@ class ComputeCluster:
 
     # -- job lifecycle -------------------------------------------------------
     def submit(self, spec: JobSpec, now: float) -> Job:
-        """Bind, admit and schedule a job. Raises MatchError if infeasible."""
+        """Bind, admit and schedule a job. Raises MatchError if infeasible.
+
+        When the matchmaker allows queued admission, a job whose grant
+        exceeds the currently free chips is parked Pending on the wait
+        queue and started by :meth:`_drain_waitq` as chips free up.
+        """
         endpoint, grant = self.matchmaker.match(spec, self.endpoints,
-                                                self.free_chips)
+                                                self.free_chips,
+                                                queue_depth=len(self._waitq),
+                                                total_chips=self.chips)
         job = Job(spec=spec, cluster=self.name, submitted_at=now,
                   granted_chips=grant, endpoint=endpoint.service)
         self.jobs[job.job_id] = job
-        self._start(job, endpoint, grant)
+        if grant <= self.free_chips:
+            self._start(job, endpoint, grant)
+        else:
+            self._waitq.append((job, endpoint, grant))
         return job
 
     def _start(self, job: Job, endpoint: ServiceEndpoint, grant: int) -> None:

@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import heapq
 import itertools
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from .names import Name
@@ -150,7 +150,7 @@ class Forwarder:
         # local producers: prefix -> handler
         self._producers: Dict[Tuple[str, ...], ProducerHandler] = {}
         self.stats = {"in_interest": 0, "in_data": 0, "in_nack": 0,
-                      "cs_hit": 0, "dropped": 0, "agg": 0}
+                      "cs_hit": 0, "dropped": 0, "agg": 0, "retx": 0}
 
     # -- wiring -------------------------------------------------------------
     def add_face(self, latency: float = 0.001) -> Face:
@@ -183,7 +183,14 @@ class Forwarder:
     def _on_interest(self, in_face: int, interest: Interest) -> None:
         now = self.net.now
         self.stats["in_interest"] += 1
-        self.pit.expire(now)
+        # expired entries are timeouts: teach the strategy that those
+        # upstreams went silent (a dark cluster never NACKs)
+        for dead in self.pit.expire(now):
+            for face_id, sent in dead.sent_at.items():
+                if face_id not in dead.resolved:
+                    dead.resolved.add(face_id)
+                    self._record_outcome(dead.name, face_id, False,
+                                         now - sent, now)
         if interest.hop_limit <= 0:
             self.stats["dropped"] += 1
             return
@@ -199,27 +206,48 @@ class Forwarder:
             if handler is not None:
                 self._dispatch_producer(handler, in_face, interest)
                 return
-        # 3. PIT insert (aggregation / duplicate suppression)
+        # 3. PIT insert (aggregation / duplicate suppression / retransmission)
+        prior = self.pit.get(interest.name)
+        is_retx = (prior is not None and in_face in prior.in_faces
+                   and interest.nonce not in prior.nonces)
         entry, is_new, dup = self.pit.insert(interest, in_face, now)
         if dup:
             self.stats["dropped"] += 1
             return
         if not is_new:
-            self.stats["agg"] += 1      # aggregated onto existing entry
+            if is_retx:
+                # NFD-style retransmission: the downstream is retrying, so
+                # the upstreams we tried are presumed slow/dead — forward
+                # to an *untried* upstream instead of silently aggregating
+                entry.retransmissions += 1
+                self.stats["retx"] += 1
+                self._forward(interest, entry, in_face, now,
+                              exclude_tried=True)
+            else:
+                self.stats["agg"] += 1  # aggregated onto existing entry
             return
         # 4. FIB lookup + strategy choice
-        matched, hops = self.fib.lookup(interest.name)
+        self._forward(interest, entry, in_face, now, nack_if_stuck=True)
+
+    def _forward(self, interest: Interest, entry, in_face: int, now: float,
+                 exclude_tried: bool = False, nack_if_stuck: bool = False
+                 ) -> None:
+        _, hops = self.fib.lookup(interest.name)
         live = [h for h in hops if h.healthy and not self.faces[h.face_id].down
-                and h.face_id != in_face]
+                and h.face_id != in_face
+                and not (exclude_tried and h.face_id in entry.out_faces)]
         if not live:
-            self.pit.satisfy(interest.name)
-            self._send(in_face, Nack(interest, "no-route"))
+            if nack_if_stuck:
+                self.pit.satisfy(interest.name)
+                self._send(in_face, Nack(interest, "no-route"))
             return
         chosen = self.strategy.choose(interest, entry, live, now)
         fwd = interest.decrement_hop()
         for h in chosen:
             entry.out_faces.add(h.face_id)
             entry.sent_at[h.face_id] = now
+            h.pending += 1
+            h.last_used = now
             self._send(h.face_id, fwd)
 
     def _dispatch_producer(self, handler: ProducerHandler, in_face: int,
@@ -254,13 +282,28 @@ class Forwarder:
         self.cs.insert(data)
         for entry in entries:
             # measurement feedback for strategies (rtt per upstream face)
-            if face_id in entry.sent_at:
-                rtt = now - entry.sent_at[face_id]
-                matched, _ = self.fib.lookup(entry.name)
-                if matched is not None:
-                    hop = self.fib.nexthops(matched).get(face_id)
-                    if hop is not None:
-                        hop.record(True, rtt)
+            if face_id in entry.sent_at and face_id not in entry.resolved:
+                entry.resolved.add(face_id)
+                sent = entry.sent_at[face_id]
+                self._record_outcome(entry.name, face_id, True, now - sent, now)
+                # upstreams tried in an *earlier* round that still lost the
+                # race were silent/slow-failing — teach the strategy.  Faces
+                # from the same round (multicast fanout) just release their
+                # outstanding-interest slot, with no verdict either way.
+                for f, t in entry.sent_at.items():
+                    if f in entry.resolved:
+                        continue
+                    entry.resolved.add(f)
+                    if t < sent:
+                        self._record_outcome(entry.name, f, False, now - t, now)
+                    else:
+                        self._release_pending(entry.name, f)
+            # entries satisfied without an outcome (e.g. the Data arrived via
+            # a face this entry never tried) still free their slots
+            for f in entry.sent_at:
+                if f not in entry.resolved:
+                    entry.resolved.add(f)
+                    self._release_pending(entry.name, f)
             for down in entry.in_faces:
                 if down != face_id and down in self.faces:
                     self._send(down, data)
@@ -273,11 +316,10 @@ class Forwarder:
         if entry is None:
             return
         # mark the upstream unhealthy for this prefix and try an alternate
-        matched, _ = self.fib.lookup(nack.name)
-        if matched is not None:
-            hop = self.fib.nexthops(matched).get(face_id)
-            if hop is not None:
-                hop.record(False)
+        if face_id in entry.sent_at and face_id not in entry.resolved:
+            entry.resolved.add(face_id)
+            self._record_outcome(nack.name, face_id, False,
+                                 now - entry.sent_at[face_id], now)
         _, hops = self.fib.lookup(nack.name)
         untried = [h for h in hops
                    if h.face_id not in entry.out_faces
@@ -288,15 +330,44 @@ class Forwarder:
             for h in chosen:
                 entry.out_faces.add(h.face_id)
                 entry.sent_at[h.face_id] = now
+                h.pending += 1
+                h.last_used = now
                 self._send(h.face_id, fwd)
             return
         # exhausted: propagate NACK downstream
         for entry in self.pit.satisfy(nack.name):
+            for f in entry.sent_at:
+                if f not in entry.resolved:
+                    entry.resolved.add(f)
+                    self._release_pending(entry.name, f)
             for down in entry.in_faces:
                 if down in self.faces:
                     self._send(down, nack)
 
     # -- helpers -----------------------------------------------------------
+    def _hop_for(self, name: Name, face_id: int):
+        matched, _ = self.fib.lookup(name)
+        if matched is None:
+            return None
+        return self.fib.nexthops(matched).get(face_id)
+
+    def _record_outcome(self, name: Name, face_id: int, ok: bool,
+                        rtt: float, now: float) -> None:
+        """Update per-nexthop moving stats and notify the strategy."""
+        hop = self._hop_for(name, face_id)
+        if hop is not None:
+            hop.record(ok, rtt)
+            if hop.pending > 0:
+                hop.pending -= 1
+        self.strategy.feedback(name, face_id, ok, rtt, now)
+
+    def _release_pending(self, name: Name, face_id: int) -> None:
+        """The interest is no longer outstanding on this face (the PIT entry
+        resolved elsewhere) — free the congestion slot, no verdict."""
+        hop = self._hop_for(name, face_id)
+        if hop is not None and hop.pending > 0:
+            hop.pending -= 1
+
     def _send(self, face_id: int, packet: Any) -> None:
         if face_id < 0:
             return
@@ -323,6 +394,8 @@ class Consumer:
         self.node = node
         self.name = name
         self.face = node.add_face(latency=0.0005)
+        # name -> in-flight request state; same-name expresses aggregate onto
+        # one upstream request (the consumer-side analog of PIT aggregation)
         self._pending: Dict[Tuple[str, ...], Dict[str, Any]] = {}
         self.face.connect(net, self._receive)
         self.nacks: List[Nack] = []
@@ -332,7 +405,13 @@ class Consumer:
                 on_fail: Optional[Callable[[str], None]] = None,
                 retries: int = 3) -> None:
         key = interest.name.components
-        self._pending[key] = {"on_data": on_data, "on_fail": on_fail,
+        st = self._pending.get(key)
+        if st is not None:
+            # aggregate: one request in flight, many waiters
+            st["waiters"].append((on_data, on_fail))
+            st["retries"] = max(st["retries"], retries)
+            return
+        self._pending[key] = {"waiters": [(on_data, on_fail)],
                               "retries": retries, "interest": interest,
                               "sent": self.net.now}
         self.net.schedule(0.0, lambda: self.node.receive(self.face.face_id, interest))
@@ -363,17 +442,29 @@ class Consumer:
                 self._arm_timeout(fresh)
             else:
                 del self._pending[key]
-                if st["on_fail"]:
-                    st["on_fail"]("timeout")
+                self._fail_waiters(st, "timeout")
 
-        self.net.schedule(interest.lifetime, timeout)
+        # retransmit *before* the upstream PIT entry expires (RTO < lifetime)
+        # so forwarders see a live entry + fresh nonce — the retransmission
+        # signal that lets them immediately try an untried upstream
+        self.net.schedule(interest.lifetime * 0.9, timeout)
+
+    @staticmethod
+    def _fail_waiters(st: Dict[str, Any], reason: str) -> None:
+        for _, on_fail in st["waiters"]:
+            if on_fail:
+                on_fail(reason)
 
     def _receive(self, packet: Any) -> None:
         if isinstance(packet, Data):
-            for key in list(self._pending):
-                if Name(key).is_prefix_of(packet.name) or key == packet.name.components:
-                    st = self._pending.pop(key)
-                    st["on_data"](packet)
+            # a Data answers every pending name that is a prefix of (or equal
+            # to) its name — walk the prefixes, don't scan the pending table
+            comps = packet.name.components
+            for i in range(len(comps) + 1):
+                st = self._pending.pop(comps[:i], None)
+                if st is not None:
+                    for on_data, _ in st["waiters"]:
+                        on_data(packet)
         elif isinstance(packet, Nack):
             self.nacks.append(packet)
             st = self._pending.get(packet.name.components)
@@ -381,5 +472,4 @@ class Consumer:
             # reach a cluster that just joined), but report if out of retries.
             if st is not None and st["retries"] == 0:
                 self._pending.pop(packet.name.components)
-                if st["on_fail"]:
-                    st["on_fail"](f"nack:{packet.reason}")
+                self._fail_waiters(st, f"nack:{packet.reason}")

@@ -18,8 +18,7 @@ Our gateway attaches three producers to the cluster's forwarder node:
 
 from __future__ import annotations
 
-import json
-from typing import Any, Callable, Dict, Optional
+from typing import Callable, Dict, Optional
 
 from .cluster import ComputeCluster
 from .forwarder import Nack

@@ -11,8 +11,8 @@ memory model, then grants chips.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Callable, List, Optional, Sequence, Tuple
 
 from .jobs import JobSpec
 
@@ -53,24 +53,30 @@ class ServiceEndpoint:
 
 
 class Matchmaker:
-    """Bind a validated JobSpec to an endpoint + chip grant."""
+    """Bind a validated JobSpec to an endpoint + chip grant.
+
+    ``max_queue_depth`` is the admission-control knob that closes the loop
+    with the forwarding strategies: when chips are busy but an endpoint is
+    otherwise feasible, up to that many jobs are admitted *queued* (the
+    cluster starts them as chips free up); past it the matchmaker raises,
+    the gateway NACKs, the NACK raises the upstream nexthop's loss EWMA,
+    and the adaptive strategy diverts subsequent Interests to a less
+    congested cluster — decentralized backpressure, no controller.
+    """
 
     def __init__(self, memory_model: Optional[MemoryModel] = None,
-                 hbm_gb_per_chip: float = 16.0):
+                 hbm_gb_per_chip: float = 16.0, max_queue_depth: int = 0):
         self.memory_model = memory_model
         self.hbm_bytes_per_chip = hbm_gb_per_chip * 1e9
+        self.max_queue_depth = max_queue_depth
 
-    def match(self, spec: JobSpec, endpoints: Sequence[ServiceEndpoint],
-              free_chips: int) -> Tuple[ServiceEndpoint, int]:
-        candidates = [e for e in endpoints if e.serves(spec)]
-        if not candidates:
-            raise MatchError(f"no endpoint serves app={spec.app} "
-                             f"arch={spec.arch} shape={spec.shape}")
-        want = spec.chips(default=1)
+    def _feasible(self, spec: JobSpec, candidates: Sequence[ServiceEndpoint],
+                  chip_budget: int, want: int
+                  ) -> List[Tuple[float, ServiceEndpoint, int]]:
         feasible: List[Tuple[float, ServiceEndpoint, int]] = []
         for e in candidates:
             grant = min(want, e.max_chips)
-            if grant < e.min_chips or grant > free_chips:
+            if grant < e.min_chips or grant > chip_budget:
                 continue
             if self.memory_model is not None:
                 est = self.memory_model(spec, grant)
@@ -78,7 +84,7 @@ class Matchmaker:
                     # try scaling chips up to fit memory, within the request
                     fitted = None
                     g = grant
-                    while g * 2 <= min(free_chips, e.max_chips, max(want, 1) * 8):
+                    while g * 2 <= min(chip_budget, e.max_chips, max(want, 1) * 8):
                         g *= 2
                         est2 = self.memory_model(spec, g)
                         if est2 is not None and est2 <= self.hbm_bytes_per_chip:
@@ -90,10 +96,31 @@ class Matchmaker:
             # score: prefer least-loaded, then most-specific arch match
             specificity = (1 if e.archs else 0) + (1 if e.shapes else 0)
             feasible.append((e.running - 0.1 * specificity, e, grant))
+        return feasible
+
+    def match(self, spec: JobSpec, endpoints: Sequence[ServiceEndpoint],
+              free_chips: int, *, queue_depth: int = 0,
+              total_chips: Optional[int] = None) -> Tuple[ServiceEndpoint, int]:
+        """Pick (endpoint, chip grant) for a job.
+
+        The returned grant may exceed ``free_chips`` when queued admission
+        applies (``queue_depth < max_queue_depth`` and the job fits the
+        cluster's *total* capacity) — the caller queues such jobs.
+        """
+        candidates = [e for e in endpoints if e.serves(spec)]
+        if not candidates:
+            raise MatchError(f"no endpoint serves app={spec.app} "
+                             f"arch={spec.arch} shape={spec.shape}")
+        want = spec.chips(default=1)
+        feasible = self._feasible(spec, candidates, free_chips, want)
+        if not feasible and queue_depth < self.max_queue_depth:
+            budget = total_chips if total_chips is not None else free_chips
+            feasible = self._feasible(spec, candidates, budget, want)
         if not feasible:
             raise MatchError(
                 f"no feasible endpoint for {spec.app}/{spec.arch} "
-                f"(want {want} chips, free {free_chips})")
+                f"(want {want} chips, free {free_chips}, "
+                f"queued {queue_depth}/{self.max_queue_depth})")
         feasible.sort(key=lambda t: (t[0], t[1].service))
         _, endpoint, grant = feasible[0]
         return endpoint, grant

@@ -14,19 +14,20 @@ examples, tests and benchmarks.
 
 from __future__ import annotations
 
+import random
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Set, Tuple
 
 from .cluster import ComputeCluster
 from .forwarder import Consumer, Face, Forwarder, Network, link
 from .gateway import Gateway
-from .jobs import JobSpec
 from .names import (COMPUTE_PREFIX, DATA_PREFIX, STATUS_PREFIX, Name,
                     canonical_job_name)
 from .packets import Data, Interest
 from .strategy import BestRouteStrategy, Strategy
 
-__all__ = ["Overlay", "LidcClient", "LidcSystem"]
+__all__ = ["Overlay", "MeshTopology", "LidcClient", "LidcSystem"]
 
 
 class Overlay:
@@ -99,6 +100,210 @@ class Overlay:
         cluster.restore()
         edge_face, _ = self.links[name]
         edge_face.down = False
+
+
+# ---------------------------------------------------------------------------
+# Multi-hop mesh topologies (the 100-cluster scale story)
+# ---------------------------------------------------------------------------
+
+class MeshTopology:
+    """N forwarders wired into a ring / tree / random mesh.
+
+    The star :class:`Overlay` above models one edge router; this models the
+    *multi-organization* deployments the paper targets — every node is an
+    independent NDN forwarder, producers announce prefixes from arbitrary
+    nodes, and routes are installed along shortest paths (the stand-in for
+    NLSR flooding in the paper's testbed).  Equal-cost next hops are all
+    installed, so strategies see real multipath and failover choices.
+
+    Churn is first-class: :meth:`leave` gracefully withdraws a node's
+    announcements, :meth:`fail_node` makes it go dark (routes stay, packets
+    vanish — the hard case), :meth:`heal_node` brings it back, and
+    :meth:`add_node` grows the mesh mid-run.
+    """
+
+    KINDS = ("ring", "tree", "random")
+
+    def __init__(self, net: Network, n: int, kind: str = "ring", *,
+                 seed: int = 0, extra_edges: Optional[int] = None,
+                 latency: float = 0.001,
+                 strategy_factory: Optional[Callable[[int], Strategy]] = None):
+        if kind not in self.KINDS:
+            raise ValueError(f"unknown topology kind {kind!r}; want {self.KINDS}")
+        self.net = net
+        self.kind = kind
+        self.latency = latency
+        self._strategy_factory = strategy_factory
+        self.nodes: List[Forwarder] = []
+        self.adjacency: Dict[int, Set[int]] = {}
+        self.down: Set[int] = set()
+        # (i, j) -> the face on node i that leads to node j
+        self.faces: Dict[Tuple[int, int], Face] = {}
+        # (origin, prefix key) -> [(node idx, face_id)] routes we installed
+        self._announcements: Dict[Tuple[int, Tuple[str, ...]],
+                                  List[Tuple[int, int]]] = {}
+        # (node idx, prefix key, face_id) -> announcement refcount; two
+        # origins of one anycast prefix can share a (node, face) route, and
+        # withdrawing one must not sever the other's
+        self._route_refs: Dict[Tuple[int, Tuple[str, ...], int], int] = {}
+        # origin -> prefixes its local producers serve (drives re-announce)
+        self._producer_prefixes: Dict[int, List[Name]] = {}
+        self._bfs_cache: Dict[int, Tuple[Dict[int, int], Dict[int, List[int]]]] = {}
+        for _ in range(n):
+            self.add_node()
+        rng = random.Random(seed)
+        if kind == "ring":
+            for i in range(n):
+                self.connect(i, (i + 1) % n)
+        elif kind == "tree":
+            for i in range(1, n):
+                self.connect(i, (i - 1) // 2)
+        else:  # random: spanning tree + extra chords, deterministic by seed
+            for i in range(1, n):
+                self.connect(i, rng.randrange(i))
+            chords = n // 3 if extra_edges is None else extra_edges
+            for _ in range(chords):
+                a, b = rng.randrange(n), rng.randrange(n)
+                if a != b:
+                    self.connect(a, b)
+
+    # -- construction / membership ------------------------------------------
+    def add_node(self, name: Optional[str] = None) -> int:
+        idx = len(self.nodes)
+        strategy = (self._strategy_factory(idx)
+                    if self._strategy_factory is not None else None)
+        self.nodes.append(Forwarder(self.net, name or f"mesh{idx}",
+                                    strategy=strategy))
+        self.adjacency[idx] = set()
+        self._bfs_cache.clear()
+        return idx
+
+    def connect(self, i: int, j: int) -> None:
+        if j in self.adjacency[i] or i == j:
+            return
+        fa, fb = link(self.net, self.nodes[i], self.nodes[j], self.latency)
+        self.faces[(i, j)] = fa
+        self.faces[(j, i)] = fb
+        self.adjacency[i].add(j)
+        self.adjacency[j].add(i)
+        self._bfs_cache.clear()
+
+    # -- shortest-path route installation ------------------------------------
+    def _bfs(self, origin: int) -> Tuple[Dict[int, int], Dict[int, List[int]]]:
+        """Distances from origin + each node's equal-cost next hops toward it.
+
+        Nodes currently ``down`` are invisible — routes computed after a
+        failure (see :meth:`refresh_routes`) steer around them.
+        """
+        cached = self._bfs_cache.get(origin)
+        if cached is not None:
+            return cached
+        dist: Dict[int, int] = {origin: 0}
+        q = deque([origin])
+        while q:
+            u = q.popleft()
+            for v in self.adjacency[u]:
+                if v not in dist and v not in self.down:
+                    dist[v] = dist[u] + 1
+                    q.append(v)
+        nexthops: Dict[int, List[int]] = {}
+        for u, d in dist.items():
+            if u == origin:
+                continue
+            nexthops[u] = sorted(v for v in self.adjacency[u]
+                                 if dist.get(v, 1 << 30) == d - 1)
+        self._bfs_cache[origin] = (dist, nexthops)
+        return dist, nexthops
+
+    def announce(self, origin: int, prefix: Name) -> None:
+        """Install routes toward ``origin`` for ``prefix`` on every node.
+
+        Every shortest-path next hop is installed at cost = distance, and
+        equal-distance *lateral* neighbors at cost = distance + 0.5 —
+        detour routes that strategies only reach after the primaries are
+        exhausted, which is what lets forwarding route around a dark node
+        without waiting for routing to re-converge (PIT nonce suppression
+        keeps lateral forwarding loop-free).
+        """
+        key = (origin, prefix.components)
+        if key in self._announcements or origin in self.down:
+            return
+        dist, nexthops = self._bfs(origin)
+        installed: List[Tuple[int, int]] = []
+
+        def install(u: int, face: Face, cost: float) -> None:
+            self.nodes[u].register_route(prefix, face, cost=cost)
+            ref = (u, prefix.components, face.face_id)
+            self._route_refs[ref] = self._route_refs.get(ref, 0) + 1
+            installed.append((u, face.face_id))
+
+        for u, vias in nexthops.items():
+            for v in vias:
+                install(u, self.faces[(u, v)], float(dist[u]))
+            for v in self.adjacency[u]:
+                if dist.get(v) == dist[u] and v != origin:
+                    install(u, self.faces[(u, v)], dist[u] + 0.5)
+        self._announcements[key] = installed
+
+    def withdraw(self, origin: int, prefix: Name) -> None:
+        """Remove only the routes this origin's announcement installed."""
+        for u, face_id in self._announcements.pop((origin, prefix.components), ()):
+            ref = (u, prefix.components, face_id)
+            remaining = self._route_refs.get(ref, 1) - 1
+            if remaining <= 0:
+                self._route_refs.pop(ref, None)
+                self.nodes[u].fib.unregister(prefix, face_id)
+            else:
+                self._route_refs[ref] = remaining
+
+    def attach_producer(self, origin: int, prefix: Name, handler) -> None:
+        """Producer app at a node: local handler + mesh-wide announcement."""
+        self.nodes[origin].attach_producer(prefix, handler)
+        self._producer_prefixes.setdefault(origin, []).append(prefix)
+        self.announce(origin, prefix)
+
+    def consumer_at(self, idx: int, name: str = "consumer") -> Consumer:
+        return Consumer(self.net, self.nodes[idx], name=name)
+
+    def refresh_routes(self) -> None:
+        """Routing re-convergence (the NLSR stand-in): recompute every
+        announcement's shortest paths around whatever is currently down."""
+        for origin, comps in list(self._announcements):
+            self.withdraw(origin, Name(comps))
+        self._bfs_cache.clear()
+        for origin, prefixes in self._producer_prefixes.items():
+            if origin not in self.down:
+                for p in prefixes:
+                    self.announce(origin, p)
+
+    # -- churn ----------------------------------------------------------------
+    def leave(self, idx: int) -> None:
+        """Graceful leave: withdraw announcements, then drop the links."""
+        for origin, comps in list(self._announcements):
+            if origin == idx:
+                self.withdraw(origin, Name(comps))
+        self._producer_prefixes.pop(idx, None)
+        self.fail_node(idx)
+
+    def fail_node(self, idx: int) -> None:
+        """Node goes dark without withdrawing routes (the hard case)."""
+        self.down.add(idx)
+        self._bfs_cache.clear()
+        for j in self.adjacency[idx]:
+            self.faces[(idx, j)].down = True
+            self.faces[(j, idx)].down = True
+
+    def heal_node(self, idx: int) -> None:
+        self.down.discard(idx)
+        self._bfs_cache.clear()
+        for j in self.adjacency[idx]:
+            if j in self.down:
+                continue        # the far end is still dark — keep the link cut
+            self.faces[(idx, j)].down = False
+            self.faces[(j, idx)].down = False
+
+    def __len__(self) -> int:
+        return len(self.nodes)
 
 
 # ---------------------------------------------------------------------------

@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import math
 from collections import defaultdict
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Dict, List, Mapping, Optional, Tuple
 
 import numpy as np
@@ -60,9 +60,17 @@ class _Ewma:
 
 
 class CompletionModel:
-    """Online completion-time predictor over (job, cluster) pairs."""
+    """Online completion-time predictor over (job, cluster) pairs.
 
-    def __init__(self, ridge: float = 1e-2):
+    Besides run-time observations, the model ingests *transport telemetry*
+    from the forwarding strategies (Data vs Nack outcomes per upstream
+    face) and exposes it as a multiplicative penalty — a cluster behind a
+    lossy or congested path is predicted slower even if its compute times
+    are good, which is exactly the signal the paper's "intelligence in
+    the network" needs to route around degradation.
+    """
+
+    def __init__(self, ridge: float = 1e-2, transport_loss_weight: float = 8.0):
         self._exact: Dict[Tuple, Dict[int, _Ewma]] = defaultdict(dict)
         self._ridge = ridge
         self._dim = len(_features({}))
@@ -70,6 +78,10 @@ class CompletionModel:
         self._xtx: Dict[int, np.ndarray] = {}
         self._xty: Dict[int, np.ndarray] = {}
         self.observations: List[Tuple[Tuple, int, float]] = []
+        # per-face transport health: EWMA rtt + EWMA loss from strategy feedback
+        self._transport_rtt: Dict[int, _Ewma] = {}
+        self._transport_loss: Dict[int, float] = {}
+        self.transport_loss_weight = transport_loss_weight
 
     # -- learning ------------------------------------------------------------
     def observe(self, fields: Mapping[str, Any], face_id: int,
@@ -84,6 +96,24 @@ class CompletionModel:
         self._xtx[face_id] += np.outer(x, x)
         self._xty[face_id] += x * y
         self.observations.append((key, face_id, duration))
+
+    def observe_transport(self, face_id: int, ok: bool, rtt: float,
+                          alpha: float = 0.3) -> None:
+        """Ingest a Data/Nack outcome from the forwarding strategy layer."""
+        loss = self._transport_loss.get(face_id, 0.0)
+        if ok:
+            self._transport_rtt.setdefault(face_id, _Ewma()).update(rtt)
+            self._transport_loss[face_id] = (1 - alpha) * loss
+        else:
+            self._transport_loss[face_id] = (1 - alpha) * loss + alpha
+
+    def transport_penalty(self, face_id: int) -> float:
+        """Multiplier (>= 1) applied to completion predictions for a face."""
+        return 1.0 + self.transport_loss_weight * self._transport_loss.get(face_id, 0.0)
+
+    def transport_rtt(self, face_id: int) -> Optional[float]:
+        ewma = self._transport_rtt.get(face_id)
+        return ewma.value if ewma is not None and ewma.n > 0 else None
 
     # -- inference -----------------------------------------------------------
     def predict(self, fields: Mapping[str, Any], face_id: int

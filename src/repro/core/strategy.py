@@ -12,15 +12,26 @@ point where that choice is made:
 * :class:`MulticastStrategy` — send to k upstreams at once; with PIT
   dedup of the returning Data this is the straggler-mitigation primitive
   (first cluster to answer wins; duplicates are suppressed).
+* :class:`AdaptiveStrategy` — congestion/RTT-aware: ranks next-hops by an
+  exponentially-weighted RTT inflated by observed loss (Data vs Nack /
+  timeout outcomes) and outstanding-interest pressure; on *cold* prefixes
+  (no measurements yet) it parallel-probes several upstreams and lets the
+  first Data teach it the ranking.
 * :class:`CompletionTimeStrategy` — the paper's §VII future-work
   "intelligence in the network": rank clusters by a learned
   completion-time model (see core/scheduler.py) fed by Table-I-style
-  observations.
+  observations, now blended with the transport telemetry the adaptive
+  layer collects.
+
+Strategies receive *feedback*: the forwarder calls :meth:`Strategy.feedback`
+for every Data (ok=True, with the measured RTT) and Nack (ok=False) that
+resolves a pending Interest, after updating the per-nexthop moving stats
+on the FIB leaf.  Stateless strategies ignore it; learning strategies
+(adaptive, completion-time) consume it.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 from .names import Name, job_fields_of
@@ -32,6 +43,7 @@ __all__ = [
     "BestRouteStrategy",
     "LoadShareStrategy",
     "MulticastStrategy",
+    "AdaptiveStrategy",
     "CompletionTimeStrategy",
 ]
 
@@ -40,6 +52,14 @@ class Strategy:
     def choose(self, interest: Interest, entry: PitEntry,
                nexthops: List[NextHop], now: float) -> List[NextHop]:
         raise NotImplementedError
+
+    def feedback(self, name: Name, face_id: int, ok: bool, rtt: float,
+                 now: float) -> None:
+        """Outcome notification for a previously-forwarded Interest.
+
+        Called by the forwarder when Data (``ok=True``, with measured RTT)
+        or a Nack (``ok=False``) resolves a PIT entry.  Default: no-op.
+        """
 
 
 class BestRouteStrategy(Strategy):
@@ -88,18 +108,89 @@ class MulticastStrategy(Strategy):
         return ranked[: self.k]
 
 
+class AdaptiveStrategy(Strategy):
+    """Congestion/RTT-aware ranking learned from Data/Nack outcomes.
+
+    Each FIB leaf's :class:`~repro.core.tables.NextHop` carries an EWMA
+    RTT, an EWMA loss rate and an outstanding-interest counter, all kept
+    current by the forwarder's measurement feedback.  The strategy ranks
+    next-hops by :meth:`NextHop.score` — EWMA RTT inflated by loss and
+    pressure — so an upstream that starts NACKing or timing out decays
+    out of the top slot within a handful of interests, and recovers the
+    same way (the EWMA forgets).
+
+    Cold prefixes (no measured next-hop yet) are *parallel-probed*: the
+    Interest fans to up to ``probe_fanout`` upstreams at once; PIT dedup
+    keeps duplicate answers from propagating, and the first Data seeds
+    the RTT ranking.  Every ``explore_every``-th decision additionally
+    tries the best unmeasured hop alongside the incumbent, so newly
+    announced routes get discovered without randomness (the virtual clock
+    stays deterministic).
+    """
+
+    def __init__(self, probe_fanout: int = 2, explore_every: int = 16,
+                 loss_weight: float = 8.0) -> None:
+        self.probe_fanout = max(1, probe_fanout)
+        self.explore_every = max(2, explore_every)
+        self.loss_weight = loss_weight
+        self._decisions = 0
+        self.probes = 0
+        self.explorations = 0
+
+    def _rank(self, nexthops: List[NextHop]) -> List[NextHop]:
+        return sorted(
+            nexthops,
+            key=lambda h: (h.score(loss_weight=self.loss_weight), h.cost, h.face_id))
+
+    def choose(self, interest, entry, nexthops, now):
+        self._decisions += 1
+        measured = [h for h in nexthops if h.measured]
+        if not measured:
+            # cold prefix: parallel probe the cheapest upstreams
+            self.probes += 1
+            ranked = sorted(nexthops, key=lambda h: (h.cost, h.face_id))
+            return ranked[: self.probe_fanout]
+        ranked = self._rank(measured)
+        untried = [h for h in ranked if h.face_id not in entry.out_faces]
+        best = untried[0] if untried else ranked[0]
+        chosen = [best]
+        # exploration: co-probe the least-recently-used alternative so new
+        # routes get discovered and degraded ones get a chance to recover —
+        # immediately when the incumbent itself looks unhealthy, otherwise
+        # on a deterministic cadence (the virtual clock stays reproducible)
+        alternates = [h for h in nexthops
+                      if h.face_id != best.face_id
+                      and h.face_id not in entry.out_faces]
+        if alternates and (best.loss_ewma > 0.5
+                           or self._decisions % self.explore_every == 0):
+            self.explorations += 1
+            chosen.append(min(alternates,
+                              key=lambda h: (h.last_used, h.cost, h.face_id)))
+        return chosen
+
+
 class CompletionTimeStrategy(Strategy):
     """Rank clusters by predicted completion time for *this job name*.
 
     The predictor (core/scheduler.CompletionModel) learns per
     (app, arch, shape) from observed run times — the "deploy intelligence
     in the network ... learn from this data and pick the optimal
-    configuration" loop the paper sketches from its Table I.
+    configuration" loop the paper sketches from its Table I.  Predictions
+    are inflated by the transport-level loss the adaptive layer observes
+    (a fast cluster behind a flapping link is not fast).
     """
 
     def __init__(self, model, fallback: Optional[Strategy] = None) -> None:
         self.model = model
-        self.fallback = fallback or BestRouteStrategy()
+        self.fallback = fallback or AdaptiveStrategy()
+
+    def feedback(self, name, face_id, ok, rtt, now):
+        # teach the completion model about transport health, and pass the
+        # signal through to the fallback in case it learns too
+        observe = getattr(self.model, "observe_transport", None)
+        if observe is not None:
+            observe(face_id, ok, rtt)
+        self.fallback.feedback(name, face_id, ok, rtt, now)
 
     def choose(self, interest, entry, nexthops, now):
         fields = job_fields_of(interest.name)
@@ -110,6 +201,9 @@ class CompletionTimeStrategy(Strategy):
             pred = self.model.predict(fields, face_id=h.face_id)
             if pred is None:
                 pred = h.rtt_ewma if h.rtt_ewma > 0 else 1e6 + h.cost
+            penalty = getattr(self.model, "transport_penalty", None)
+            if penalty is not None:
+                pred *= penalty(h.face_id)
             scored.append((pred + h.rtt_ewma * 0.1, h))
         scored.sort(key=lambda t: (t[0], t[1].face_id))
         untried = [h for _, h in scored if h.face_id not in entry.out_faces]

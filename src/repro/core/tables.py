@@ -1,19 +1,29 @@
 """FIB, PIT and Content Store — the three NDN forwarding tables.
 
 * FIB: longest-prefix-match over announced name prefixes -> next-hop faces,
-  with per-nexthop cost and health (strategies rank on these).
+  with per-nexthop cost and health (strategies rank on these).  The match
+  runs over a *compressed name-component trie* so a lookup costs
+  O(len(name)) regardless of how many prefixes the overlay announces —
+  the linear-scan implementation survives as :class:`LinearFib`, the
+  benchmark baseline and the property-test oracle.
 * PIT: pending Interests; aggregates same-name requests (many consumers,
   one upstream fetch), suppresses duplicate nonces (loop prevention), and
   expires entries at interest lifetime — expiry is what drives
-  retransmission and therefore failover.
-* Content Store: LRU cache of Data packets.  This is simultaneously NDN's
-  in-network cache and the paper's §VII future-work *result cache* —
-  because job names are canonical, two identical compute requests hash to
-  the same name and the second is served from the CS.
+  retransmission and therefore failover.  Entries are hash-indexed and
+  expiry rides a lazy min-heap, so neither satisfaction nor expiry scans
+  the table.
+* Content Store: LRU cache of Data packets with a prefix hash-index so
+  ``can_be_prefix`` matches and prefix invalidation are index lookups,
+  not scans.  This is simultaneously NDN's in-network cache and the
+  paper's §VII future-work *result cache* — because job names are
+  canonical, two identical compute requests hash to the same name and
+  the second is served from the CS.
 """
 
 from __future__ import annotations
 
+import heapq
+import itertools
 from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Dict, Iterable, List, Optional, Set, Tuple
@@ -21,7 +31,9 @@ from typing import Dict, Iterable, List, Optional, Set, Tuple
 from .names import Name
 from .packets import Data, Interest
 
-__all__ = ["Fib", "NextHop", "Pit", "PitEntry", "ContentStore"]
+__all__ = ["Fib", "LinearFib", "NextHop", "Pit", "PitEntry", "ContentStore"]
+
+Key = Tuple[str, ...]
 
 
 # ---------------------------------------------------------------------------
@@ -35,22 +47,215 @@ class NextHop:
     healthy: bool = True
     # moving success statistics maintained by strategies / measurements
     rtt_ewma: float = 0.0
+    loss_ewma: float = 0.0
     successes: int = 0
     failures: int = 0
+    pending: int = 0          # interests forwarded, not yet answered
+    last_used: float = 0.0    # when a strategy last forwarded through here
 
     def record(self, ok: bool, rtt: float = 0.0, alpha: float = 0.3) -> None:
         if ok:
             self.successes += 1
             self.rtt_ewma = rtt if self.rtt_ewma == 0 else (1 - alpha) * self.rtt_ewma + alpha * rtt
+            self.loss_ewma = (1 - alpha) * self.loss_ewma
         else:
             self.failures += 1
+            self.loss_ewma = (1 - alpha) * self.loss_ewma + alpha
+
+    @property
+    def measured(self) -> bool:
+        return (self.successes + self.failures) > 0
+
+    def score(self, rtt_floor: float = 1e-4, loss_weight: float = 8.0) -> float:
+        """Congestion/RTT score used by adaptive strategies (lower = better)."""
+        rtt = self.rtt_ewma if self.rtt_ewma > 0 else rtt_floor
+        return rtt * (1.0 + loss_weight * self.loss_ewma) * (1.0 + 0.25 * self.pending)
+
+
+class _TrieNode:
+    """A node of the compressed (radix) component trie.
+
+    ``label`` is the component run on the edge *into* this node; ``hops``
+    is non-None iff an announced prefix terminates here.
+    """
+
+    __slots__ = ("label", "children", "hops")
+
+    def __init__(self, label: Key = ()):
+        self.label: Key = label
+        self.children: Dict[str, "_TrieNode"] = {}
+        self.hops: Optional[Dict[int, NextHop]] = None
 
 
 class Fib:
-    """Longest-prefix-match forwarding table."""
+    """Longest-prefix-match forwarding table over a compressed trie.
+
+    Public API is identical to the historical linear implementation
+    (:class:`LinearFib`); only the lookup complexity changed — O(len(name))
+    component comparisons instead of O(len(name) * table size).
+    """
 
     def __init__(self) -> None:
-        self._table: Dict[Tuple[str, ...], Dict[int, NextHop]] = {}
+        self._root = _TrieNode()
+        # exact-match mirror of trie terminals: key -> hops (same dict object)
+        self._entries: Dict[Key, Dict[int, NextHop]] = {}
+        # face -> announced prefixes through it (makes remove_face O(routes))
+        self._by_face: Dict[int, Set[Key]] = {}
+        self.lookups = 0
+
+    # -- trie plumbing -----------------------------------------------------
+    def _insert_node(self, comps: Key) -> _TrieNode:
+        node = self._root
+        i = 0
+        while i < len(comps):
+            child = node.children.get(comps[i])
+            if child is None:
+                leaf = _TrieNode(comps[i:])
+                node.children[comps[i]] = leaf
+                return leaf
+            label = child.label
+            m = 0
+            while (m < len(label) and i + m < len(comps)
+                   and label[m] == comps[i + m]):
+                m += 1
+            if m < len(label):
+                # split the edge at m: child keeps the head, `rest` the tail
+                rest = _TrieNode(label[m:])
+                rest.children = child.children
+                rest.hops = child.hops
+                child.label = label[:m]
+                child.children = {label[m]: rest}
+                child.hops = None
+            node = child
+            i += m
+        return node
+
+    def _prune(self, path: List[_TrieNode]) -> None:
+        """Remove/merge empty nodes after a delete (path is root..leaf)."""
+        for idx in range(len(path) - 1, 0, -1):
+            node, parent = path[idx], path[idx - 1]
+            if node.hops is not None:
+                break
+            if not node.children:
+                del parent.children[node.label[0]]
+            elif len(node.children) == 1:
+                (only,) = node.children.values()
+                only.label = node.label + only.label
+                parent.children[node.label[0]] = only
+            else:
+                break
+
+    def _walk(self, comps: Key) -> Optional[List[_TrieNode]]:
+        """Exact descent to the node terminating ``comps``; None if absent."""
+        node = self._root
+        path = [node]
+        i = 0
+        while i < len(comps):
+            child = node.children.get(comps[i])
+            if child is None:
+                return None
+            label = child.label
+            if comps[i:i + len(label)] != label:
+                return None
+            i += len(label)
+            node = child
+            path.append(node)
+        return path if node.hops is not None else None
+
+    # -- public API --------------------------------------------------------
+    def register(self, prefix: Name, face_id: int, cost: float = 1.0) -> None:
+        key = prefix.components
+        hops = self._entries.get(key)
+        if hops is None:
+            hops = {}
+            self._entries[key] = hops
+            self._insert_node(key).hops = hops
+        if face_id in hops:
+            hops[face_id].cost = min(hops[face_id].cost, cost)
+            hops[face_id].healthy = True
+        else:
+            hops[face_id] = NextHop(face_id=face_id, cost=cost)
+        self._by_face.setdefault(face_id, set()).add(key)
+
+    def unregister(self, prefix: Name, face_id: Optional[int] = None) -> None:
+        key = prefix.components
+        hops = self._entries.get(key)
+        if hops is None:
+            return
+        if face_id is None:
+            for fid in list(hops):
+                self._by_face.get(fid, set()).discard(key)
+            hops.clear()
+        else:
+            if hops.pop(face_id, None) is not None:
+                self._by_face.get(face_id, set()).discard(key)
+        if not hops:
+            del self._entries[key]
+            path = self._walk(key)
+            if path is not None:
+                path[-1].hops = None
+                self._prune(path)
+
+    def remove_face(self, face_id: int) -> None:
+        """A face died (cluster left / link failure): purge every route."""
+        for key in list(self._by_face.get(face_id, ())):
+            self.unregister(Name(key), face_id)
+        self._by_face.pop(face_id, None)
+
+    def lookup(self, name: Name) -> Tuple[Optional[Name], List[NextHop]]:
+        """Longest-prefix match; returns (matched_prefix, nexthops)."""
+        self.lookups += 1
+        comps = name.components
+        n = len(comps)
+        node = self._root
+        i = 0
+        best_depth = -1
+        best_hops: Optional[Dict[int, NextHop]] = None
+        if node.hops:
+            best_depth, best_hops = 0, node.hops
+        while i < n:
+            child = node.children.get(comps[i])
+            if child is None:
+                break
+            label = child.label
+            ln = len(label)
+            if ln > n - i:
+                break
+            if ln > 1:
+                # label[0] already matched via the children key
+                j = 1
+                while j < ln and label[j] == comps[i + j]:
+                    j += 1
+                if j < ln:
+                    break
+            i += ln
+            node = child
+            if node.hops:
+                best_depth, best_hops = i, node.hops
+        if best_hops:
+            return (Name(comps[:best_depth]),
+                    sorted(best_hops.values(), key=lambda h: h.cost))
+        return None, []
+
+    def prefixes(self) -> Iterable[Name]:
+        return (Name(c) for c in self._entries)
+
+    def nexthops(self, prefix: Name) -> Dict[int, NextHop]:
+        return self._entries.get(prefix.components, {})
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+
+class LinearFib:
+    """Reference linear-scan FIB: the benchmark baseline and the obviously-
+    correct property-test oracle the trie must agree with.  Lookup scans
+    every announced prefix for the longest component-wise match — O(table
+    size) per lookup, which is exactly what the trie exists to avoid."""
+
+    def __init__(self) -> None:
+        self._table: Dict[Key, Dict[int, NextHop]] = {}
+        self.lookups = 0
 
     def register(self, prefix: Name, face_id: int, cost: float = 1.0) -> None:
         hops = self._table.setdefault(prefix.components, {})
@@ -72,19 +277,23 @@ class Fib:
             del self._table[prefix.components]
 
     def remove_face(self, face_id: int) -> None:
-        """A face died (cluster left / link failure): purge every route."""
         for prefix in list(self._table):
             self._table[prefix].pop(face_id, None)
             if not self._table[prefix]:
                 del self._table[prefix]
 
     def lookup(self, name: Name) -> Tuple[Optional[Name], List[NextHop]]:
-        """Longest-prefix match; returns (matched_prefix, nexthops)."""
-        for prefix in name.prefixes():
-            hops = self._table.get(prefix.components)
-            if hops:
-                return prefix, sorted(hops.values(), key=lambda h: h.cost)
-        return None, []
+        self.lookups += 1
+        comps = name.components
+        best: Optional[Key] = None
+        for key, hops in self._table.items():
+            if (hops and len(key) <= len(comps) and comps[:len(key)] == key
+                    and (best is None or len(key) > len(best))):
+                best = key
+        if best is None:
+            return None, []
+        return (Name(best),
+                sorted(self._table[best].values(), key=lambda h: h.cost))
 
     def prefixes(self) -> Iterable[Name]:
         return (Name(c) for c in self._table)
@@ -108,14 +317,23 @@ class PitEntry:
     out_faces: Set[int] = field(default_factory=set)    # upstreams tried
     nonces: Set[int] = field(default_factory=set)
     sent_at: Dict[int, float] = field(default_factory=dict)  # face -> send time
+    resolved: Set[int] = field(default_factory=set)     # upstreams with a recorded outcome
     retransmissions: int = 0
 
 
 class Pit:
-    """Pending Interest Table with aggregation and nonce loop-suppression."""
+    """Pending Interest Table with aggregation and nonce loop-suppression.
+
+    Satisfaction walks the *prefixes of the Data name* (a Data satisfies an
+    entry iff the entry's name is a prefix of, or equal to, the Data name),
+    so it is O(len(name)) hash probes.  Expiry is a lazy min-heap, so a
+    forwarder ticking the PIT per packet pays O(expired) not O(pending).
+    """
 
     def __init__(self) -> None:
-        self._table: Dict[Tuple[str, ...], PitEntry] = {}
+        self._table: Dict[Key, PitEntry] = {}
+        self._expiry_heap: List[Tuple[float, int, Key]] = []
+        self._seq = itertools.count()
 
     def insert(self, interest: Interest, in_face: int, now: float
                ) -> Tuple[PitEntry, bool, bool]:
@@ -132,22 +350,27 @@ class Pit:
             entry.in_faces.add(in_face)
             entry.nonces.add(interest.nonce)
             self._table[key] = entry
+            heapq.heappush(self._expiry_heap, (entry.expiry, next(self._seq), key))
             return entry, True, False
         if interest.nonce in entry.nonces:
             return entry, False, True          # looped duplicate: drop
         entry.nonces.add(interest.nonce)
         entry.in_faces.add(in_face)
-        entry.expiry = max(entry.expiry, now + interest.lifetime)
+        extended = now + interest.lifetime
+        if extended > entry.expiry:
+            entry.expiry = extended
+            heapq.heappush(self._expiry_heap, (extended, next(self._seq), key))
         return entry, False, False
 
     def satisfy(self, name: Name) -> List[PitEntry]:
         """Data arrived: pop every entry whose name it satisfies (exact or
         the Data name extends the Interest name)."""
         out = []
-        for key in list(self._table):
-            entry_name = Name(key)
-            if key == name.components or entry_name.is_prefix_of(name):
-                out.append(self._table.pop(key))
+        comps = name.components
+        for i in range(len(comps) + 1):
+            entry = self._table.pop(comps[:i], None)
+            if entry is not None:
+                out.append(entry)
         return out
 
     def get(self, name: Name) -> Optional[PitEntry]:
@@ -155,8 +378,16 @@ class Pit:
 
     def expire(self, now: float) -> List[PitEntry]:
         """Pop expired entries (drives retransmission / failover upstream)."""
-        dead = [k for k, e in self._table.items() if e.expiry <= now]
-        return [self._table.pop(k) for k in dead]
+        dead: List[PitEntry] = []
+        heap = self._expiry_heap
+        while heap and heap[0][0] <= now:
+            _, _, key = heapq.heappop(heap)
+            entry = self._table.get(key)
+            # entry may be gone (satisfied) or extended (a fresher heap
+            # record exists for it) — lazy deletion skips both cases.
+            if entry is not None and entry.expiry <= now:
+                dead.append(self._table.pop(key))
+        return dead
 
     def __len__(self) -> int:
         return len(self._table)
@@ -167,36 +398,67 @@ class Pit:
 # ---------------------------------------------------------------------------
 
 class ContentStore:
-    """LRU cache of Data packets; doubles as the paper's result cache."""
+    """LRU cache of Data packets; doubles as the paper's result cache.
+
+    A prefix hash-index (every prefix of every stored name -> stored keys)
+    turns ``can_be_prefix`` matching and prefix invalidation into O(1)
+    index probes instead of full-store scans.  Among multiple prefix
+    candidates the lexicographically-smallest *satisfying* entry wins,
+    which is deterministic and — unlike the old first-in-LRU-order scan —
+    never misses because a stale entry shadowed a fresh one.
+    """
 
     def __init__(self, capacity: int = 4096) -> None:
         self.capacity = capacity
-        self._store: "OrderedDict[Tuple[str, ...], Data]" = OrderedDict()
+        self._store: "OrderedDict[Key, Data]" = OrderedDict()
+        self._prefix_index: Dict[Key, Set[Key]] = {}
         self.hits = 0
         self.misses = 0
 
+    # -- index plumbing ----------------------------------------------------
+    def _index(self, key: Key) -> None:
+        for i in range(len(key) + 1):
+            self._prefix_index.setdefault(key[:i], set()).add(key)
+
+    def _unindex(self, key: Key) -> None:
+        for i in range(len(key) + 1):
+            bucket = self._prefix_index.get(key[:i])
+            if bucket is not None:
+                bucket.discard(key)
+                if not bucket:
+                    del self._prefix_index[key[:i]]
+
+    def _remove(self, key: Key) -> None:
+        del self._store[key]
+        self._unindex(key)
+
+    # -- public API --------------------------------------------------------
     def insert(self, data: Data) -> None:
         key = data.name.components
         if key in self._store:
             self._store.move_to_end(key)
+        else:
+            self._index(key)
         self._store[key] = data
         while len(self._store) > self.capacity:
-            self._store.popitem(last=False)
+            oldest, _ = self._store.popitem(last=False)
+            self._unindex(oldest)
 
     def match(self, interest: Interest, now: float) -> Optional[Data]:
         """Find a cached Data satisfying the Interest."""
         key = interest.name.components
         hit: Optional[Data] = None
         exact = self._store.get(key)
-        if exact is not None:
+        if exact is not None and not (interest.must_be_fresh
+                                      and not exact.is_fresh(now)):
             hit = exact
         elif interest.can_be_prefix:
-            for k, d in self._store.items():
-                if interest.name.is_prefix_of(Name(k)):
-                    hit = d
-                    break
-        if hit is not None and interest.must_be_fresh and not hit.is_fresh(now):
-            hit = None
+            for k in sorted(self._prefix_index.get(key, ())):
+                d = self._store[k]
+                if interest.must_be_fresh and not d.is_fresh(now):
+                    continue
+                hit = d
+                break
         if hit is None:
             self.misses += 1
             return None
@@ -206,9 +468,9 @@ class ContentStore:
 
     def evict_prefix(self, prefix: Name) -> int:
         """Invalidate everything under a prefix (e.g. checkpoint superseded)."""
-        doomed = [k for k in self._store if prefix.is_prefix_of(Name(k))]
+        doomed = list(self._prefix_index.get(prefix.components, ()))
         for k in doomed:
-            del self._store[k]
+            self._remove(k)
         return len(doomed)
 
     def __len__(self) -> int:

@@ -10,7 +10,7 @@ job fields plus the cluster's capability view and either passes or raises
 from __future__ import annotations
 
 import re
-from typing import Any, Callable, Dict, Mapping, Optional
+from typing import Any, Callable, Dict, Mapping
 
 __all__ = ["ValidationError", "ValidatorRegistry", "default_registry"]
 

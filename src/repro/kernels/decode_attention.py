@@ -20,6 +20,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax < 0.5 names it TPUCompilerParams; newer releases CompilerParams
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 __all__ = ["flash_decode"]
 
 _NEG_INF = -1e30
@@ -101,7 +104,7 @@ def flash_decode(q: jax.Array, cache_k: jax.Array, cache_v: jax.Array,
             ],
         ),
         out_shape=jax.ShapeDtypeStruct((B, K, group, hd), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(lengths, qt, kt, vt)

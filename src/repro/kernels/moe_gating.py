@@ -18,6 +18,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax < 0.5 names it TPUCompilerParams; newer releases CompilerParams
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 __all__ = ["moe_gating"]
 
 
@@ -57,7 +60,7 @@ def moe_gating(logits: jax.Array, k: int, *, block_t: int = 256,
                    pl.BlockSpec((bt, k), lambda t: (t, 0))],
         out_shape=[jax.ShapeDtypeStruct((T, k), jnp.float32),
                    jax.ShapeDtypeStruct((T, k), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(logits)

@@ -1,0 +1,208 @@
+"""Adaptive strategy: probe, learn, shift away from degraded upstreams.
+
+All scenarios run on the deterministic virtual clock, so "shifts within
+N interests" is asserted exactly, not statistically.
+"""
+
+from repro.core.forwarder import Consumer, Forwarder, Nack, Network, link
+from repro.core.jobs import JobSpec
+from repro.core.matchmaker import MatchError, Matchmaker, ServiceEndpoint
+from repro.core.names import Name
+from repro.core.packets import Data
+from repro.core.scheduler import CompletionModel
+from repro.core.strategy import AdaptiveStrategy, CompletionTimeStrategy
+import pytest
+
+
+def _producer(node, prefix, value=b"v", fail_box=None):
+    calls = {"n": 0}
+
+    def handler(interest, publish, now):
+        calls["n"] += 1
+        if fail_box is not None and fail_box.get("fail"):
+            return Nack(interest, "synthetic")
+        if fail_box is not None and fail_box.get("silent"):
+            return None    # accepted, never answers — the dark-cluster case
+        return Data(name=interest.name, content=value, created_at=now,
+                    freshness=10.0)
+
+    node.attach_producer(Name.parse(prefix), handler)
+    return calls
+
+
+def _star4(strategy):
+    """Hub + 4 producer leaves, all serving /svc, increasing cost order."""
+    net = Network()
+    hub = Forwarder(net, "hub", strategy=strategy)
+    leaves = []
+    for i in range(4):
+        leaf = Forwarder(net, f"leaf{i}")
+        hub_face, _ = link(net, hub, leaf, latency=0.001)
+        leaves.append((leaf, hub_face))
+        hub.register_route(Name.parse("/svc"), hub_face, cost=1.0 + i)
+    return net, hub, leaves
+
+
+def test_cold_prefix_parallel_probe():
+    strat = AdaptiveStrategy(probe_fanout=2)
+    net, hub, leaves = _star4(strat)
+    calls = [_producer(leaf, "/svc") for leaf, _ in leaves]
+    c = Consumer(net, hub)
+    box = c.get(Name.parse("/svc/first"))
+    assert box["data"].content == b"v"
+    # the cold prefix was probed on the two cheapest upstreams at once
+    assert strat.probes == 1
+    assert calls[0]["n"] == 1 and calls[1]["n"] == 1
+    assert calls[2]["n"] == 0 and calls[3]["n"] == 0
+
+
+def test_adaptive_shifts_off_nacking_upstream_within_n_interests():
+    strat = AdaptiveStrategy(probe_fanout=2, explore_every=10_000)
+    net, hub, leaves = _star4(strat)
+    fail0 = {"fail": False}
+    calls = [_producer(leaves[0][0], "/svc", fail_box=fail0)]
+    calls += [_producer(leaf, "/svc") for leaf, _ in leaves[1:]]
+    c = Consumer(net, hub)
+    # warm-up: leaf0 (cheapest, healthy) wins the traffic
+    for i in range(10):
+        assert "data" in c.get(Name.parse(f"/svc/warm{i}"))
+    warm0 = calls[0]["n"]
+    assert warm0 >= 9   # probe touched leaf1 once; everything else to leaf0
+    # leaf0 starts NACKing every request
+    fail0["fail"] = True
+    shift_window = []
+    for i in range(8):
+        box = c.get(Name.parse(f"/svc/degraded{i}"))
+        assert "data" in box      # failover inside each request keeps service up
+        shift_window.append(calls[0]["n"])
+    # within 3 interests the loss EWMA must push leaf0 out of the top slot
+    # (no further first-choice traffic -> its call count stops growing)
+    assert shift_window[3:] == [shift_window[3]] * 5
+    assert calls[0]["n"] - warm0 <= 4
+    # and the traffic went somewhere healthy
+    assert sum(cl["n"] for cl in calls[1:]) >= 8
+
+
+def test_adaptive_recovers_after_upstream_heals():
+    strat = AdaptiveStrategy(probe_fanout=2, explore_every=4)
+    net, hub, leaves = _star4(strat)
+    fail0 = {"fail": False}
+    calls0 = _producer(leaves[0][0], "/svc", fail_box=fail0)
+    for leaf, _ in leaves[1:]:
+        _producer(leaf, "/svc")
+    c = Consumer(net, hub)
+    for i in range(6):
+        c.get(Name.parse(f"/svc/a{i}"))
+    fail0["fail"] = True
+    for i in range(6):
+        c.get(Name.parse(f"/svc/b{i}"))
+    fail0["fail"] = False
+    before = calls0["n"]
+    # exploration retries the cheap upstream; successes decay its loss EWMA
+    # and it wins the ranking back
+    for i in range(30):
+        c.get(Name.parse(f"/svc/c{i}"))
+    assert calls0["n"] > before
+
+
+def test_timeout_feeds_loss_signal_for_silent_upstream():
+    """A silent cluster never NACKs; retransmission + losing-the-race
+    feedback must teach the strategy without any explicit failure signal."""
+    strat = AdaptiveStrategy(probe_fanout=1, explore_every=10_000)
+    net, hub, leaves = _star4(strat)
+    silence0 = {"silent": False}
+    calls = [_producer(leaves[0][0], "/svc", fail_box=silence0)]
+    calls += [_producer(leaf, "/svc") for leaf, _ in leaves[1:]]
+    c = Consumer(net, hub)
+    for i in range(4):
+        c.get(Name.parse(f"/svc/w{i}"))
+    assert calls[0]["n"] == 4
+    silence0["silent"] = True        # accepts interests, never answers
+    for i in range(4):
+        box = c.get(Name.parse(f"/svc/dark{i}"), retries=3, lifetime=0.25)
+        assert "data" in box         # retransmission fails over mid-request
+    # the strategy learned: the silent face carries loss, and only the
+    # first degraded interest ever reached it
+    hub_face0 = leaves[0][1]
+    hop0 = hub.fib.nexthops(Name.parse("/svc"))[hub_face0.face_id]
+    assert hop0.loss_ewma > 0.0
+    assert calls[0]["n"] == 5        # exactly one wasted try, then it shifted
+    assert sum(cl["n"] for cl in calls[1:]) >= 4
+
+
+# ---------------------------------------------------------------------------
+# strategy signals consumed by scheduler + matchmaker
+# ---------------------------------------------------------------------------
+
+def test_completion_strategy_penalizes_lossy_transport():
+    model = CompletionModel()
+    fields = {"app": "train", "arch": "a", "chips": 4, "steps": 10}
+    # identical compute history on faces 1 and 2
+    for face in (1, 2):
+        model.observe(fields, face_id=face, duration=10.0)
+    strat = CompletionTimeStrategy(model)
+    # face 2's transport is flapping
+    for _ in range(6):
+        strat.feedback(Name.parse("/lidc/compute/train/a"), 2, False, 0.1, 0.0)
+    assert model.transport_penalty(2) > model.transport_penalty(1) == 1.0
+    p1 = model.predict(fields, face_id=1) * model.transport_penalty(1)
+    p2 = model.predict(fields, face_id=2) * model.transport_penalty(2)
+    assert p2 > p1
+
+
+def test_matchmaker_queued_admission_and_backpressure():
+    ep = ServiceEndpoint(service="svc", app="train", max_chips=8)
+    spec = JobSpec(app="train", fields={"chips": 8})
+    mm = Matchmaker(max_queue_depth=2)
+    # chips busy (free=0) but the job fits total capacity -> queued admission
+    got = mm.match(spec, [ep], free_chips=0, queue_depth=0, total_chips=8)
+    assert got[0] is ep and got[1] == 8
+    # queue full -> backpressure (gateway will NACK, strategies divert)
+    with pytest.raises(MatchError):
+        mm.match(spec, [ep], free_chips=0, queue_depth=2, total_chips=8)
+    # default matchmaker (depth 0) keeps the old fail-fast behaviour
+    with pytest.raises(MatchError):
+        Matchmaker().match(spec, [ep], free_chips=0, total_chips=8)
+
+
+def test_cluster_waitq_starts_jobs_as_chips_free(monkeypatch=None):
+    from repro.core.cluster import ComputeCluster, ExecResult
+    net = Network()
+    cluster = ComputeCluster(net, "c0", chips=8, max_queue_depth=4)
+    cluster.add_endpoint(ServiceEndpoint(
+        service="svc", app="train", max_chips=8,
+        executor=lambda job, cl: ExecResult(payload={"ok": 1}, duration=1.0)))
+    j1 = cluster.submit(JobSpec(app="train", fields={"chips": 8}), now=0.0)
+    j2 = cluster.submit(JobSpec(app="train", fields={"chips": 8}), now=0.0)
+    assert j1.state.value == "Running" and j2.state.value == "Pending"
+    net.run()
+    assert j1.state.value == "Completed" and j2.state.value == "Completed"
+    assert j2.started_at is not None and j2.started_at >= 1.0
+
+
+def test_pending_slots_released_after_multicast_race():
+    from repro.core.strategy import MulticastStrategy
+    net, hub, leaves = _star4(MulticastStrategy(k=2))
+    for leaf, _ in leaves:
+        _producer(leaf, "/svc")
+    c = Consumer(net, hub)
+    for i in range(5):
+        assert "data" in c.get(Name.parse(f"/svc/race{i}"))
+    for hop in hub.fib.nexthops(Name.parse("/svc")).values():
+        assert hop.pending == 0      # race losers release their slots
+        assert hop.failures == 0     # ...without being penalized
+
+
+def test_nack_outcome_not_double_counted_when_data_arrives():
+    strat = AdaptiveStrategy(probe_fanout=1, explore_every=10_000)
+    net, hub, leaves = _star4(strat)
+    fail0 = {"fail": True}
+    calls0 = _producer(leaves[0][0], "/svc", fail_box=fail0)
+    for leaf, _ in leaves[1:]:
+        _producer(leaf, "/svc")
+    c = Consumer(net, hub)
+    assert "data" in c.get(Name.parse("/svc/x"))
+    hop0 = hub.fib.nexthops(Name.parse("/svc"))[leaves[0][1].face_id]
+    assert calls0["n"] == 1
+    assert hop0.failures == 1        # one NACK = exactly one failure
+    assert hop0.pending == 0

@@ -3,8 +3,7 @@
 from repro.core.forwarder import Consumer, Forwarder, Nack, Network, link
 from repro.core.names import Name
 from repro.core.packets import Data, Interest
-from repro.core.strategy import (BestRouteStrategy, LoadShareStrategy,
-                                 MulticastStrategy)
+from repro.core.strategy import LoadShareStrategy, MulticastStrategy
 
 
 def _producer(node, prefix, value=b"v", delay=0.0, fail=False):

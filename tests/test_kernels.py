@@ -4,7 +4,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ref
 from repro.kernels.decode_attention import flash_decode
@@ -139,15 +138,21 @@ def test_moe_gating(T, E, k, bt):
     np.testing.assert_allclose(w, w2, atol=1e-6)
 
 
-@settings(max_examples=20, deadline=None)
-@given(st.integers(1, 4), st.integers(2, 6), st.integers(1, 3))
-def test_moe_gating_property(bt_pow, e_pow, k):
-    T, E = 2 ** (bt_pow + 4), 2 ** e_pow
-    k = min(k, E)
-    logits = jax.random.normal(jax.random.PRNGKey(T + E + k), (T, E))
-    w, ids = moe_gating(logits, k, block_t=T, interpret=True)
-    # weights positive, sum to 1, ids unique per row
-    assert bool(jnp.all(w > 0))
-    np.testing.assert_allclose(jnp.sum(w, -1), jnp.ones(T), atol=1e-5)
-    for row in np.asarray(ids):
-        assert len(set(row.tolist())) == k
+def test_moe_gating_property():
+    pytest.importorskip("hypothesis", reason="property sweep needs hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(1, 4), st.integers(2, 6), st.integers(1, 3))
+    def check(bt_pow, e_pow, k):
+        T, E = 2 ** (bt_pow + 4), 2 ** e_pow
+        k = min(k, E)
+        logits = jax.random.normal(jax.random.PRNGKey(T + E + k), (T, E))
+        w, ids = moe_gating(logits, k, block_t=T, interpret=True)
+        # weights positive, sum to 1, ids unique per row
+        assert bool(jnp.all(w > 0))
+        np.testing.assert_allclose(jnp.sum(w, -1), jnp.ones(T), atol=1e-5)
+        for row in np.asarray(ids):
+            assert len(set(row.tolist())) == k
+
+    check()

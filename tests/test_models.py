@@ -13,7 +13,7 @@ import pytest
 
 from repro.configs.base import SHAPES, ShapeConfig, registry, smoke_of
 from repro.models import bundle_for, param_count, synth_batch
-from repro.models.model import input_specs, model_flops
+from repro.models.model import model_flops
 
 KEY = jax.random.PRNGKey(0)
 TRAIN = ShapeConfig("t", "train", 32, 2)

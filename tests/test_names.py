@@ -1,7 +1,6 @@
 """Names, the semantic job codec, and NDN prefix semantics."""
 
 import pytest
-from hypothesis import given, strategies as st
 
 from repro.core.names import (COMPUTE_PREFIX, Name, canonical_job_name,
                               encode_job, job_fields_of, parse_job)
@@ -70,22 +69,33 @@ def test_parse_job_malformed():
         parse_job("a=1&a=2")
 
 
-_field_keys = st.text(alphabet="abcdefghijklmnop_", min_size=1, max_size=8)
-_field_vals = st.one_of(st.integers(0, 10 ** 9),
-                        st.text(alphabet="abcXYZ0123-._", min_size=1,
-                                max_size=12))
+def test_encode_parse_property():
+    pytest.importorskip("hypothesis", reason="property sweep needs hypothesis")
+    from hypothesis import given, strategies as st
+
+    field_keys = st.text(alphabet="abcdefghijklmnop_", min_size=1, max_size=8)
+    field_vals = st.one_of(st.integers(0, 10 ** 9),
+                           st.text(alphabet="abcXYZ0123-._", min_size=1,
+                                   max_size=12))
+
+    @given(st.dictionaries(field_keys, field_vals, min_size=1, max_size=6))
+    def check(fields):
+        enc = encode_job(fields)
+        back = parse_job(enc)
+        assert back == {k: str(v) for k, v in fields.items()}
+
+    check()
 
 
-@given(st.dictionaries(_field_keys, _field_vals, min_size=1, max_size=6))
-def test_encode_parse_property(fields):
-    enc = encode_job(fields)
-    back = parse_job(enc)
-    assert back == {k: str(v) for k, v in fields.items()}
+def test_prefix_property():
+    pytest.importorskip("hypothesis", reason="property sweep needs hypothesis")
+    from hypothesis import given, strategies as st
 
+    @given(st.lists(st.sampled_from("abcdef"), min_size=1, max_size=6),
+           st.lists(st.sampled_from("abcdef"), min_size=1, max_size=6))
+    def check(a, b):
+        na, nb = Name(tuple(a)), Name(tuple(b))
+        if na.is_prefix_of(nb):
+            assert list(nb.components[:len(na)]) == list(na.components)
 
-@given(st.lists(st.sampled_from("abcdef"), min_size=1, max_size=6),
-       st.lists(st.sampled_from("abcdef"), min_size=1, max_size=6))
-def test_prefix_property(a, b):
-    na, nb = Name(tuple(a)), Name(tuple(b))
-    if na.is_prefix_of(nb):
-        assert list(nb.components[:len(na)]) == list(na.components)
+    check()

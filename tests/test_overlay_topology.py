@@ -1,0 +1,148 @@
+"""MeshTopology: multi-hop routing, withdrawal, churn, re-convergence."""
+
+import pytest
+
+from repro.core.forwarder import Network
+from repro.core.names import Name
+from repro.core.overlay import MeshTopology
+from repro.core.packets import Data
+from repro.core.strategy import AdaptiveStrategy
+
+
+def _serve(mesh, origin, prefix, tag=b"v"):
+    calls = {"n": 0}
+
+    def handler(interest, publish, now):
+        calls["n"] += 1
+        return Data(name=interest.name, content=tag, created_at=now,
+                    freshness=30.0)
+
+    mesh.attach_producer(origin, Name.parse(prefix), handler)
+    return calls
+
+
+@pytest.mark.parametrize("kind", MeshTopology.KINDS)
+def test_mesh_end_to_end_fetch(kind):
+    net = Network()
+    mesh = MeshTopology(net, 12, kind, seed=3,
+                        strategy_factory=lambda i: AdaptiveStrategy())
+    calls = _serve(mesh, 7, "/svc/a")
+    c = mesh.consumer_at(0)
+    box = c.get(Name.parse("/svc/a/x"))
+    assert box["data"].content == b"v" and calls["n"] == 1
+    # repeat is served from a Content Store along the path
+    box2 = c.get(Name.parse("/svc/a/x"))
+    assert box2["data"].content == b"v" and calls["n"] == 1
+
+
+def test_mesh_every_node_reaches_every_announcement():
+    net = Network()
+    mesh = MeshTopology(net, 10, "random", seed=5)
+    for origin in range(10):
+        _serve(mesh, origin, f"/svc/n{origin}")
+    for src in (0, 4, 9):
+        c = mesh.consumer_at(src)
+        for origin in range(10):
+            box = c.get(Name.parse(f"/svc/n{origin}/q{src}"))
+            assert "data" in box, (src, origin)
+
+
+def test_mesh_withdraw_removes_only_that_origin():
+    net = Network()
+    mesh = MeshTopology(net, 8, "ring")
+    _serve(mesh, 2, "/svc/shared")
+    _serve(mesh, 6, "/svc/shared", tag=b"w")
+    mesh.withdraw(2, Name.parse("/svc/shared"))
+    c = mesh.consumer_at(0)
+    box = c.get(Name.parse("/svc/shared/x"))
+    assert "data" in box            # origin 6 still serves
+    # node 3 (adjacent-ish to 2) must no longer hold a route through 2 only
+    assert len(mesh.nodes[0].fib) >= 1
+
+
+def test_mesh_graceful_leave_then_fetch_from_backup():
+    net = Network()
+    mesh = MeshTopology(net, 8, "ring")
+    calls2 = _serve(mesh, 2, "/svc/a")
+    calls6 = _serve(mesh, 6, "/svc/a", tag=b"backup")
+    c = mesh.consumer_at(0)
+    assert "data" in c.get(Name.parse("/svc/a/1"))
+    mesh.leave(2)
+    box = c.get(Name.parse("/svc/a/2"))
+    assert box["data"].content == b"backup"
+    assert calls6["n"] >= 1 and calls2["n"] <= 1
+
+
+def test_mesh_fail_heal_refresh_cycle():
+    net = Network()
+    mesh = MeshTopology(net, 9, "tree")
+    calls = _serve(mesh, 8, "/svc/deep")
+    c = mesh.consumer_at(0)
+    assert "data" in c.get(Name.parse("/svc/deep/1"))
+    mesh.fail_node(8)
+    mesh.refresh_routes()           # converge around the dark node
+    box = c.get(Name.parse("/svc/deep/2"), retries=1, lifetime=0.5)
+    assert "data" not in box        # sole producer is dark: must fail
+    mesh.heal_node(8)
+    mesh.refresh_routes()
+    assert "data" in c.get(Name.parse("/svc/deep/3"))
+    assert calls["n"] == 2
+
+
+def test_mesh_join_mid_run_becomes_reachable():
+    net = Network()
+    mesh = MeshTopology(net, 6, "ring")
+    idx = mesh.add_node()
+    mesh.connect(idx, 0)
+    mesh.connect(idx, 3)
+    calls = _serve(mesh, idx, "/svc/new")
+    c = mesh.consumer_at(4)
+    assert "data" in c.get(Name.parse("/svc/new/x"))
+    assert calls["n"] == 1
+
+
+def test_mesh_equal_cost_multipath_installed():
+    net = Network()
+    mesh = MeshTopology(net, 6, "ring")    # even ring: two equal paths
+    _serve(mesh, 3, "/svc/m")
+    # node 0 is antipodal to 3: both ring directions are shortest
+    hops = mesh.nodes[0].fib.nexthops(Name.parse("/svc/m"))
+    assert len(hops) >= 2
+
+
+def test_mesh_down_nodes_excluded_from_refreshed_routes():
+    net = Network()
+    mesh = MeshTopology(net, 7, "ring")
+    _serve(mesh, 3, "/svc/r")
+    mesh.fail_node(2)
+    mesh.refresh_routes()
+    # node 1's refreshed route to 3 must go the long way (via 0), not via 2
+    face_to_2 = mesh.faces[(1, 2)].face_id
+    hops = mesh.nodes[1].fib.nexthops(Name.parse("/svc/r"))
+    assert face_to_2 not in hops and len(hops) >= 1
+
+
+def test_mesh_withdraw_anycast_refcounts_shared_routes():
+    net = Network()
+    mesh = MeshTopology(net, 6, "ring")
+    _serve(mesh, 2, "/svc/any")
+    _serve(mesh, 3, "/svc/any", tag=b"other")
+    # node 0's face toward 1 carries routes for BOTH origins' announcements
+    face01 = mesh.faces[(0, 1)].face_id
+    assert face01 in mesh.nodes[0].fib.nexthops(Name.parse("/svc/any"))
+    mesh.withdraw(3, Name.parse("/svc/any"))
+    # origin 2 still reaches through that shared face
+    assert face01 in mesh.nodes[0].fib.nexthops(Name.parse("/svc/any"))
+    assert "data" in mesh.consumer_at(0).get(Name.parse("/svc/any/q"))
+
+
+def test_mesh_heal_keeps_links_to_still_down_neighbors_cut():
+    net = Network()
+    mesh = MeshTopology(net, 6, "ring")
+    mesh.fail_node(2)
+    mesh.fail_node(3)
+    mesh.heal_node(2)
+    assert mesh.faces[(2, 3)].down and mesh.faces[(3, 2)].down
+    assert not mesh.faces[(2, 1)].down
+    mesh.heal_node(3)
+    assert not mesh.faces[(2, 3)].down

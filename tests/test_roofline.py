@@ -1,7 +1,5 @@
 """HLO parser: collective accounting with while-trip multiplication."""
 
-import numpy as np
-
 from repro.roofline.analysis import HW, collective_bytes_from_hlo
 from repro.roofline.hloparse import _shape_bytes, _split_def, analyze_hlo
 

@@ -1,10 +1,8 @@
 """End-to-end behaviour of the LIDC system (the paper's workflow, Fig. 5)."""
 
-import pytest
-
 from repro.ckpt.checkpoint import latest_step
 from repro.core.jobs import JobSpec
-from repro.core.strategy import CompletionTimeStrategy, MulticastStrategy
+from repro.core.strategy import CompletionTimeStrategy
 from repro.core.scheduler import CompletionModel
 from repro.runtime.fleet import build_fleet, resilient_run
 

@@ -7,8 +7,8 @@ import pytest
 
 from repro.ckpt.checkpoint import (latest_step, restore_checkpoint,
                                    save_checkpoint)
-from repro.configs.base import ShapeConfig, smoke_of, get_config
-from repro.data.pipeline import SyntheticLM, make_pipeline
+from repro.configs.base import smoke_of, get_config
+from repro.data.pipeline import SyntheticLM
 from repro.datalake import DataLake, DirStore
 from repro.models import bundle_for
 from repro.optim import AdamW, constant, warmup_cosine
@@ -80,7 +80,7 @@ def test_checkpoint_roundtrip_exact():
 def test_checkpoint_resume_continues_run():
     lake = DataLake()
     cfg = get_config("lidc-demo")
-    r1 = run_training(cfg, steps=6, batch=4, seq=16, lake=lake,
+    run_training(cfg, steps=6, batch=4, seq=16, lake=lake,
                       run_name="resume-test", ckpt_every=3)
     assert latest_step(lake, "resume-test") == 6
     r2 = run_training(cfg, steps=10, batch=4, seq=16, lake=lake,

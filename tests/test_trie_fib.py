@@ -1,0 +1,252 @@
+"""Trie FIB ≡ linear-scan oracle, hashed PIT behaviour, indexed CS behaviour.
+
+The deterministic randomized equivalence test always runs; the
+hypothesis property test adds minimized counterexamples where the
+dependency is installed (CI).
+"""
+
+import itertools
+import random
+
+import pytest
+
+from repro.core.names import Name
+from repro.core.packets import Data, Interest
+from repro.core.tables import ContentStore, Fib, LinearFib, Pit
+
+COMPONENTS = ["a", "b", "c", "d", "lidc", "compute", "train", "serve",
+              "q1", "q2", "x"]
+
+
+def _rand_name(rng, max_len=6):
+    return Name(tuple(rng.choice(COMPONENTS)
+                      for _ in range(rng.randint(1, max_len))))
+
+
+def _mirror_ops(rng, n_ops):
+    """Apply one random op stream to both FIB implementations."""
+    trie, oracle = Fib(), LinearFib()
+    for _ in range(n_ops):
+        roll = rng.random()
+        prefix = _rand_name(rng, max_len=5)
+        face = rng.randint(1, 6)
+        if roll < 0.6:
+            cost = rng.choice([1.0, 2.0, 3.0])
+            trie.register(prefix, face, cost)
+            oracle.register(prefix, face, cost)
+        elif roll < 0.8:
+            fid = face if rng.random() < 0.5 else None
+            trie.unregister(prefix, fid)
+            oracle.unregister(prefix, fid)
+        else:
+            trie.remove_face(face)
+            oracle.remove_face(face)
+    return trie, oracle
+
+def _assert_equivalent(trie, oracle, rng, n_queries=40):
+    assert len(trie) == len(oracle)
+    assert sorted(map(str, trie.prefixes())) == sorted(map(str, oracle.prefixes()))
+    for _ in range(n_queries):
+        q = _rand_name(rng, max_len=7)
+        m1, h1 = trie.lookup(q)
+        m2, h2 = oracle.lookup(q)
+        assert (m1 is None) == (m2 is None), str(q)
+        if m1 is not None:
+            assert m1.components == m2.components, str(q)
+            assert ([(h.face_id, h.cost) for h in h1]
+                    == [(h.face_id, h.cost) for h in h2])
+
+
+def test_trie_equals_linear_oracle_randomized():
+    for trial in range(150):
+        rng = random.Random(trial)
+        trie, oracle = _mirror_ops(rng, rng.randint(1, 80))
+        _assert_equivalent(trie, oracle, rng)
+
+
+def test_trie_equals_linear_oracle_property():
+    pytest.importorskip("hypothesis", reason="property sweep needs hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    comp = st.sampled_from(COMPONENTS)
+    name = st.lists(comp, min_size=1, max_size=5).map(tuple).map(Name)
+    op = st.one_of(
+        st.tuples(st.just("reg"), name, st.integers(1, 5),
+                  st.sampled_from([1.0, 2.0, 3.0])),
+        st.tuples(st.just("unreg"), name,
+                  st.one_of(st.none(), st.integers(1, 5))),
+        st.tuples(st.just("rmface"), st.integers(1, 5)),
+    )
+
+    @settings(max_examples=150, deadline=None)
+    @given(st.lists(op, min_size=1, max_size=60),
+           st.lists(st.lists(comp, min_size=1, max_size=7), min_size=1,
+                    max_size=20))
+    def check(ops, queries):
+        trie, oracle = Fib(), LinearFib()
+        for o in ops:
+            if o[0] == "reg":
+                trie.register(o[1], o[2], o[3])
+                oracle.register(o[1], o[2], o[3])
+            elif o[0] == "unreg":
+                trie.unregister(o[1], o[2])
+                oracle.unregister(o[1], o[2])
+            else:
+                trie.remove_face(o[1])
+                oracle.remove_face(o[1])
+        assert len(trie) == len(oracle)
+        for q in queries:
+            qn = Name(tuple(q))
+            m1, h1 = trie.lookup(qn)
+            m2, h2 = oracle.lookup(qn)
+            assert (m1 is None) == (m2 is None)
+            if m1 is not None:
+                assert m1.components == m2.components
+                assert ([(h.face_id, h.cost) for h in h1]
+                        == [(h.face_id, h.cost) for h in h2])
+
+    check()
+
+
+def test_trie_edge_splits_and_merges():
+    fib = Fib()
+    fib.register(Name.parse("/a/b/c/d"), 1)
+    # splitting the compressed /a/b/c/d edge
+    fib.register(Name.parse("/a/b"), 2)
+    m, h = fib.lookup(Name.parse("/a/b/c/d/e"))
+    assert str(m) == "/a/b/c/d" and h[0].face_id == 1
+    m, h = fib.lookup(Name.parse("/a/b/x"))
+    assert str(m) == "/a/b" and h[0].face_id == 2
+    # removing the inner prefix must re-merge without breaking the deep one
+    fib.unregister(Name.parse("/a/b"))
+    assert fib.lookup(Name.parse("/a/b/x")) == (None, [])
+    m, _ = fib.lookup(Name.parse("/a/b/c/d"))
+    assert str(m) == "/a/b/c/d"
+    assert len(fib) == 1
+
+
+def test_trie_remove_face_purges_only_that_face():
+    fib = Fib()
+    for i, p in enumerate(["/x", "/x/y", "/z"]):
+        fib.register(Name.parse(p), 1)
+        fib.register(Name.parse(p), 2, cost=2.0)
+    fib.remove_face(1)
+    for p in ["/x", "/x/y", "/z"]:
+        hops = fib.nexthops(Name.parse(p))
+        assert list(hops) == [2]
+    fib.remove_face(2)
+    assert len(fib) == 0
+    assert fib.lookup(Name.parse("/x/y/z")) == (None, [])
+
+
+# ---------------------------------------------------------------------------
+# PIT under the hashed index
+# ---------------------------------------------------------------------------
+
+def test_pit_satisfy_walks_prefixes_not_table():
+    pit = Pit()
+    pit.insert(Interest(name=Name.parse("/a")), 1, now=0.0)
+    pit.insert(Interest(name=Name.parse("/a/b")), 2, now=0.0)
+    pit.insert(Interest(name=Name.parse("/a/b/c")), 3, now=0.0)
+    pit.insert(Interest(name=Name.parse("/unrelated")), 4, now=0.0)
+    got = pit.satisfy(Name.parse("/a/b/c/d"))
+    assert sorted(str(e.name) for e in got) == ["/a", "/a/b", "/a/b/c"]
+    assert len(pit) == 1          # /unrelated untouched
+
+
+def test_pit_expiry_heap_respects_extension():
+    pit = Pit()
+    first = Interest(name=Name.parse("/x"), lifetime=1.0)
+    pit.insert(first, 1, now=0.0)
+    # aggregation extends the deadline; the stale heap record must not kill it
+    pit.insert(Interest(name=Name.parse("/x"), lifetime=5.0), 2, now=0.5)
+    assert pit.expire(now=2.0) == []
+    assert len(pit) == 1
+    dead = pit.expire(now=6.0)
+    assert len(dead) == 1 and dead[0].in_faces == {1, 2}
+    assert len(pit) == 0
+
+
+def test_pit_expire_after_satisfy_is_clean():
+    pit = Pit()
+    pit.insert(Interest(name=Name.parse("/x"), lifetime=1.0), 1, now=0.0)
+    pit.satisfy(Name.parse("/x"))
+    assert pit.expire(now=10.0) == []     # lazy heap record skipped
+
+
+def test_pit_many_entries_expire_in_order():
+    pit = Pit()
+    for i in range(50):
+        pit.insert(Interest(name=Name.parse(f"/n/{i}"), lifetime=float(i + 1)),
+                   1, now=0.0)
+    dead = pit.expire(now=10.0)
+    assert len(dead) == 10 and len(pit) == 40
+
+
+# ---------------------------------------------------------------------------
+# Content Store under the prefix index
+# ---------------------------------------------------------------------------
+
+def test_cs_prefix_index_tracks_eviction():
+    cs = ContentStore(capacity=3)
+    for i in range(5):
+        cs.insert(Data(name=Name.parse(f"/p/{i}/seg"), content=b"x"))
+    # /p/0 and /p/1 evicted by LRU; prefix matching must not resurrect them
+    assert cs.match(Interest(name=Name.parse("/p/0"), can_be_prefix=True),
+                    0.0) is None
+    assert cs.match(Interest(name=Name.parse("/p/4"), can_be_prefix=True),
+                    0.0) is not None
+
+
+def test_cs_evict_prefix_uses_index():
+    cs = ContentStore()
+    for i in range(4):
+        cs.insert(Data(name=Name.parse(f"/ckpt/run1/{i}"), content=b"x"))
+    cs.insert(Data(name=Name.parse("/ckpt/run2/0"), content=b"x"))
+    assert cs.evict_prefix(Name.parse("/ckpt/run1")) == 4
+    assert len(cs) == 1
+    assert cs.match(Interest(name=Name.parse("/ckpt/run1/0")), 0.0) is None
+    assert cs.match(Interest(name=Name.parse("/ckpt/run2/0")), 0.0) is not None
+
+
+def test_cs_prefix_match_skips_stale_finds_fresh():
+    cs = ContentStore()
+    cs.insert(Data(name=Name.parse("/a/stale"), content=b"s", freshness=1.0,
+                   created_at=0.0))
+    cs.insert(Data(name=Name.parse("/a/zfresh"), content=b"f", freshness=100.0,
+                   created_at=0.0))
+    hit = cs.match(Interest(name=Name.parse("/a"), can_be_prefix=True,
+                            must_be_fresh=True), now=50.0)
+    assert hit is not None and hit.content == b"f"
+
+
+def test_cs_reinsert_same_name_keeps_index_consistent():
+    cs = ContentStore(capacity=4)
+    for _ in range(3):
+        cs.insert(Data(name=Name.parse("/dup/x"), content=b"x"))
+    assert len(cs) == 1
+    assert cs.evict_prefix(Name.parse("/dup")) == 1
+    assert len(cs) == 0
+
+
+def test_fib_scales_lookup_cost_not_with_table_size():
+    """The structural property the trie exists for: lookup touches O(name)
+    trie nodes, never the announced-prefix population."""
+    fib = Fib()
+    for i in range(2000):
+        fib.register(Name.parse(f"/lidc/compute/app{i % 17}/arch{i}"), 1 + i % 4)
+    probes = itertools.count()
+
+    class CountingDict(dict):
+        def get(self, k, default=None):
+            next(probes)
+            return dict.get(self, k, default)
+
+    # instrument every children dict on the lookup path
+    def wrap(node):
+        node.children = CountingDict(node.children)
+    wrap(fib._root)
+    for child in list(fib._root.children.values()):
+        wrap(child)
+    fib.lookup(Name.parse("/lidc/compute/app3/arch3/job/k=1"))
+    assert next(probes) < 10   # a handful of child probes, not thousands
