@@ -1,0 +1,52 @@
+"""JAX version shims.
+
+The code targets the current jax API — ``jax.shard_map`` with
+``axis_names=``/``check_vma=`` and ``jax.make_mesh(..., axis_types=...)``
+— but the container pins jax 0.4.x, where only
+``jax.experimental.shard_map`` (``check_rep=``/``auto=``) exists and
+``make_mesh`` takes no ``axis_types``.  Every mesh/shard_map construction
+goes through here so the rest of the tree can stay on the modern API.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["axis_size", "make_mesh", "shard_map"]
+
+
+def axis_size(axis_name):
+    """``lax.axis_size`` on new jax; the static-psum idiom on old."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def make_mesh(axis_shapes, axis_names):
+    """``jax.make_mesh`` with explicit Auto axis types where supported."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            axis_shapes, axis_names,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axis_shapes))
+    return jax.make_mesh(axis_shapes, axis_names)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None, check=False):
+    """``jax.shard_map`` on new jax, ``jax.experimental.shard_map`` on old.
+
+    ``axis_names`` is the set of *manual* axes (new-API convention); on the
+    old API it is translated to the complementary ``auto`` frozenset.
+    """
+    if hasattr(jax, "shard_map"):
+        kw = {"check_vma": check}
+        if axis_names is not None:
+            kw["axis_names"] = set(axis_names)
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _sm
+    kw = {"check_rep": check}
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+        if auto:
+            kw["auto"] = auto
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)

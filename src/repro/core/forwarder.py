@@ -87,12 +87,20 @@ class Face:
     ``deliver`` sends a packet *out* of this face toward the peer; the
     network schedules arrival after ``latency`` seconds.  Faces can be
     taken ``down`` to model link/cluster failure (paper: clusters leaving
-    the overlay).
+    the overlay).  ``loss``/``jitter`` are the fault-injection hooks
+    (workflow/faults.py): per-packet drop probability drawn from an
+    injector-owned seeded RNG, and extra per-packet latency — both
+    deterministic on the virtual clock.
     """
 
     face_id: int
     latency: float = 0.001
     down: bool = False
+    # fault injection (set by repro.workflow.faults.FaultInjector)
+    loss: float = 0.0
+    jitter: float = 0.0
+    drops: int = 0
+    loss_rng: Optional[Any] = None     # random.Random owned by the injector
     # packet counters for benchmarks
     tx_interests: int = 0
     tx_data: int = 0
@@ -107,6 +115,10 @@ class Face:
     def send(self, packet: Any) -> None:
         if self.down or self._peer_recv is None or self._net is None:
             return  # packets into a dead face vanish — exactly like the wire
+        if (self.loss > 0.0 and self.loss_rng is not None
+                and self.loss_rng.random() < self.loss):
+            self.drops += 1
+            return  # injected loss: the packet vanishes on the wire
         if isinstance(packet, Interest):
             self.tx_interests += 1
         elif isinstance(packet, Data):
@@ -114,7 +126,7 @@ class Face:
         elif isinstance(packet, Nack):
             self.tx_nacks += 1
         recv = self._peer_recv
-        self._net.schedule(self.latency, lambda: recv(packet))
+        self._net.schedule(self.latency + self.jitter, lambda: recv(packet))
 
 
 def link(net: Network, a: "Forwarder", b: "Forwarder", latency: float = 0.001

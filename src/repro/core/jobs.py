@@ -17,7 +17,42 @@ from typing import Any, Dict, Optional
 
 from .names import DATA_PREFIX, Name, canonical_job_name
 
-__all__ = ["JobState", "JobSpec", "Job", "result_name_for"]
+__all__ = ["JobState", "JobSpec", "Job", "result_name_for",
+           "INPUTS_FIELD", "encode_input_names", "decode_input_names"]
+
+# Job field carrying the data-lake names a computation reads (workflow
+# stages use this; the field is part of the canonical name, so the same
+# program over different inputs yields different result names).
+INPUTS_FIELD = "in"
+
+
+def encode_input_names(names) -> str:
+    """Encode data-lake names into one job-field value.
+
+    ``/`` is illegal inside a name component, so each input name is
+    flattened with ``:`` and the list joined with ``,`` (both legal
+    component characters): ``/lidc/data/a + /lidc/data/b`` ->
+    ``lidc:data:a,lidc:data:b``.
+    """
+    parts = []
+    for n in names:
+        comps = n.components if isinstance(n, Name) else Name.parse(str(n)).components
+        for c in comps:
+            # ':' and ',' are the codec's own separators; '&' would break
+            # the k=v&k=v job-component parse the value is embedded in
+            if ":" in c or "," in c or "&" in c:
+                raise ValueError(
+                    f"input name component {c!r} cannot contain ':', ',' or '&'")
+        parts.append(":".join(comps))
+    return ",".join(parts)
+
+
+def decode_input_names(value: str):
+    """Invert :func:`encode_input_names` back into a list of Names."""
+    if not value:
+        return []
+    return [Name(tuple(p for p in item.split(":") if p))
+            for item in str(value).split(",")]
 
 
 class JobState(str, Enum):
@@ -47,6 +82,10 @@ class JobSpec:
 
     def steps(self, default: int = 1) -> int:
         return int(self.fields.get("steps", default))
+
+    def input_names(self):
+        """Data-lake names this job reads (workflow stages set these)."""
+        return decode_input_names(self.fields.get(INPUTS_FIELD, ""))
 
     def name(self) -> Name:
         return canonical_job_name({"app": self.app, **self.fields})

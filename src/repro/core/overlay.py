@@ -17,7 +17,7 @@ from __future__ import annotations
 import random
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Set, Tuple
+from typing import Any, Callable, Dict, Iterable, List, Optional, Set, Tuple
 
 from .cluster import ComputeCluster
 from .forwarder import Consumer, Face, Forwarder, Network, link
@@ -100,6 +100,22 @@ class Overlay:
         cluster.restore()
         edge_face, _ = self.links[name]
         edge_face.down = False
+
+    def partition(self, names: Iterable[str]) -> None:
+        """Overlay partition: the named clusters stay *alive* (jobs keep
+        running, state is kept) but both link directions are cut — the
+        fault-injection hook for split-brain scenarios.  Routes are not
+        withdrawn; only timeouts reveal the partition, exactly like
+        :meth:`fail_cluster` but with the cluster's clock still ticking."""
+        for name in names:
+            edge_face, gw_face = self.links[name]
+            edge_face.down = gw_face.down = True
+
+    def heal_partition(self, names: Iterable[str]) -> None:
+        """Reconnect clusters cut by :meth:`partition`."""
+        for name in names:
+            edge_face, gw_face = self.links[name]
+            edge_face.down = gw_face.down = False
 
 
 # ---------------------------------------------------------------------------

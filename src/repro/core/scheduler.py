@@ -29,9 +29,16 @@ __all__ = ["CompletionModel"]
 
 
 def _job_key(fields: Mapping[str, Any]) -> Tuple:
-    """What makes two jobs 'the same work' for prediction purposes."""
+    """What makes two jobs 'the same work' for prediction purposes.
+
+    Workflow stages (repro.workflow) carry ``in=`` (input data-lake names)
+    and ``part=``; without them every scatter instance of a stage would
+    collapse onto one key and the model would average unrelated inputs.
+    """
+    from .jobs import INPUTS_FIELD
     return (fields.get("app"), fields.get("arch"), fields.get("shape"),
-            str(fields.get("steps", "")), str(fields.get("chips", "")))
+            str(fields.get("steps", "")), str(fields.get("chips", "")),
+            str(fields.get("part", "")), str(fields.get(INPUTS_FIELD, "")))
 
 
 def _features(fields: Mapping[str, Any]) -> np.ndarray:

@@ -126,13 +126,23 @@ class AdaptiveStrategy(Strategy):
     tries the best unmeasured hop alongside the incumbent, so newly
     announced routes get discovered without randomness (the virtual clock
     stays deterministic).
+
+    ``rotate_cold_probes`` spreads *concurrent* cold prefixes across
+    upstreams: each successive cold probe starts its fanout window at the
+    next offset in the cost ranking instead of always at the cheapest.
+    A scatter stage of a workflow (N sibling names expressed at once, all
+    cold) then lands on N different clusters instead of piling onto the
+    two cheapest — deterministic placement spread with no coordinator.
+    Off by default: single-job workloads want the cheapest upstreams.
     """
 
     def __init__(self, probe_fanout: int = 2, explore_every: int = 16,
-                 loss_weight: float = 8.0) -> None:
+                 loss_weight: float = 8.0,
+                 rotate_cold_probes: bool = False) -> None:
         self.probe_fanout = max(1, probe_fanout)
         self.explore_every = max(2, explore_every)
         self.loss_weight = loss_weight
+        self.rotate_cold_probes = rotate_cold_probes
         self._decisions = 0
         self.probes = 0
         self.explorations = 0
@@ -146,10 +156,16 @@ class AdaptiveStrategy(Strategy):
         self._decisions += 1
         measured = [h for h in nexthops if h.measured]
         if not measured:
-            # cold prefix: parallel probe the cheapest upstreams
+            # cold prefix: parallel probe the cheapest upstreams; with
+            # rotation, each successive cold probe starts one slot later
+            # so concurrent scatter siblings spread across clusters
             self.probes += 1
             ranked = sorted(nexthops, key=lambda h: (h.cost, h.face_id))
-            return ranked[: self.probe_fanout]
+            k = min(self.probe_fanout, len(ranked))
+            if self.rotate_cold_probes and len(ranked) > k:
+                start = ((self.probes - 1) * k) % len(ranked)
+                return [ranked[(start + j) % len(ranked)] for j in range(k)]
+            return ranked[:k]
         ranked = self._rank(measured)
         untried = [h for h in ranked if h.face_id not in entry.out_faces]
         best = untried[0] if untried else ranked[0]

@@ -32,11 +32,13 @@ class DataLake:
 
     def __init__(self, store: Optional[ObjectStore] = None,
                  prefix: str = DATA_PREFIX,
-                 signer: str = "datalake", key: bytes = b"lidc-lake-key"):
+                 signer: str = "datalake", key: bytes = b"lidc-lake-key",
+                 segment_size: int = SEGMENT_SIZE):
         self.store = store or MemoryStore()
         self.prefix = Name.parse(prefix)
         self.signer = signer
         self.key = key
+        self.segment_size = max(1, int(segment_size))
         self.puts = 0
         self.gets = 0
 
@@ -46,14 +48,15 @@ class DataLake:
         """Store a blob under a name, segmenting if needed."""
         assert self.prefix.is_prefix_of(name), f"{name} outside {self.prefix}"
         self.puts += 1
-        if len(blob) <= SEGMENT_SIZE:
+        seg_size = self.segment_size
+        if len(blob) <= seg_size:
             self.store.put(str(name), blob)
             if meta:
                 self.store.put(str(name) + "#meta", json.dumps(meta).encode())
             return name
-        nseg = (len(blob) + SEGMENT_SIZE - 1) // SEGMENT_SIZE
+        nseg = (len(blob) + seg_size - 1) // seg_size
         for i in range(nseg):
-            seg = blob[i * SEGMENT_SIZE:(i + 1) * SEGMENT_SIZE]
+            seg = blob[i * seg_size:(i + 1) * seg_size]
             self.store.put(str(name.append(f"seg={i}")), seg)
         manifest = {"segments": nseg, "size": len(blob), **(meta or {})}
         self.store.put(str(name.append("manifest")), json.dumps(manifest).encode())

@@ -205,10 +205,10 @@ def moe_block(cfg: ArchConfig, p: Params, x: jax.Array
             aux = jax.lax.psum(aux, tp_axis)       # sum of expert slices
         return y.reshape(Bl, Sl, Dl), aux
 
+    from ..compat import shard_map
     manual = {a for a in mesh_axes}
-    y, aux = jax.shard_map(local_fn, mesh=mesh, in_specs=(xspec, wspec),
-                           out_specs=(xspec, P()), axis_names=manual,
-                           check_vma=False)(x, p)
+    y, aux = shard_map(local_fn, mesh=mesh, in_specs=(xspec, wspec),
+                       out_specs=(xspec, P()), axis_names=manual)(x, p)
     return y, aux
 
 

@@ -39,7 +39,8 @@ def compressed_psum_pod(x: jax.Array, axis_name: str = "pod") -> jax.Array:
     of the int8 result: every element crosses the pod links exactly twice
     as one byte instead of four.
     """
-    n = lax.axis_size(axis_name)
+    from ..compat import axis_size
+    n = axis_size(axis_name)
     if n == 1:
         return x
     flat = x.reshape(-1)

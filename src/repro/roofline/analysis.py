@@ -165,6 +165,8 @@ def analyze_compiled(compiled, *, arch: str, shape: str, mesh_name: str,
     by_kind = {k: int(v) for k, v in stats.collectives_by_kind.items()}
 
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):   # older jaxlib: one dict per program
+        ca = ca[0] if ca else {}
     xla_flops = float(ca.get("flops", 0.0))
     xla_bytes = float(ca.get("bytes accessed", 0.0))
     # guard: if the parser somehow finds less than XLA's single-visit

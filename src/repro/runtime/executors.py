@@ -26,7 +26,8 @@ from ..core.jobs import Job
 from ..core.names import Name
 
 __all__ = ["roofline_step_time", "make_train_executor",
-           "make_serve_executor", "blast_executor", "memory_model"]
+           "make_serve_executor", "blast_executor", "memory_model",
+           "smith_waterman"]
 
 # TPU v5e constants (same as roofline/analysis.py)
 PEAK_FLOPS = 197e12
@@ -194,8 +195,11 @@ _TABLE1 = {
 }
 
 
-def _smith_waterman(a: np.ndarray, b: np.ndarray) -> int:
-    """Tiny real alignment kernel (the 'computation' behind the numbers)."""
+def smith_waterman(a: np.ndarray, b: np.ndarray) -> int:
+    """Tiny real alignment kernel (the 'computation' behind the numbers).
+
+    Shared with the workflow apps (repro.workflow.apps): align stages run
+    the same kernel over data-lake shards."""
     n, m = len(a), len(b)
     H = np.zeros((n + 1, m + 1), np.int32)
     best = 0
@@ -221,7 +225,7 @@ def blast_executor(job: Job, cluster: ComputeCluster) -> ExecResult:
     duration = base_time * (1.0 - 0.01 * math.log2(max(cpu / 2, 1))
                             - 0.01 * math.log2(max(mem / 4, 1)))
     rng = np.random.default_rng(abs(hash((srr, db))) % 2 ** 31)
-    score = _smith_waterman(rng.integers(0, 4, 64), rng.integers(0, 4, 64))
+    score = smith_waterman(rng.integers(0, 4, 64), rng.integers(0, 4, 64))
     return ExecResult(payload={"app": "blast", "srr": srr, "db": db,
                                "mem": mem, "cpu": cpu,
                                "alignment_score": score,

@@ -32,10 +32,10 @@ __all__ = ["make_pp_loss_fn", "make_pp_mesh"]
 
 
 def make_pp_mesh(n_stages: int, extra_axes: Tuple[Tuple[str, int], ...] = ()):
+    from ..compat import make_mesh
     shape = (n_stages,) + tuple(n for _, n in extra_axes)
     names = ("pipe",) + tuple(a for a, _ in extra_axes)
-    return jax.make_mesh(shape, names,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+    return make_mesh(shape, names)
 
 
 def make_pp_loss_fn(cfg: ArchConfig, mesh, *, n_stages: int, n_micro: int):
@@ -82,21 +82,24 @@ def make_pp_loss_fn(cfg: ArchConfig, mesh, *, n_stages: int, n_micro: int):
         (_, loss_sum), _ = lax.scan(
             tick, (h0, jnp.zeros((), jnp.float32)),
             jnp.arange(n_micro + S - 1))
-        # only the last stage accumulated loss; share it with everyone
-        return lax.psum(loss_sum, "pipe") / n_micro
+        # per-stage partial (nonzero only on the last stage); summed outside
+        # the shard_map — a rank-1 sharded output instead of a replicated
+        # scalar psum, which old shard_map cannot transpose through
+        return loss_sum.reshape(1)
 
-    smapped = jax.shard_map(
+    from ..compat import shard_map
+    smapped = shard_map(
         stage_fn, mesh=mesh,
         in_specs=(P("pipe"), P(), P(), P(), P(), P()),
-        out_specs=P(), axis_names={"pipe"}, check_vma=False)
+        out_specs=P("pipe"), axis_names={"pipe"})
 
     def loss_fn(params: Params, batch: Dict[str, jax.Array]) -> jax.Array:
         blocks = jax.tree.map(
             lambda t: t.reshape((n_stages, l_per) + t.shape[1:]),
             params["blocks"])
         out_w = T.out_proj(cfg, params)
-        return smapped(blocks, params["embed"]["table"],
-                       params["final_norm"]["w"], out_w,
-                       batch["tokens"], batch["labels"])
+        return jnp.sum(smapped(blocks, params["embed"]["table"],
+                               params["final_norm"]["w"], out_w,
+                               batch["tokens"], batch["labels"])) / n_micro
 
     return loss_fn

@@ -1,0 +1,24 @@
+"""Named workflow DAGs over the data lake, driven through the forwarder.
+
+See :mod:`repro.workflow.dag` (the DAG model), :mod:`.engine` (the
+client-side execution engine), :mod:`.apps` (shard/align/merge stage
+applications + fleet assembly) and :mod:`.faults` (deterministic fault
+injection for the end-to-end tests).
+"""
+
+from .dag import (StageInstance, StageSpec, Workflow, WorkflowError,
+                  WorkflowSpec)
+from .engine import StageStatus, WorkflowEngine, WorkflowRun
+from .faults import FaultInjector
+
+__all__ = [
+    "StageInstance",
+    "StageSpec",
+    "StageStatus",
+    "Workflow",
+    "WorkflowEngine",
+    "WorkflowError",
+    "WorkflowRun",
+    "WorkflowSpec",
+    "FaultInjector",
+]

@@ -1,0 +1,278 @@
+"""The workflow engine: drive a compiled DAG through the forwarding plane.
+
+The engine is a *client* — it holds no scheduling authority.  Every stage
+is submitted as an ordinary compute Interest through the forwarder, so
+placement stays location-independent: the strategy layer picks the
+cluster, identical stages hit the Content-Store / result cache, and a
+crashed cluster is routed around by the same retransmission machinery
+that serves single jobs.
+
+Execution is event-driven on the deterministic virtual clock: stages
+launch the moment their dependencies complete (scatter instances run
+concurrently), status is polled per stage, and a stage whose cluster goes
+dark mid-run is re-expressed — the canonical name lands on a surviving
+cluster, which re-executes *that stage only*; completed upstream results
+are already in the lake under their own names.
+
+Everything observable is appended to ``run.trace`` as
+``(virtual_time, event, stage_instance, detail)`` tuples; with a fixed
+fault seed two runs produce byte-identical traces, which is what the
+fault-injection tests assert.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+from ..core.forwarder import Consumer, Forwarder, Network
+from ..core.names import Name
+from ..core.packets import Data, Interest
+from .dag import StageInstance, Workflow
+
+__all__ = ["StageStatus", "WorkflowRun", "WorkflowEngine"]
+
+
+class StageStatus:
+    WAITING = "waiting"        # dependencies not complete
+    SUBMITTED = "submitted"    # compute Interest in flight
+    RUNNING = "running"        # receipt received, polling status
+    COMPLETE = "complete"
+    FAILED = "failed"          # out of attempts
+
+
+@dataclass
+class _StageRun:
+    inst: StageInstance
+    status: str = StageStatus.WAITING
+    attempts: int = 0
+    waiting_on: int = 0                       # unfinished deps
+    receipt: Optional[Dict[str, Any]] = None
+    cluster: Optional[str] = None
+    from_cache: bool = False                  # completed straight off receipt
+    submitted_at: Optional[float] = None
+    completed_at: Optional[float] = None
+
+
+@dataclass
+class WorkflowRun:
+    workflow: Workflow
+    stages: Dict[str, _StageRun]
+    started_at: float = 0.0
+    finished_at: Optional[float] = None
+    failed: Optional[str] = None              # first failed stage id
+    results: Dict[str, Any] = field(default_factory=dict)  # sink payloads
+    trace: List[Tuple[float, str, str, str]] = field(default_factory=list)
+    # completion bookkeeping, filled by the engine at start()
+    remaining: int = 0                        # stages not yet complete
+    dependents: Dict[str, List[str]] = field(default_factory=dict)
+
+    @property
+    def complete(self) -> bool:
+        return (self.failed is None
+                and all(s.status == StageStatus.COMPLETE
+                        for s in self.stages.values()))
+
+    @property
+    def makespan(self) -> Optional[float]:
+        if self.finished_at is None:
+            return None
+        return self.finished_at - self.started_at
+
+    @property
+    def cache_hits(self) -> int:
+        return sum(1 for s in self.stages.values() if s.from_cache)
+
+    @property
+    def resubmissions(self) -> int:
+        return sum(max(0, s.attempts - 1) for s in self.stages.values())
+
+    def stage_report(self) -> Dict[str, Dict[str, Any]]:
+        return {i: {"status": s.status, "attempts": s.attempts,
+                    "cluster": s.cluster, "from_cache": s.from_cache}
+                for i, s in self.stages.items()}
+
+
+class WorkflowEngine:
+    """Submit→poll→fetch per stage, DAG-ordered, over one Consumer."""
+
+    def __init__(self, net: Network, node: Forwarder, *,
+                 name: str = "wf-engine",
+                 poll_interval: float = 0.25,
+                 interest_lifetime: float = 4.0,
+                 express_retries: int = 3,
+                 max_stage_attempts: int = 4,
+                 fetch_sink_results: bool = True,
+                 completion_model=None):
+        self.net = net
+        self.consumer = Consumer(net, node, name=name)
+        self.poll_interval = poll_interval
+        self.interest_lifetime = interest_lifetime
+        self.express_retries = express_retries
+        self.max_stage_attempts = max_stage_attempts
+        self.fetch_sink_results = fetch_sink_results
+        # optional repro.core.scheduler.CompletionModel: observed stage
+        # durations feed the paper's §VII completion-time intelligence
+        self.completion_model = completion_model
+
+    # ------------------------------------------------------------------ api
+    def run(self, workflow: Workflow) -> WorkflowRun:
+        """Start the workflow and drive the network to quiescence."""
+        run = self.start(workflow)
+        self.net.run()
+        return run
+
+    def start(self, workflow: Workflow) -> WorkflowRun:
+        """Launch root stages; callers must drive ``net`` themselves."""
+        stages = {i: _StageRun(inst=inst, waiting_on=len(inst.deps))
+                  for i, inst in workflow.instances.items()}
+        run = WorkflowRun(workflow=workflow, stages=stages,
+                          started_at=self.net.now,
+                          remaining=len(stages),
+                          dependents=workflow.dependents())
+        self._trace(run, "workflow-start", workflow.name,
+                    f"stages={len(stages)}")
+        for sr in stages.values():
+            if sr.waiting_on == 0:
+                self._launch(run, sr)
+        return run
+
+    # ------------------------------------------------------------ plumbing
+    def _trace(self, run: WorkflowRun, event: str, who: str, detail: str = ""
+               ) -> None:
+        run.trace.append((round(self.net.now, 9), event, who, detail))
+
+    def _launch(self, run: WorkflowRun, sr: _StageRun) -> None:
+        if run.failed is not None:
+            return
+        sr.attempts += 1
+        sr.status = StageStatus.SUBMITTED
+        if sr.submitted_at is None:
+            sr.submitted_at = self.net.now
+        self._trace(run, "submit", sr.inst.id, f"attempt={sr.attempts}")
+        self.consumer.express(
+            Interest(name=sr.inst.request_name,
+                     lifetime=self.interest_lifetime, must_be_fresh=True),
+            on_data=lambda d, sr=sr: self._on_receipt(run, sr, d),
+            on_fail=lambda reason, sr=sr: self._on_submit_fail(run, sr, reason),
+            retries=self.express_retries)
+
+    def _on_receipt(self, run: WorkflowRun, sr: _StageRun, d: Data) -> None:
+        if sr.status not in (StageStatus.SUBMITTED,):
+            return  # late duplicate (e.g. multicast twin) — already handled
+        receipt = d.json()
+        sr.receipt = receipt
+        sr.cluster = receipt.get("cluster")
+        self._trace(run, "receipt", sr.inst.id,
+                    f"state={receipt.get('state')} cluster={sr.cluster}")
+        if receipt.get("state") == "Completed":
+            # served from the result cache (or a twin workflow finished it):
+            # no new execution happened for this run's benefit
+            sr.from_cache = True
+            self._complete(run, sr)
+            return
+        sr.status = StageStatus.RUNNING
+        self._schedule_poll(run, sr, delay=self.poll_interval)
+
+    def _on_submit_fail(self, run: WorkflowRun, sr: _StageRun, reason: str
+                        ) -> None:
+        if sr.status != StageStatus.SUBMITTED:
+            return
+        self._trace(run, "submit-fail", sr.inst.id, reason)
+        self._retry_or_fail(run, sr, f"submit:{reason}")
+
+    def _retry_or_fail(self, run: WorkflowRun, sr: _StageRun, reason: str
+                       ) -> None:
+        if sr.attempts < self.max_stage_attempts:
+            self._launch(run, sr)
+            return
+        sr.status = StageStatus.FAILED
+        if run.failed is None:
+            run.failed = sr.inst.id
+            run.finished_at = self.net.now
+        self._trace(run, "stage-failed", sr.inst.id, reason)
+
+    # ------------------------------------------------------------- status
+    def _schedule_poll(self, run: WorkflowRun, sr: _StageRun, delay: float
+                      ) -> None:
+        attempt = sr.attempts
+        self.net.schedule(delay, lambda: self._poll(run, sr, attempt))
+
+    def _poll(self, run: WorkflowRun, sr: _StageRun, attempt: int) -> None:
+        if sr.status != StageStatus.RUNNING or sr.attempts != attempt \
+                or run.failed is not None:
+            return  # stage moved on (completed / re-submitted / aborted)
+        status_name = Name.parse(sr.receipt["status_name"])
+        self.consumer.express(
+            Interest(name=status_name, must_be_fresh=True, lifetime=2.0),
+            on_data=lambda d, sr=sr, a=attempt: self._on_status(run, sr, a, d),
+            on_fail=lambda r, sr=sr, a=attempt: self._on_status_fail(
+                run, sr, a, r),
+            retries=1)
+
+    def _on_status(self, run: WorkflowRun, sr: _StageRun, attempt: int,
+                   d: Data) -> None:
+        if sr.status != StageStatus.RUNNING or sr.attempts != attempt:
+            return
+        payload = d.json()
+        state = payload.get("state")
+        if state == "Completed":
+            self._complete(run, sr)
+        elif state == "Failed":
+            self._trace(run, "stage-error", sr.inst.id,
+                        str(payload.get("error", "unknown")))
+            self._retry_or_fail(run, sr, f"executor:{payload.get('error')}")
+        else:
+            self._schedule_poll(run, sr, delay=self.poll_interval)
+
+    def _on_status_fail(self, run: WorkflowRun, sr: _StageRun, attempt: int,
+                        reason: str) -> None:
+        """Status went dark — the serving cluster crashed or partitioned.
+
+        Re-express the *compute* Interest: the canonical name routes to a
+        surviving cluster, which re-executes exactly this stage (upstream
+        results are already published under their own names)."""
+        if sr.status != StageStatus.RUNNING or sr.attempts != attempt:
+            return
+        self._trace(run, "status-lost", sr.inst.id,
+                    f"cluster={sr.cluster} reason={reason}")
+        self._retry_or_fail(run, sr, f"status:{reason}")
+
+    # ---------------------------------------------------------- completion
+    def _complete(self, run: WorkflowRun, sr: _StageRun) -> None:
+        sr.status = StageStatus.COMPLETE
+        sr.completed_at = self.net.now
+        self._trace(run, "stage-complete", sr.inst.id,
+                    f"cluster={sr.cluster} cached={int(sr.from_cache)}")
+        if (self.completion_model is not None and not sr.from_cache
+                and sr.submitted_at is not None):
+            self.completion_model.observe(
+                dict(sr.inst.fields), face_id=-1,
+                duration=self.net.now - sr.submitted_at)
+        run.remaining -= 1
+        for dep_id in run.dependents[sr.inst.id]:
+            dsr = run.stages[dep_id]
+            dsr.waiting_on -= 1
+            if dsr.waiting_on == 0 and dsr.status == StageStatus.WAITING:
+                self._launch(run, dsr)
+        if run.remaining == 0:
+            run.finished_at = self.net.now
+            self._trace(run, "workflow-complete", run.workflow.name,
+                        f"makespan={run.makespan:.6f}")
+            if self.fetch_sink_results:
+                self._fetch_sinks(run)
+
+    def _fetch_sinks(self, run: WorkflowRun) -> None:
+        for inst in run.workflow.sinks():
+            def on_data(d: Data, inst=inst) -> None:
+                run.results[inst.id] = d.json()
+                self._trace(run, "result-fetched", inst.id,
+                            f"{len(d.content)}B")
+
+            self.consumer.express(
+                Interest(name=inst.result_name,
+                         lifetime=self.interest_lifetime),
+                on_data=on_data,
+                on_fail=lambda r, inst=inst: self._trace(
+                    run, "result-fetch-failed", inst.id, r),
+                retries=self.express_retries)

@@ -4,9 +4,17 @@ import os
 import subprocess
 import sys
 
+import jax
+import pytest
+
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
+OLD_JAX = not hasattr(jax, "shard_map")   # jax<0.5: experimental shard_map
 
+
+@pytest.mark.xfail(OLD_JAX, strict=False,
+                   reason="jax<0.5 experimental shard_map raises _SpecError "
+                          "when transposing the pipeline stage function")
 def test_pp_loss_and_grads_match_sequential():
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"

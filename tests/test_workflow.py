@@ -1,0 +1,205 @@
+"""Workflow DAGs: compilation, scatter–gather execution, result caching.
+
+Everything runs on the deterministic virtual-clock network; cluster
+executors log every invocation into an ExecutionLog keyed by job
+signature, which is the ground truth for the exactly-once / zero-
+execution assertions (a cache-served stage never reaches an executor).
+"""
+
+import pytest
+
+from repro.core.jobs import decode_input_names, encode_input_names
+from repro.core.names import Name
+from repro.core.strategy import AdaptiveStrategy, LoadShareStrategy
+from repro.workflow import WorkflowEngine, WorkflowError, WorkflowSpec
+from repro.workflow.apps import build_workflow_fleet
+
+DATASET = "/lidc/data/reads/sample"
+
+
+def blast_spec(dataset: str = DATASET, parts: int = 4, tag: str = "t"
+               ) -> WorkflowSpec:
+    return (WorkflowSpec(f"blast-{tag}")
+            .stage("shard", "wf-shard", inputs=[dataset], parts=parts, tag=tag)
+            .stage("align", "wf-align", inputs=["@shard"], fanout=parts,
+                   tag=tag)
+            .stage("merge", "wf-merge", inputs=["@align"], tag=tag))
+
+
+def fleet(n=3, strategy=None, data_bytes=128 * 1024):
+    system, log = build_workflow_fleet(n, chips=4, strategy=strategy)
+    system.lake.put_bytes(Name.parse(DATASET), bytes(range(256)) *
+                          (data_bytes // 256))
+    return system, log
+
+
+# ---------------------------------------------------------------------------
+# input-name codec
+# ---------------------------------------------------------------------------
+
+def test_input_name_codec_round_trips():
+    names = [Name.parse("/lidc/data/reads/sample"),
+             Name.parse("/lidc/data/results/abc123")]
+    enc = encode_input_names(names)
+    assert "/" not in enc
+    assert decode_input_names(enc) == names
+    assert decode_input_names("") == []
+
+
+def test_input_name_codec_rejects_separator_collisions():
+    with pytest.raises(ValueError):
+        encode_input_names([Name(("lidc", "data", "a,b"))])
+    with pytest.raises(ValueError):
+        encode_input_names([Name(("lidc", "data", "k=v&x=y"))])
+
+
+# ---------------------------------------------------------------------------
+# DAG compilation
+# ---------------------------------------------------------------------------
+
+def test_compile_orders_and_expands_scatter():
+    wf = blast_spec(parts=3).compile()
+    ids = list(wf.instances)
+    assert ids == ["shard", "align.0", "align.1", "align.2", "merge"]
+    merge = wf.instances["merge"]
+    assert set(merge.deps) == {"align.0", "align.1", "align.2"}
+    # every instance's result name is precomputed and distinct
+    rnames = {str(i.result_name) for i in wf.instances.values()}
+    assert len(rnames) == len(wf.instances)
+    # align inputs are the shard's (single) result name
+    for i in range(3):
+        inst = wf.instances[f"align.{i}"]
+        assert inst.fields["in"] == encode_input_names(
+            [wf.instances["shard"].result_name])
+        assert inst.fields["part"] == i
+
+
+def test_compile_is_deterministic():
+    a, b = blast_spec().compile(), blast_spec().compile()
+    assert list(a.instances) == list(b.instances)
+    for i in a.instances:
+        assert a.instances[i].request_name == b.instances[i].request_name
+        assert a.instances[i].result_name == b.instances[i].result_name
+
+
+def test_compile_rejects_cycles():
+    wf = WorkflowSpec("cyclic")
+    wf.stage("a", "wf-merge", inputs=["@b"])
+    wf.stage("b", "wf-merge", inputs=["@a"])
+    with pytest.raises(WorkflowError, match="cycle"):
+        wf.compile()
+
+
+def test_compile_rejects_unknown_ref_and_dup_and_bad_fanout():
+    with pytest.raises(WorkflowError, match="unknown stage"):
+        WorkflowSpec("x").stage("a", "wf-merge", inputs=["@ghost"]).compile()
+    with pytest.raises(WorkflowError, match="duplicate"):
+        WorkflowSpec("x").stage("a", "wf-merge").stage("a", "wf-merge")
+    with pytest.raises(WorkflowError, match="fanout"):
+        WorkflowSpec("x").stage("a", "wf-merge", fanout=0)
+    with pytest.raises(WorkflowError, match="input"):
+        WorkflowSpec("x").stage("a", "wf-merge", inputs=["not-a-name"])
+
+
+def test_compile_rejects_fanout_mismatch():
+    wf = WorkflowSpec("mismatch")
+    wf.stage("a", "wf-align", fanout=3, inputs=[DATASET])
+    wf.stage("b", "wf-align", fanout=2, inputs=["@a"])
+    with pytest.raises(WorkflowError, match="element-wise"):
+        wf.compile()
+
+
+def test_scatter_chain_is_element_wise():
+    wf = WorkflowSpec("chain")
+    wf.stage("a", "wf-align", fanout=2, inputs=[DATASET])
+    wf.stage("b", "wf-align", fanout=2, inputs=["@a"])
+    compiled = wf.compile()
+    for i in range(2):
+        b = compiled.instances[f"b.{i}"]
+        assert b.deps == (f"a.{i}",)
+        assert b.fields["in"] == encode_input_names(
+            [compiled.instances[f"a.{i}"].result_name])
+
+
+# ---------------------------------------------------------------------------
+# end-to-end scatter–gather over the overlay
+# ---------------------------------------------------------------------------
+
+def test_scatter_gather_completes_exactly_once():
+    system, log = fleet(3, strategy=LoadShareStrategy())
+    wf = blast_spec(parts=4).compile()
+    run = WorkflowEngine(system.net, system.overlay.edge).run(wf)
+    assert run.complete and run.failed is None
+    assert run.makespan is not None and run.makespan > 0
+    # exactly-once: every stage instance reached an executor exactly once
+    assert sorted(log.per_signature().values()) == [1] * 6
+    assert run.cache_hits == 0 and run.resubmissions == 0
+    # the merge saw all four align outputs and the full dataset size
+    merge = run.results["merge"]
+    assert merge["inputs"] == 4
+    assert merge["total_bytes"] == 128 * 1024
+    assert merge["best_score"] > 0
+
+
+def test_scatter_spreads_across_clusters():
+    system, log = fleet(
+        4, strategy=AdaptiveStrategy(probe_fanout=1, rotate_cold_probes=True))
+    run = WorkflowEngine(system.net, system.overlay.edge).run(
+        blast_spec(parts=4).compile())
+    assert run.complete
+    # cold-probe rotation places the scatter instances on distinct clusters
+    align_clusters = {c for _, app, c, _ in log.events if app == "wf-align"}
+    assert len(align_clusters) >= 3, log.events
+
+
+def test_identical_stages_dedup_within_workflow():
+    system, log = fleet(3, strategy=LoadShareStrategy())
+    wf = WorkflowSpec("dedup")
+    wf.stage("shard", "wf-shard", inputs=[DATASET], parts=2)
+    # two logical stages with byte-identical fields -> one canonical name
+    wf.stage("m1", "wf-merge", inputs=["@shard"])
+    wf.stage("m2", "wf-merge", inputs=["@shard"])
+    compiled = wf.compile()
+    assert (compiled.instances["m1"].request_name
+            == compiled.instances["m2"].request_name)
+    run = WorkflowEngine(system.net, system.overlay.edge).run(compiled)
+    assert run.complete
+    # the duplicate stage aggregated onto the first: one merge execution
+    assert sorted(log.per_signature().values()) == [1, 1]
+
+
+def test_identical_workflow_twice_is_fully_cache_served():
+    """Satellite: second submission completes with ZERO cluster executions."""
+    system, log = fleet(3, strategy=LoadShareStrategy())
+    wf = blast_spec(parts=4).compile()
+    run1 = WorkflowEngine(system.net, system.overlay.edge).run(wf)
+    assert run1.complete and log.total == 6
+
+    run2 = WorkflowEngine(system.net, system.overlay.edge).run(
+        blast_spec(parts=4).compile())
+    assert run2.complete
+    assert log.total == 6, "second run must not reach any executor"
+    assert run2.cache_hits == len(run2.workflow)
+    assert run2.makespan < run1.makespan
+    # same digest-derived names -> same results, served from the lake/CS
+    assert run2.results["merge"]["best_score"] == \
+        run1.results["merge"]["best_score"]
+
+
+def test_shared_subworkflow_dedups_across_workflows():
+    """A workflow reusing another's sub-computation skips re-executing it."""
+    system, log = fleet(3, strategy=LoadShareStrategy())
+    run1 = WorkflowEngine(system.net, system.overlay.edge).run(
+        blast_spec(parts=4).compile())
+    assert run1.complete and log.total == 6
+
+    # same shard+align sub-DAG, different terminal stage params
+    wf2 = (WorkflowSpec("blast-roc")
+           .stage("shard", "wf-shard", inputs=[DATASET], parts=4, tag="t")
+           .stage("align", "wf-align", inputs=["@shard"], fanout=4, tag="t")
+           .stage("merge", "wf-merge", inputs=["@align"], tag="different"))
+    run2 = WorkflowEngine(system.net, system.overlay.edge).run(wf2.compile())
+    assert run2.complete
+    # only the new merge executed; shard+aligns were cache hits
+    assert log.total == 7
+    assert run2.cache_hits == 5
