@@ -1,0 +1,23 @@
+"""Shared writer for the BENCH_<suite>.json perf-trajectory artifacts.
+
+One format, written by every benchmark's ``--smoke`` run and consumed by
+``scripts/check_bench_regression.py``: a ``_suite`` tag, the
+``_gate_metrics`` list CI compares against the committed baseline, and
+the (rounded) metrics themselves.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from typing import Dict, List
+
+
+def write_bench_json(suite: str, gate_metrics: List[str],
+                     results: Dict[str, float], path: str) -> None:
+    payload = {"_suite": suite,
+               "_gate_metrics": [m for m in gate_metrics if m in results]}
+    payload.update({k: round(float(v), 6) for k, v in sorted(results.items())})
+    with open(path, "w") as fh:
+        json.dump(payload, fh, indent=2)
+    print(f"wrote {path}", file=sys.stderr)

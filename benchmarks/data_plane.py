@@ -1,0 +1,310 @@
+"""Bulk data-plane scenarios: windowed segment pipeline vs monolithic Data.
+
+The paper's "data intensive" half lives or dies on wide-area object
+transfer (NRP, arXiv:2505.22864), and Pilot-Data-style parallel replica
+access (arXiv:1301.6228) is where multi-cluster fetches win.  This suite
+measures exactly that, on the deterministic virtual clock with
+store-and-forward link bandwidth modeled (``Face.bandwidth``):
+
+1. **Parallel replicas** — one object announced by 1–8 clusters; the
+   windowed :class:`SegmentFetcher` (AIMD cwnd, strategy window-split)
+   vs the monolithic single-Data baseline (bare-name fetch, kept as the
+   in-bench oracle).  Reports effective throughput, speedup and the
+   window trace; asserts the producer path stayed zero-copy.
+2. **Shared consumers** — a second consumer fetches the same object;
+   intermediate Content Stores (byte-budgeted) must serve ≥90 % of the
+   bytes without touching the replicas.
+3. **Lossy links** — seeded per-packet loss on every replica path; the
+   fetch must complete byte-identical with goodput bounded by
+   retransmissions, not collapse.
+
+``--smoke`` runs the CI-sized configuration, asserts the floor
+(speedup ≥ 4× at 64 MiB / 4 replicas, CS reuse ≥ 0.9, zero copies) and
+writes ``BENCH_data_plane.json`` at the repo root for the
+trajectory-regression gate (scripts/check_bench_regression.py).
+"""
+
+from __future__ import annotations
+
+import argparse
+import random
+import sys
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+sys.path.insert(0, "src")  # allow running as a script from the repo root
+
+from _bench_io import write_bench_json  # noqa: E402
+from repro.core.forwarder import Consumer, Forwarder, Network, link  # noqa: E402
+from repro.core.names import Name  # noqa: E402
+from repro.core.packets import Interest  # noqa: E402
+from repro.core.strategy import AdaptiveStrategy  # noqa: E402
+from repro.datalake import DataLake, fetch  # noqa: E402
+
+MB = 2 ** 20
+LINK_BW = 100 * MB          # bytes/sec per replica path
+SEGMENT = 1 * MB
+
+# metrics the CI regression gate compares against the committed baseline
+GATE_METRICS = [
+    "speedup_64mib_4rep",
+    "windowed_throughput_mbps_64mib_4rep",
+    "second_consumer_cs_fraction",
+    "lossy_goodput_mbps",
+    "replica_scaling_8_over_1",
+]
+
+
+def make_blob(size: int, seed: int = 0) -> bytes:
+    # numpy, not random.randbytes: the latter overflows a C int at >=256 MiB
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 256, size, dtype=np.uint8).tobytes()
+
+
+class Plane:
+    """client ── edge ── N replica gateways, each with its own lake."""
+
+    def __init__(self, n_replicas: int, *, bandwidth: float = LINK_BW,
+                 latency: float = 0.001, segment: int = SEGMENT,
+                 loss: float = 0.0, seed: int = 7,
+                 edge_cs_bytes: int = 512 * MB,
+                 client_cs_bytes: int = 8 * MB):
+        self.net = Network()
+        strat = lambda: AdaptiveStrategy(probe_fanout=1)  # noqa: E731
+        self.client = Forwarder(self.net, "client", strategy=strat(),
+                                cs_capacity_bytes=client_cs_bytes)
+        self.edge = Forwarder(self.net, "edge", strategy=strat(),
+                              cs_capacity_bytes=edge_cs_bytes)
+        cf, ef = link(self.net, self.client, self.edge, 0.0005)
+        # the site uplink is provisioned for the aggregate replica rate
+        cf.bandwidth = ef.bandwidth = n_replicas * bandwidth
+        self.client.register_route(Name.parse("/lidc/data"), cf)
+        self.lakes: List[DataLake] = []
+        self.upstream_faces = []            # gw->edge (data direction)
+        for i in range(n_replicas):
+            gw = Forwarder(self.net, f"gw{i}")
+            fe, fg = link(self.net, self.edge, gw, latency)
+            fe.bandwidth = fg.bandwidth = bandwidth
+            if loss:
+                fg.loss = loss
+                fg.loss_rng = random.Random(seed + i)
+            lake = DataLake(segment_size=segment)
+            lake.attach(gw)
+            self.edge.register_route(Name.parse("/lidc/data"), fe)
+            self.lakes.append(lake)
+            self.upstream_faces.append(fg)
+
+    def publish(self, name: Name, blob: bytes) -> None:
+        for lake in self.lakes:
+            lake.put_bytes(name, blob)
+
+    def upstream_data_bytes(self) -> int:
+        return sum(f.tx_data_bytes for f in self.upstream_faces)
+
+    def store_copies(self) -> int:
+        return sum(lake.store.copies for lake in self.lakes)
+
+
+def fetch_monolithic(plane: Plane, name: Name) -> Dict[str, float]:
+    """Bare-name fetch: one reassembled Data — the baseline/oracle path."""
+    consumer = Consumer(plane.net, plane.client)
+    box: Dict[str, float] = {}
+    t0 = plane.net.now
+    consumer.express(Interest(name=name, lifetime=120.0),
+                     on_data=lambda d: box.update(
+                         t=plane.net.now, nbytes=len(d.content)))
+    plane.net.run()
+    assert "t" in box, "monolithic fetch never completed"
+    return {"duration": box["t"] - t0, "bytes": box["nbytes"]}
+
+
+# ---------------------------------------------------------------------------
+# 1. parallel replicas
+# ---------------------------------------------------------------------------
+
+def bench_parallel(size: int, n_replicas: int, *, seed: int = 7,
+                   init_cwnd: float = 4.0) -> Dict[str, float]:
+    name = Name.parse("/lidc/data/bulk/obj")
+    blob = make_blob(size, seed)
+
+    mono_plane = Plane(n_replicas, seed=seed)
+    mono_plane.publish(name, blob)
+    mono = fetch_monolithic(mono_plane, name)
+
+    win_plane = Plane(n_replicas, seed=seed)
+    win_plane.publish(name, blob)
+    f = fetch(win_plane.net, win_plane.client, name, init_cwnd=init_cwnd,
+              verify_key=win_plane.lakes[0].key)
+    assert f.result == blob, f"windowed fetch wrong/failed: {f.error}"
+    copies = win_plane.store_copies()
+    assert copies == 0, f"producer path copied: {copies} bytes() calls"
+    dur = f.stats["duration"]
+    return {
+        "mono_throughput_mbps": size / mono["duration"] / MB,
+        "windowed_throughput_mbps": size / dur / MB,
+        "speedup": mono["duration"] / dur,
+        "max_cwnd": f.stats["max_cwnd"],
+        "window_decreases": f.stats["window_decreases"],
+        "retransmissions": f.stats["retransmissions"],
+        "producer_copies": float(copies),
+    }
+
+
+# ---------------------------------------------------------------------------
+# 2. shared consumers (intermediate CS reuse)
+# ---------------------------------------------------------------------------
+
+def bench_shared(size: int, n_replicas: int, *, seed: int = 7
+                 ) -> Dict[str, float]:
+    name = Name.parse("/lidc/data/bulk/shared")
+    blob = make_blob(size, seed + 1)
+    plane = Plane(n_replicas, seed=seed)
+    plane.publish(name, blob)
+    f1 = fetch(plane.net, plane.client, name, init_cwnd=4.0)
+    assert f1.result == blob, f1.error
+    up0 = plane.upstream_data_bytes()
+    f2 = fetch(plane.net, plane.client, name, init_cwnd=4.0)
+    assert f2.result == blob, f2.error
+    upstream_second = plane.upstream_data_bytes() - up0
+    return {
+        "second_consumer_cs_fraction": 1.0 - upstream_second / size,
+        "second_consumer_throughput_mbps": size / f2.stats["duration"] / MB,
+        "edge_cs_bytes_stored": float(plane.edge.cs.bytes_stored),
+    }
+
+
+# ---------------------------------------------------------------------------
+# 3. lossy links
+# ---------------------------------------------------------------------------
+
+def bench_lossy(size: int, n_replicas: int, loss: float, *, seed: int = 7
+                ) -> Dict[str, float]:
+    name = Name.parse("/lidc/data/bulk/lossy")
+    blob = make_blob(size, seed + 2)
+    plane = Plane(n_replicas, loss=loss, seed=seed)
+    plane.publish(name, blob)
+    f = fetch(plane.net, plane.client, name)
+    assert f.result == blob, f"lossy fetch wrong/failed: {f.error}"
+    nseg = max(1, (size + SEGMENT - 1) // SEGMENT)
+    return {
+        "lossy_goodput_mbps": size / f.stats["duration"] / MB,
+        "lossy_retransmissions": f.stats["retransmissions"],
+        "lossy_window_decreases": f.stats["window_decreases"],
+        "lossy_overhead_ratio": f.stats["retransmissions"] / nseg,
+    }
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+def run(sizes_mib, replica_counts, *, loss: float, seed: int
+        ) -> Dict[str, float]:
+    results: Dict[str, float] = {}
+    t_wall = time.perf_counter()
+
+    # replica scaling at the anchor size
+    anchor = 64 if 64 in sizes_mib else max(sizes_mib)
+    per_replica: Dict[int, float] = {}
+    for n in replica_counts:
+        r = bench_parallel(anchor * MB, n, seed=seed)
+        per_replica[n] = r["windowed_throughput_mbps"]
+        for k, v in r.items():
+            results[f"{k}_{anchor}mib_{n}rep"] = v
+        print(f"[parallel] {anchor} MiB x {n} replicas: "
+              f"mono {r['mono_throughput_mbps']:.0f} MB/s, windowed "
+              f"{r['windowed_throughput_mbps']:.0f} MB/s "
+              f"({r['speedup']:.2f}x), max_cwnd {r['max_cwnd']:.0f}")
+    if len(replica_counts) > 1:
+        lo, hi = min(replica_counts), max(replica_counts)
+        results[f"replica_scaling_{hi}_over_{lo}"] = \
+            per_replica[hi] / per_replica[lo]
+
+    # size sweep at the widest replica count
+    n_wide = max(replica_counts)
+    for s in sizes_mib:
+        if s == anchor:
+            continue
+        r = bench_parallel(s * MB, n_wide, seed=seed)
+        results[f"speedup_{s}mib_{n_wide}rep"] = r["speedup"]
+        results[f"windowed_throughput_mbps_{s}mib_{n_wide}rep"] = \
+            r["windowed_throughput_mbps"]
+        print(f"[parallel] {s} MiB x {n_wide} replicas: "
+              f"{r['windowed_throughput_mbps']:.0f} MB/s "
+              f"({r['speedup']:.2f}x)")
+
+    results.update(bench_shared(anchor * MB, n_wide, seed=seed))
+    print(f"[shared] second consumer: "
+          f"{results['second_consumer_cs_fraction'] * 100:.1f}% of bytes "
+          f"from intermediate Content Stores")
+
+    results.update(bench_lossy(min(8, anchor) * MB, 2, loss, seed=seed))
+    print(f"[lossy] p={loss}: goodput "
+          f"{results['lossy_goodput_mbps']:.0f} MB/s, "
+          f"{results['lossy_retransmissions']:.0f} retx, "
+          f"{results['lossy_window_decreases']:.0f} window decreases")
+
+    results["wall_seconds"] = time.perf_counter() - t_wall
+    return results
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--sizes-mib", default="1,16,64,256",
+                    help="comma-separated object sizes (MiB)")
+    ap.add_argument("--replicas", default="1,2,4,8",
+                    help="comma-separated replica counts")
+    ap.add_argument("--loss", type=float, default=0.05)
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run asserting the perf floor; writes "
+                         "BENCH_data_plane.json at the repo root")
+    ap.add_argument("--json", dest="json_path", default=None,
+                    help="also write results as JSON to this path")
+    args = ap.parse_args(argv)
+
+    sizes = [int(s) for s in args.sizes_mib.split(",")]
+    replicas = [int(s) for s in args.replicas.split(",")]
+    if args.smoke:
+        sizes = [8, 64]
+        replicas = [1, 4, 8]
+
+    results = run(sizes, replicas, loss=args.loss, seed=args.seed)
+    print("metric,value")
+    for k, v in sorted(results.items()):
+        print(f"{k},{v:.6g}")
+
+    json_path = args.json_path
+    if args.smoke and json_path is None:
+        json_path = "BENCH_data_plane.json"
+    if json_path:
+        write_bench_json("data_plane", GATE_METRICS, results, json_path)
+
+    failures = []
+    if args.smoke:
+        if results["speedup_64mib_4rep"] < 4.0:
+            failures.append(
+                f"64 MiB / 4-replica speedup "
+                f"{results['speedup_64mib_4rep']:.2f}x < 4x")
+        if results["second_consumer_cs_fraction"] < 0.9:
+            failures.append(
+                f"second consumer CS fraction "
+                f"{results['second_consumer_cs_fraction']:.3f} < 0.9")
+        if results["producer_copies_64mib_4rep"] != 0:
+            failures.append("producer put/serve path performed bytes copies")
+        if results.get("replica_scaling_8_over_1", 99.0) < 3.0:
+            failures.append(
+                f"8-replica vs 1-replica scaling "
+                f"{results['replica_scaling_8_over_1']:.2f}x < 3x")
+    if failures:
+        for f in failures:
+            print(f"FAIL: {f}", file=sys.stderr)
+        return 1
+    print("ok: all data-plane invariants hold", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -24,7 +24,6 @@ regression.
 from __future__ import annotations
 
 import argparse
-import json
 import random
 import sys
 import time
@@ -32,12 +31,30 @@ from typing import Dict, List, Optional, Tuple
 
 sys.path.insert(0, "src")  # allow running as a script from the repo root
 
+from _bench_io import write_bench_json  # noqa: E402
 from repro.core.forwarder import Network  # noqa: E402
 from repro.core.names import Name  # noqa: E402
 from repro.core.overlay import MeshTopology  # noqa: E402
 from repro.core.packets import Data, Interest  # noqa: E402
 from repro.core.strategy import AdaptiveStrategy  # noqa: E402
 from repro.core.tables import Fib, LinearFib, NextHop  # noqa: E402
+
+# metrics the CI regression gate compares against the committed baseline.
+# Only host-independent (virtual-clock / deterministic) numbers belong
+# here.  Wall-clock metrics — lookups/s, interests/s, and even the
+# trie-vs-linear speedup ratio (CHANGES.md records a 93-125x spread
+# across runs, already past the 20% tolerance) — ride along in the JSON
+# for the trajectory record but would flake the gate on shared runners;
+# the trie speedup keeps its own generous >=5x floor inside --smoke.
+GATE_METRICS = [
+    "ring_delivery_rate",
+    "tree_delivery_rate",
+    "random_delivery_rate",
+    "ring_churn_delivery_rate",
+    "tree_churn_delivery_rate",
+    "random_churn_delivery_rate",
+    "ring_cs_hit_rate",
+]
 
 APPS = ("train", "serve", "blast", "align", "fold", "sim", "etl", "render")
 ARCHS = ("qwen2-0.5b", "qwen3-1.7b", "xlstm-350m", "mamba2", "moe-30b",
@@ -396,9 +413,11 @@ def main(argv: Optional[List[str]] = None) -> int:
     for k, v in results.items():
         print(f"{k},{v:.6g}")
 
-    if args.json_path:
-        with open(args.json_path, "w") as f:
-            json.dump(results, f, indent=2, sort_keys=True)
+    json_path = args.json_path
+    if args.smoke and json_path is None:
+        json_path = "BENCH_scale_forwarding.json"   # perf-trajectory artifact
+    if json_path:
+        write_bench_json("scale_forwarding", GATE_METRICS, results, json_path)
 
     failures = []
     if results["lpm_trie_vs_linear_speedup"] < 5.0:

@@ -27,6 +27,7 @@ from typing import Dict, Optional
 
 sys.path.insert(0, "src")  # allow running as a script from the repo root
 
+from _bench_io import write_bench_json  # noqa: E402
 from repro.core.names import Name  # noqa: E402
 from repro.core.strategy import AdaptiveStrategy  # noqa: E402
 from repro.workflow import (FaultInjector, WorkflowEngine,  # noqa: E402
@@ -180,8 +181,20 @@ def main(argv: Optional[list] = None) -> int:
             print(f"[{head}] " + " ".join(f"{k}={v}" for k, v in r.items()))
             r["scenario"] = head
 
-    failures = []
     by = {r["scenario"]: r for r in results}
+    if args.smoke:
+        # perf-trajectory artifact for the CI regression gate
+        write_bench_json(
+            "workflow_scenarios", ["makespan_speedup", "cache_hit_rate"],
+            {"makespan_speedup": float(by["makespan"]["speedup"]),
+             "cache_hit_rate": float(by["result-cache"]["cache_hit_rate"]),
+             "recovery_latency_s": float(
+                 by["crash-recovery"]["recovery_latency_s"]),
+             "stages_reexecuted": float(
+                 by["crash-recovery"]["stages_reexecuted"])},
+            "BENCH_workflow_scenarios.json")
+
+    failures = []
     if not by["makespan"]["exactly_once"]:
         failures.append("makespan: duplicate executions on the cold run")
     if by["makespan"]["speedup"] < 1.5:

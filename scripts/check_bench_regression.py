@@ -1,0 +1,82 @@
+"""Compare a fresh BENCH_<suite>.json against the committed baseline.
+
+Every benchmark ``--smoke`` run writes its results (plus a
+``_gate_metrics`` list of the metrics worth tracking across PRs) to
+``BENCH_<suite>.json`` at the repo root.  CI stashes the committed
+baseline before the smoke run overwrites it, then calls this script:
+a gated metric that drops more than ``--tolerance`` (default 20 %)
+below the baseline fails the build.  All gated metrics are
+higher-is-better by construction (speedups, delivery rates, hit rates,
+throughput); a *better* current value is reported and passes.
+
+Usage:
+    python scripts/check_bench_regression.py \
+        --baseline /tmp/bench-baseline/BENCH_data_plane.json \
+        --current BENCH_data_plane.json [--tolerance 0.2]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--current", required=True)
+    ap.add_argument("--tolerance", type=float, default=0.20,
+                    help="max allowed fractional regression (default 0.20)")
+    ap.add_argument("--metrics", default=None,
+                    help="comma-separated override of the gated metrics "
+                         "(default: the baseline's _gate_metrics list)")
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        base = json.load(f)
+    with open(args.current) as f:
+        cur = json.load(f)
+
+    metrics = (args.metrics.split(",") if args.metrics
+               else base.get("_gate_metrics", []))
+    if not metrics:
+        print("no gated metrics in baseline; nothing to check",
+              file=sys.stderr)
+        return 0
+
+    failures = []
+    for m in metrics:
+        b, c = base.get(m), cur.get(m)
+        if b is None or c is None:
+            failures.append(f"{m}: missing ({'baseline' if b is None else 'current'})")
+            continue
+        b, c = float(b), float(c)
+        if math.isnan(b) or math.isnan(c):
+            print(f"  skip  {m}: NaN (unmeasured phase)")
+            continue
+        if b <= 0:
+            print(f"  skip  {m}: non-positive baseline {b}")
+            continue
+        ratio = c / b
+        verdict = "ok" if ratio >= 1.0 - args.tolerance else "REGRESSED"
+        print(f"  {verdict:>9s}  {m}: {b:.6g} -> {c:.6g} ({ratio:.2%})")
+        if verdict == "REGRESSED":
+            failures.append(f"{m}: {b:.6g} -> {c:.6g} "
+                            f"({(1 - ratio) * 100:.1f}% drop "
+                            f"> {args.tolerance * 100:.0f}% allowed)")
+
+    if failures:
+        print(f"\n{args.current}: perf trajectory regressed vs "
+              f"{args.baseline}:", file=sys.stderr)
+        for f in failures:
+            print(f"  FAIL: {f}", file=sys.stderr)
+        return 1
+    print(f"{args.current}: all gated metrics within "
+          f"{args.tolerance * 100:.0f}% of baseline", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

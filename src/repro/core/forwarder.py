@@ -7,6 +7,21 @@ mechanism — LPM forwarding, PIT aggregation, duplicate-nonce suppression,
 Content-Store hits, NACK-driven failover, interest-lifetime retransmission —
 behaves identically; only the transport differs (see DESIGN.md §8).
 
+Bulk-data semantics layered on top of that pipeline:
+
+* Faces optionally model **link bandwidth** (store-and-forward FIFO
+  serialization per packet), which is what makes windowed segment
+  transfer measurably faster than monolithic Data on the virtual clock.
+* The Content Store is **byte-budgeted** (``cs_capacity_bytes``) so bulk
+  segments compete for bytes rather than evicting thousands of small
+  cached results one LRU slot at a time.
+* PIT expiry is driven from *every* packet arrival and from a scheduled
+  tick at the earliest entry deadline — a quiescent forwarder still
+  reports timeouts to its strategy (loss feedback never starves).
+* ``Consumer.express`` accepts a per-Interest ``rto``, the hook the
+  windowed :class:`~repro.datalake.fetch.SegmentFetcher` uses to run its
+  own AIMD retransmission instead of the default lifetime-based retry.
+
 Topology model::
 
     consumer app ──face── Forwarder ──face── Forwarder ──face── producer app
@@ -28,7 +43,7 @@ from .names import Name
 from .packets import Data, Interest
 from .tables import ContentStore, Fib, Pit
 
-__all__ = ["Nack", "Network", "Face", "Forwarder", "Consumer"]
+__all__ = ["Nack", "Network", "Face", "Forwarder", "Consumer", "wire_size"]
 
 
 @dataclass(frozen=True)
@@ -80,6 +95,18 @@ class Network:
 # Faces
 # ---------------------------------------------------------------------------
 
+_WIRE_HEADER = 48   # nominal per-packet header bytes for the wire model
+
+
+def wire_size(packet: Any) -> int:
+    """Approximate on-the-wire size: header + name + (Data) content."""
+    size = _WIRE_HEADER + len(str(packet.name))
+    content = getattr(packet, "content", None)
+    if content is not None:
+        size += len(content)
+    return size
+
+
 @dataclass
 class Face:
     """A unidirectionally-addressed attachment point on a forwarder.
@@ -91,6 +118,13 @@ class Face:
     (workflow/faults.py): per-packet drop probability drawn from an
     injector-owned seeded RNG, and extra per-packet latency — both
     deterministic on the virtual clock.
+
+    ``bandwidth`` (bytes/sec, None = unconstrained) turns the face into a
+    store-and-forward FIFO link: each packet occupies the wire for
+    ``wire_size/bandwidth`` seconds and queues behind earlier packets.
+    This is what makes *bulk data* throughput observable on the virtual
+    clock — a 64 MiB monolithic Data serializes for seconds while 1 MiB
+    segments pipeline hop-by-hop and across replicas.
     """
 
     face_id: int
@@ -101,10 +135,14 @@ class Face:
     jitter: float = 0.0
     drops: int = 0
     loss_rng: Optional[Any] = None     # random.Random owned by the injector
+    # link capacity model (benchmarks/data_plane.py sets this)
+    bandwidth: Optional[float] = None  # bytes/sec; None = zero-width packets
+    _busy_until: float = 0.0           # FIFO serialization horizon
     # packet counters for benchmarks
     tx_interests: int = 0
     tx_data: int = 0
     tx_nacks: int = 0
+    tx_data_bytes: int = 0
     _peer_recv: Optional[Callable[[Any], None]] = None
     _net: Optional[Network] = None
 
@@ -123,10 +161,17 @@ class Face:
             self.tx_interests += 1
         elif isinstance(packet, Data):
             self.tx_data += 1
+            self.tx_data_bytes += len(packet.content)
         elif isinstance(packet, Nack):
             self.tx_nacks += 1
+        delay = self.latency + self.jitter
+        if self.bandwidth:
+            now = self._net.now
+            start = max(now, self._busy_until)
+            self._busy_until = start + wire_size(packet) / self.bandwidth
+            delay = (self._busy_until - now) + self.latency + self.jitter
         recv = self._peer_recv
-        self._net.schedule(self.latency + self.jitter, lambda: recv(packet))
+        self._net.schedule(delay, lambda: recv(packet))
 
 
 def link(net: Network, a: "Forwarder", b: "Forwarder", latency: float = 0.001
@@ -149,14 +194,18 @@ ProducerHandler = Callable[[Interest, Callable[[Data], None], float], Optional[A
 class Forwarder:
     """One NDN node: FIB + PIT + CS + strategy, with attached producer apps."""
 
-    def __init__(self, net: Network, name: str, strategy=None, cs_capacity: int = 4096):
+    def __init__(self, net: Network, name: str, strategy=None,
+                 cs_capacity: int = 4096,
+                 cs_capacity_bytes: Optional[int] = None):
         from .strategy import BestRouteStrategy  # local import to avoid cycle
         self.net = net
         self.name = name
         self.fib = Fib()
         self.pit = Pit()
-        self.cs = ContentStore(capacity=cs_capacity)
+        self.cs = ContentStore(capacity=cs_capacity,
+                               capacity_bytes=cs_capacity_bytes)
         self.strategy = strategy or BestRouteStrategy()
+        self._pit_tick_at: Optional[float] = None
         self.faces: Dict[int, Face] = {}
         self._next_face = itertools.count(1)
         # local producers: prefix -> handler
@@ -191,18 +240,41 @@ class Forwarder:
         elif isinstance(packet, Nack):
             self._on_nack(face_id, packet)
 
-    # -- interest pipeline ----------------------------------------------------
-    def _on_interest(self, in_face: int, interest: Interest) -> None:
-        now = self.net.now
-        self.stats["in_interest"] += 1
-        # expired entries are timeouts: teach the strategy that those
-        # upstreams went silent (a dark cluster never NACKs)
+    # -- pit expiry -----------------------------------------------------------
+    def _expire_pit(self, now: float) -> None:
+        """Expired entries are timeouts: teach the strategy that those
+        upstreams went silent (a dark cluster never NACKs).  Driven from
+        every packet arrival *and* from a scheduled tick armed at the
+        earliest PIT expiry, so a quiescent forwarder still records
+        timeout outcomes instead of starving the strategy of loss
+        feedback until the next Interest happens by."""
         for dead in self.pit.expire(now):
             for face_id, sent in dead.sent_at.items():
                 if face_id not in dead.resolved:
                     dead.resolved.add(face_id)
                     self._record_outcome(dead.name, face_id, False,
                                          now - sent, now)
+
+    def _arm_pit_tick(self) -> None:
+        nxt = self.pit.next_expiry()
+        if nxt is None:
+            return
+        t = nxt + 1e-9
+        if self._pit_tick_at is not None and self._pit_tick_at <= t:
+            return  # an earlier (or same) tick is already scheduled
+        self._pit_tick_at = t
+        self.net.schedule(max(t - self.net.now, 0.0), self._pit_tick)
+
+    def _pit_tick(self) -> None:
+        self._pit_tick_at = None
+        self._expire_pit(self.net.now)
+        self._arm_pit_tick()
+
+    # -- interest pipeline ----------------------------------------------------
+    def _on_interest(self, in_face: int, interest: Interest) -> None:
+        now = self.net.now
+        self.stats["in_interest"] += 1
+        self._expire_pit(now)
         if interest.hop_limit <= 0:
             self.stats["dropped"] += 1
             return
@@ -223,6 +295,7 @@ class Forwarder:
         is_retx = (prior is not None and in_face in prior.in_faces
                    and interest.nonce not in prior.nonces)
         entry, is_new, dup = self.pit.insert(interest, in_face, now)
+        self._arm_pit_tick()
         if dup:
             self.stats["dropped"] += 1
             return
@@ -245,9 +318,17 @@ class Forwarder:
                  exclude_tried: bool = False, nack_if_stuck: bool = False
                  ) -> None:
         _, hops = self.fib.lookup(interest.name)
-        live = [h for h in hops if h.healthy and not self.faces[h.face_id].down
-                and h.face_id != in_face
-                and not (exclude_tried and h.face_id in entry.out_faces)]
+        eligible = [h for h in hops
+                    if h.healthy and not self.faces[h.face_id].down
+                    and h.face_id != in_face]
+        live = [h for h in eligible
+                if not (exclude_tried and h.face_id in entry.out_faces)]
+        if not live and exclude_tried:
+            # every upstream was already tried: re-forward to the best of
+            # them instead of black-holing the retransmission until the
+            # PIT entry expires (the presumed-slow upstream may answer the
+            # fresh nonce; a windowed fetcher's retries depend on this)
+            live = eligible
         if not live:
             if nack_if_stuck:
                 self.pit.satisfy(interest.name)
@@ -256,9 +337,15 @@ class Forwarder:
         chosen = self.strategy.choose(interest, entry, live, now)
         fwd = interest.decrement_hop()
         for h in chosen:
+            # hold one congestion slot per unresolved attempt on this face:
+            # a re-forward while the prior attempt is still outstanding
+            # reuses its slot; a re-forward after a recorded outcome opens
+            # a new one (and re-arms the verdict via `resolved`)
+            if h.face_id not in entry.out_faces or h.face_id in entry.resolved:
+                h.pending += 1
+            entry.resolved.discard(h.face_id)
             entry.out_faces.add(h.face_id)
             entry.sent_at[h.face_id] = now
-            h.pending += 1
             h.last_used = now
             self._send(h.face_id, fwd)
 
@@ -266,6 +353,7 @@ class Forwarder:
                            interest: Interest) -> None:
         now = self.net.now
         entry, is_new, dup = self.pit.insert(interest, in_face, now)
+        self._arm_pit_tick()
         if dup:
             return
         if not is_new:
@@ -319,19 +407,30 @@ class Forwarder:
             for down in entry.in_faces:
                 if down != face_id and down in self.faces:
                     self._send(down, data)
+        # data arrival also drives expiry (satisfied names were popped above,
+        # so a Data landing exactly at its own deadline still wins the race)
+        self._expire_pit(now)
 
     # -- nack pipeline -------------------------------------------------------------
     def _on_nack(self, face_id: int, nack: Nack) -> None:
         now = self.net.now
         self.stats["in_nack"] += 1
+        self._expire_pit(now)
         entry = self.pit.get(nack.name)
         if entry is None:
             return
-        # mark the upstream unhealthy for this prefix and try an alternate
+        # resolve the upstream's outstanding slot; only *transport/capacity*
+        # Nacks count as loss.  "data-not-found" is an authoritative answer
+        # ("I am healthy and don't have it") — scoring it as path loss would
+        # let every small-object manifest probe poison the loss EWMA of
+        # perfectly healthy replicas
         if face_id in entry.sent_at and face_id not in entry.resolved:
             entry.resolved.add(face_id)
-            self._record_outcome(nack.name, face_id, False,
-                                 now - entry.sent_at[face_id], now)
+            if nack.reason == "data-not-found":
+                self._release_pending(nack.name, face_id)
+            else:
+                self._record_outcome(nack.name, face_id, False,
+                                     now - entry.sent_at[face_id], now)
         _, hops = self.fib.lookup(nack.name)
         untried = [h for h in hops
                    if h.face_id not in entry.out_faces
@@ -415,7 +514,11 @@ class Consumer:
     def express(self, interest: Interest,
                 on_data: Callable[[Data], None],
                 on_fail: Optional[Callable[[str], None]] = None,
-                retries: int = 3) -> None:
+                retries: int = 3, rto: Optional[float] = None) -> None:
+        """Express an Interest; ``rto`` overrides the retransmission timer
+        (default: 0.9 × interest lifetime).  Window-based transports (the
+        segment fetcher) pass their own adaptive RTO and ``retries=0`` so
+        loss surfaces as ``on_fail('timeout')`` instead of blind retries."""
         key = interest.name.components
         st = self._pending.get(key)
         if st is not None:
@@ -425,7 +528,7 @@ class Consumer:
             return
         self._pending[key] = {"waiters": [(on_data, on_fail)],
                               "retries": retries, "interest": interest,
-                              "sent": self.net.now}
+                              "rto": rto, "sent": self.net.now}
         self.net.schedule(0.0, lambda: self.node.receive(self.face.face_id, interest))
         self._arm_timeout(interest)
 
@@ -459,7 +562,10 @@ class Consumer:
         # retransmit *before* the upstream PIT entry expires (RTO < lifetime)
         # so forwarders see a live entry + fresh nonce — the retransmission
         # signal that lets them immediately try an untried upstream
-        self.net.schedule(interest.lifetime * 0.9, timeout)
+        st = self._pending.get(key)
+        rto = st.get("rto") if st else None
+        self.net.schedule(rto if rto is not None else interest.lifetime * 0.9,
+                          timeout)
 
     @staticmethod
     def _fail_waiters(st: Dict[str, Any], reason: str) -> None:

@@ -22,7 +22,7 @@ This module implements:
 from __future__ import annotations
 
 import re
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Any, Dict, Iterable, Mapping, Optional, Tuple
 
 __all__ = [
@@ -54,9 +54,20 @@ class Name:
     Components are stored as a tuple of strings.  Comparison, hashing and
     prefix tests are all component-wise (never substring-wise), matching NDN
     semantics: ``/lidc/comp`` is *not* a prefix of ``/lidc/compute``.
+
+    ``__str__`` and ``__hash__`` are computed once and cached: names are
+    immutable and both sit on the per-packet hot path (the segment pipeline
+    stringifies and hashes every ``seg=i`` name it forwards or stores).
     """
 
     components: Tuple[str, ...]
+    # lazily-computed caches; excluded from equality so Name(('a',)) built
+    # anywhere compares (and hashes) identically whether or not it has been
+    # stringified yet
+    _str: Optional[str] = field(default=None, init=False, repr=False,
+                                compare=False)
+    _hash: Optional[int] = field(default=None, init=False, repr=False,
+                                 compare=False)
 
     # -- construction ------------------------------------------------------
     @staticmethod
@@ -79,7 +90,11 @@ class Name:
 
     # -- algebra -----------------------------------------------------------
     def append(self, *components: str) -> "Name":
-        return Name.of(str(self), *components)
+        # hot path (called per segment per packet): extend the existing
+        # component tuple directly instead of round-tripping through
+        # str(self) + re-split + re-validation
+        return Name(self.components + tuple(
+            p for c in components for p in str(c).split("/") if p))
 
     def __truediv__(self, component: str) -> "Name":
         return self.append(component)
@@ -102,7 +117,18 @@ class Name:
         return self.components[i]
 
     def __str__(self) -> str:
-        return "/" + "/".join(self.components)
+        s = self._str
+        if s is None:
+            s = "/" + "/".join(self.components)
+            object.__setattr__(self, "_str", s)
+        return s
+
+    def __hash__(self) -> int:
+        h = self._hash
+        if h is None:
+            h = hash(self.components)
+            object.__setattr__(self, "_hash", h)
+        return h
 
     def __repr__(self) -> str:
         return f"Name({str(self)!r})"

@@ -76,7 +76,8 @@ class Data:
         return Data(name=name, content=json.dumps(obj, sort_keys=True).encode(), **kw)
 
     def json(self) -> Any:
-        return json.loads(self.content.decode())
+        # content may be a zero-copy memoryview (segment pipeline)
+        return json.loads(bytes(self.content).decode())
 
     def digest(self) -> str:
         return hashlib.sha256(self.content).hexdigest()[:16]

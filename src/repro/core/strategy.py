@@ -134,18 +134,31 @@ class AdaptiveStrategy(Strategy):
     cold) then lands on N different clusters instead of piling onto the
     two cheapest — deterministic placement spread with no coordinator.
     Off by default: single-job workloads want the cheapest upstreams.
+
+    ``split_segments`` (on by default) is the bulk-data fast path: an
+    Interest whose final component is ``seg=i`` belongs to a windowed
+    object fetch, and is steered to the *least-loaded* upstream — argmin
+    of (outstanding interests, score) — instead of probed/fanned out.
+    With several clusters announcing the same data prefix, a consumer's
+    congestion window naturally splits across the replicas: every
+    in-flight segment bumps its upstream's ``pending`` counter, so the
+    next segment goes wherever capacity is free, and a slow replica
+    (pending drains slower) organically receives fewer segments.
     """
 
     def __init__(self, probe_fanout: int = 2, explore_every: int = 16,
                  loss_weight: float = 8.0,
-                 rotate_cold_probes: bool = False) -> None:
+                 rotate_cold_probes: bool = False,
+                 split_segments: bool = True) -> None:
         self.probe_fanout = max(1, probe_fanout)
         self.explore_every = max(2, explore_every)
         self.loss_weight = loss_weight
         self.rotate_cold_probes = rotate_cold_probes
+        self.split_segments = split_segments
         self._decisions = 0
         self.probes = 0
         self.explorations = 0
+        self.segment_splits = 0
 
     def _rank(self, nexthops: List[NextHop]) -> List[NextHop]:
         return sorted(
@@ -154,6 +167,16 @@ class AdaptiveStrategy(Strategy):
 
     def choose(self, interest, entry, nexthops, now):
         self._decisions += 1
+        comps = interest.name.components
+        if (self.split_segments and comps and comps[-1].startswith("seg=")
+                and len(nexthops) > 1):
+            # bulk segment: single upstream, least outstanding work first —
+            # the congestion window spreads itself across the replicas
+            self.segment_splits += 1
+            return [min(nexthops,
+                        key=lambda h: (h.pending,
+                                       h.score(loss_weight=self.loss_weight),
+                                       h.cost, h.face_id))]
         measured = [h for h in nexthops if h.measured]
         if not measured:
             # cold prefix: parallel probe the cheapest upstreams; with

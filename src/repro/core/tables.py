@@ -376,6 +376,19 @@ class Pit:
     def get(self, name: Name) -> Optional[PitEntry]:
         return self._table.get(name.components)
 
+    def next_expiry(self) -> Optional[float]:
+        """Earliest live entry expiry, or None — lets a forwarder schedule
+        an expiry tick so timeouts are recorded even while quiescent."""
+        heap = self._expiry_heap
+        while heap:
+            t, _, key = heap[0]
+            entry = self._table.get(key)
+            if entry is None or entry.expiry > t:
+                heapq.heappop(heap)     # satisfied or extended: stale record
+                continue
+            return t
+        return None
+
     def expire(self, now: float) -> List[PitEntry]:
         """Pop expired entries (drives retransmission / failover upstream)."""
         dead: List[PitEntry] = []
@@ -406,14 +419,25 @@ class ContentStore:
     candidates the lexicographically-smallest *satisfying* entry wins,
     which is deterministic and — unlike the old first-in-LRU-order scan —
     never misses because a stale entry shadowed a fresh one.
+
+    Eviction is budgeted two ways: ``capacity`` bounds the entry *count*
+    and ``capacity_bytes`` (optional) bounds the summed content size.
+    Without the byte budget a 32 MiB bulk segment and a 100 B compute
+    receipt each cost one LRU slot, so one windowed object fetch could
+    evict thousands of cached results; with it, bulk data competes for
+    bytes, not slots.
     """
 
-    def __init__(self, capacity: int = 4096) -> None:
+    def __init__(self, capacity: int = 4096,
+                 capacity_bytes: Optional[int] = None) -> None:
         self.capacity = capacity
+        self.capacity_bytes = capacity_bytes
+        self.bytes_stored = 0
         self._store: "OrderedDict[Key, Data]" = OrderedDict()
         self._prefix_index: Dict[Key, Set[Key]] = {}
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
 
     # -- index plumbing ----------------------------------------------------
     def _index(self, key: Key) -> None:
@@ -429,20 +453,36 @@ class ContentStore:
                     del self._prefix_index[key[:i]]
 
     def _remove(self, key: Key) -> None:
+        self.bytes_stored -= len(self._store[key].content)
         del self._store[key]
         self._unindex(key)
 
     # -- public API --------------------------------------------------------
     def insert(self, data: Data) -> None:
+        size = len(data.content)
         key = data.name.components
-        if key in self._store:
+        if self.capacity_bytes is not None and size > self.capacity_bytes:
+            # admission control: never flush the cache for one object — but
+            # a stale smaller entry under the same name must not keep
+            # answering for content we just declined to cache
+            if key in self._store:
+                self._remove(key)
+            return
+        prior = self._store.get(key)
+        if prior is not None:
+            self.bytes_stored -= len(prior.content)
             self._store.move_to_end(key)
         else:
             self._index(key)
         self._store[key] = data
-        while len(self._store) > self.capacity:
-            oldest, _ = self._store.popitem(last=False)
+        self.bytes_stored += size
+        while len(self._store) > self.capacity or (
+                self.capacity_bytes is not None
+                and self.bytes_stored > self.capacity_bytes):
+            oldest, doomed = self._store.popitem(last=False)
+            self.bytes_stored -= len(doomed.content)
             self._unindex(oldest)
+            self.evictions += 1
 
     def match(self, interest: Interest, now: float) -> Optional[Data]:
         """Find a cached Data satisfying the Interest."""
@@ -480,3 +520,8 @@ class ContentStore:
     def hit_rate(self) -> float:
         total = self.hits + self.misses
         return self.hits / total if total else 0.0
+
+    def stats(self) -> Dict[str, float]:
+        return {"entries": len(self._store), "bytes_stored": self.bytes_stored,
+                "hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions, "hit_rate": self.hit_rate}

@@ -1,4 +1,6 @@
+from .fetch import SegmentFetcher, fetch
 from .lake import SEGMENT_SIZE, DataLake
 from .store import DirStore, MemoryStore, ObjectStore
 
-__all__ = ["DataLake", "SEGMENT_SIZE", "ObjectStore", "MemoryStore", "DirStore"]
+__all__ = ["DataLake", "SEGMENT_SIZE", "ObjectStore", "MemoryStore",
+           "DirStore", "SegmentFetcher", "fetch"]

@@ -8,6 +8,19 @@ also how multi-gigabyte checkpoints are stored and fetched.
 
 The lake attaches to a forwarder as a producer on the `/lidc/data` prefix,
 exactly like the paper's data-lake NFD + fileserver pod behind the gateway.
+
+**Segment serving + the zero-copy invariant.**  Each ``seg=i`` slice and the
+``manifest`` are first-class named objects: the producer handler answers a
+segment Interest with a Data packet whose content is the *stored
+memoryview* — no ``bytes`` materialization on the put path (segmentation
+slices one buffer) or the serve path (the view ships straight into the
+packet).  Because segments are ordinary named Data, every intermediate
+forwarder caches and aggregates at segment granularity; the consumer-side
+:class:`~repro.datalake.fetch.SegmentFetcher` pulls them under an AIMD
+congestion window and reassembles incrementally.  A bare-name Interest for
+a segmented object still answers with one reassembled monolithic Data —
+kept as the baseline/oracle path (it *does* pay a reassembly copy).
+Callers must not mutate a buffer after ``put_bytes``; the store aliases it.
 """
 
 from __future__ import annotations
@@ -41,25 +54,35 @@ class DataLake:
         self.segment_size = max(1, int(segment_size))
         self.puts = 0
         self.gets = 0
+        self.segment_serves = 0     # zero-copy store-key answers
+        self.monolithic_serves = 0  # bare-name reassembly answers (baseline)
 
     # ------------------------------------------------------------------ put
     def put_bytes(self, name: Name, blob: bytes,
                   meta: Optional[Dict[str, Any]] = None) -> Name:
-        """Store a blob under a name, segmenting if needed."""
+        """Store a blob under a name, segmenting if needed.
+
+        Zero-copy: segmentation stores ``memoryview`` slices of the one
+        input buffer — no per-segment ``bytes`` copies.  The caller must
+        not mutate ``blob`` afterwards (the store aliases it).
+        """
         assert self.prefix.is_prefix_of(name), f"{name} outside {self.prefix}"
         self.puts += 1
         seg_size = self.segment_size
-        if len(blob) <= seg_size:
+        size = len(blob)
+        if size <= seg_size:
             self.store.put(str(name), blob)
             if meta:
                 self.store.put(str(name) + "#meta", json.dumps(meta).encode())
             return name
-        nseg = (len(blob) + seg_size - 1) // seg_size
+        mv = blob if isinstance(blob, memoryview) else memoryview(blob)
+        nseg = (size + seg_size - 1) // seg_size
+        base = str(name)
         for i in range(nseg):
-            seg = blob[i * seg_size:(i + 1) * seg_size]
-            self.store.put(str(name.append(f"seg={i}")), seg)
-        manifest = {"segments": nseg, "size": len(blob), **(meta or {})}
-        self.store.put(str(name.append("manifest")), json.dumps(manifest).encode())
+            self.store.put(f"{base}/seg={i}", mv[i * seg_size:(i + 1) * seg_size])
+        manifest = {"segments": nseg, "size": size,
+                    "segment_size": seg_size, **(meta or {})}
+        self.store.put(f"{base}/manifest", json.dumps(manifest).encode())
         return name
 
     def put_json(self, name: Name, obj: Any, **kw) -> Name:
@@ -74,7 +97,13 @@ class DataLake:
                               meta={"kind": "arrays", "n": len(arrays)})
 
     # ------------------------------------------------------------------ get
-    def get_bytes(self, name: Name) -> Optional[bytes]:
+    def get_view(self, name: Name):
+        """Whole-object read returning a bytes-like *view* where possible:
+        an unsegmented object comes back exactly as stored (possibly a
+        ``memoryview`` — zero-copy); a segmented one is reassembled (which
+        copies).  Readers that only slice or buffer-protocol the result
+        (numpy, hashing, signing) should prefer this over
+        :meth:`get_bytes`."""
         self.gets += 1
         blob = self.store.get(str(name))
         if blob is not None:
@@ -82,7 +111,7 @@ class DataLake:
         man = self.store.get(str(name.append("manifest")))
         if man is None:
             return None
-        manifest = json.loads(man.decode())
+        manifest = json.loads(bytes(man).decode())
         parts: List[bytes] = []
         for i in range(int(manifest["segments"])):
             seg = self.store.get(str(name.append(f"seg={i}")))
@@ -90,6 +119,14 @@ class DataLake:
                 return None  # torn object
             parts.append(seg)
         return b"".join(parts)
+
+    def get_bytes(self, name: Name) -> Optional[bytes]:
+        """Whole-object read as ``bytes``; reassembles segmented objects
+        (the oracle / monolithic baseline path — this one *does* copy)."""
+        blob = self.get_view(name)
+        if blob is None or isinstance(blob, bytes):
+            return blob
+        return bytes(blob)
 
     def get_json(self, name: Name) -> Optional[Any]:
         blob = self.get_bytes(name)
@@ -113,13 +150,26 @@ class DataLake:
 
     # ------------------------------------------------------- producer glue
     def attach(self, node: Forwarder) -> None:
-        """Serve `/lidc/data` Interests on a forwarder (the fileserver pod)."""
+        """Serve `/lidc/data` Interests on a forwarder (the fileserver pod).
+
+        Streaming fast path: an Interest naming a stored key directly —
+        a ``seg=i`` slice, a ``manifest``, or an unsegmented object — is
+        answered from the store with *zero copies* (the stored view is the
+        packet content).  A bare-name Interest for a segmented object
+        falls back to monolithic reassembly (baseline/oracle path).
+        """
 
         def handler(interest: Interest, publish: Callable[[Data], None],
                     now: float):
-            blob = self.get_bytes(interest.name)
-            if blob is None:
-                return Nack(interest, "data-not-found")
+            blob = self.store.get(str(interest.name))
+            if blob is not None:
+                self.gets += 1
+                self.segment_serves += 1
+            else:
+                blob = self.get_bytes(interest.name)   # monolithic oracle
+                if blob is None:
+                    return Nack(interest, "data-not-found")
+                self.monolithic_serves += 1
             d = Data(name=interest.name, content=blob, created_at=now,
                      freshness=30.0)
             return sign_data(d, self.key, self.signer)

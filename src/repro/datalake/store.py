@@ -21,6 +21,14 @@ __all__ = ["ObjectStore", "MemoryStore", "DirStore"]
 
 
 class ObjectStore:
+    """Key → bytes-like mapping.  Implementations accept ``bytes`` or
+    ``memoryview`` values and must store ``bytes``/``memoryview`` inputs
+    *without copying* (the zero-copy invariant the segment pipeline relies
+    on): a segmented put hands the store N ``memoryview`` slices of one
+    blob, and the serve path ships the stored view straight into a Data
+    packet.  Callers therefore must not mutate a buffer after putting it.
+    """
+
     def put(self, key: str, blob: bytes) -> None:
         raise NotImplementedError
 
@@ -38,11 +46,19 @@ class ObjectStore:
 
 
 class MemoryStore(ObjectStore):
+    """Dict-backed store.  ``copies`` counts every ``bytes()``
+    materialization the store performed — the copy-counter the data-plane
+    benchmark asserts stays at zero across a segmented put + serve."""
+
     def __init__(self) -> None:
         self._d: Dict[str, bytes] = {}
+        self.copies = 0
 
     def put(self, key: str, blob: bytes) -> None:
-        self._d[key] = bytes(blob)
+        if not isinstance(blob, (bytes, memoryview)):
+            blob = bytes(blob)     # defensive copy for mutable inputs only
+            self.copies += 1
+        self._d[key] = blob
 
     def get(self, key: str) -> Optional[bytes]:
         return self._d.get(key)

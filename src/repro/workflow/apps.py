@@ -100,8 +100,9 @@ def make_shard_executor(log: Optional[ExecutionLog] = None):
 
         def work() -> None:
             step = max(1, -(-len(blob) // parts))   # ceil division
+            mv = memoryview(blob)                   # zero-copy sharding
             for i in range(parts):
-                seg = blob[i * step:(i + 1) * step]
+                seg = mv[i * step:(i + 1) * step]
                 sizes.append(len(seg))
                 lake.put_bytes(rname.append(f"part={i}"), seg)
 
@@ -124,7 +125,9 @@ def make_align_executor(log: Optional[ExecutionLog] = None):
         inputs = job.spec.input_names()
         part = int(job.spec.fields.get("part", 0))
         seg_name = inputs[0].append(f"part={part}")
-        seg = lake.get_bytes(seg_name)
+        # zero-copy read: the shard stage published memoryview slices, and
+        # numpy consumes the buffer protocol directly — no bytes round-trip
+        seg = lake.get_view(seg_name)
         if seg is None:
             raise FileNotFoundError(f"segment {seg_name} not in lake")
         duration = max(len(seg) / ALIGN_THROUGHPUT, 1e-3)

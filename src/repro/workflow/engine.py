@@ -22,12 +22,14 @@ fault-injection tests assert.
 
 from __future__ import annotations
 
+import json
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
 from ..core.forwarder import Consumer, Forwarder, Network
 from ..core.names import Name
 from ..core.packets import Data, Interest
+from ..datalake.fetch import SegmentFetcher
 from .dag import StageInstance, Workflow
 
 __all__ = ["StageStatus", "WorkflowRun", "WorkflowEngine"]
@@ -263,16 +265,25 @@ class WorkflowEngine:
                 self._fetch_sinks(run)
 
     def _fetch_sinks(self, run: WorkflowRun) -> None:
+        """Sink payloads ride the windowed segment pipeline: a large
+        (segmented) result streams in under the AIMD window while a small
+        one falls back to a single bare-name fetch — same bytes either
+        way, and intermediate Content Stores cache whatever the transfer
+        touched at segment granularity."""
         for inst in run.workflow.sinks():
-            def on_data(d: Data, inst=inst) -> None:
-                run.results[inst.id] = d.json()
-                self._trace(run, "result-fetched", inst.id,
-                            f"{len(d.content)}B")
+            def on_complete(blob: bytes, inst=inst) -> None:
+                run.results[inst.id] = json.loads(bytes(blob).decode())
+                self._trace(run, "result-fetched", inst.id, f"{len(blob)}B")
 
-            self.consumer.express(
-                Interest(name=inst.result_name,
-                         lifetime=self.interest_lifetime),
-                on_data=on_data,
-                on_fail=lambda r, inst=inst: self._trace(
-                    run, "result-fetch-failed", inst.id, r),
-                retries=self.express_retries)
+            SegmentFetcher(
+                self.net, self.consumer.node, inst.result_name,
+                consumer=self.consumer,
+                # thread the engine's retry/lifetime policy through so a
+                # flaky-network configuration covers the sink fetch too
+                single_retries=self.express_retries,
+                single_lifetime=self.interest_lifetime,
+                max_retries=max(10, self.express_retries * 3),
+                default_rto=self.interest_lifetime / 4,
+                on_complete=on_complete,
+                on_error=lambda r, inst=inst: self._trace(
+                    run, "result-fetch-failed", inst.id, r)).start()

@@ -1,0 +1,125 @@
+"""Byte-budgeted Content Store: eviction accounting + index consistency.
+
+The byte budget is what keeps one windowed bulk transfer from flushing
+thousands of tiny cached compute results: bulk Data competes for bytes,
+not LRU slots.  The churn property test pins the invariant the prefix
+index must keep under any interleaving of insert / evict / evict_prefix.
+"""
+
+import pytest
+
+from repro.core.names import Name
+from repro.core.packets import Data, Interest
+from repro.core.tables import ContentStore
+
+
+def d(name: str, size: int = 1) -> Data:
+    return Data(name=Name.parse(name), content=b"x" * size)
+
+
+def match_name(cs: ContentStore, name: Name):
+    """Exact-name cache probe."""
+    return cs.match(Interest(name=name), now=0.0)
+
+
+def assert_consistent(cs: ContentStore) -> None:
+    """Store <-> prefix-index <-> byte-count coherence."""
+    for key in cs._store:
+        for i in range(len(key) + 1):
+            assert key in cs._prefix_index.get(key[:i], set()), \
+                f"{key} missing from bucket {key[:i]}"
+    for prefix, bucket in cs._prefix_index.items():
+        assert bucket, f"empty bucket {prefix} left behind"
+        for key in bucket:
+            assert key in cs._store and key[:len(prefix)] == prefix
+    assert cs.bytes_stored == sum(len(v.content) for v in cs._store.values())
+
+
+def test_byte_budget_evicts_lru():
+    cs = ContentStore(capacity=100, capacity_bytes=10)
+    for i in range(5):
+        cs.insert(d(f"/n/{i}", size=4))      # 20 B total -> only 2 fit
+    assert len(cs) == 2 and cs.bytes_stored == 8
+    assert match_name(cs, Name.parse("/n/4")) is not None
+    assert match_name(cs, Name.parse("/n/0")) is None
+
+
+def test_bytes_stored_tracks_replacement():
+    cs = ContentStore(capacity_bytes=100)
+    cs.insert(d("/a", size=40))
+    cs.insert(d("/a", size=10))              # replace, don't double-count
+    assert cs.bytes_stored == 10 and len(cs) == 1
+    cs.evict_prefix(Name.parse("/a"))
+    assert cs.bytes_stored == 0
+
+
+def test_oversize_data_is_not_admitted():
+    cs = ContentStore(capacity_bytes=64)
+    for i in range(4):
+        cs.insert(d(f"/small/{i}", size=8))
+    cs.insert(d("/huge", size=1000))         # would flush everything: refuse
+    assert len(cs) == 4 and cs.bytes_stored == 32
+    assert match_name(cs, Name.parse("/huge")) is None
+
+
+def test_oversize_replacement_evicts_the_stale_prior_entry():
+    """Declining to cache a new oversize version must not leave the old
+    smaller Data answering with outdated content."""
+    cs = ContentStore(capacity_bytes=64)
+    cs.insert(d("/x", size=8))
+    cs.insert(d("/x", size=1000))            # refused — and /x invalidated
+    assert match_name(cs, Name.parse("/x")) is None
+    assert len(cs) == 0 and cs.bytes_stored == 0
+
+
+def test_entry_count_budget_still_applies():
+    cs = ContentStore(capacity=3, capacity_bytes=10 ** 9)
+    for i in range(10):
+        cs.insert(d(f"/n/{i}"))
+    assert len(cs) == 3
+
+
+def test_stats_exposes_bytes():
+    cs = ContentStore(capacity_bytes=100)
+    cs.insert(d("/a/b", size=7))
+    s = cs.stats()
+    assert s["bytes_stored"] == 7 and s["entries"] == 1
+
+
+def test_mixed_sizes_dont_starve_small_entries():
+    """One 32x-bigger object must not evict every small result."""
+    cs = ContentStore(capacity=4096, capacity_bytes=100)
+    for i in range(50):
+        cs.insert(d(f"/result/{i}", size=1))
+    cs.insert(d("/bulk/seg=0", size=60))
+    kept = sum(1 for i in range(50)
+               if match_name(cs, Name.parse(f"/result/{i}")) is not None)
+    assert kept >= 40       # bytes were reclaimed, not slots
+
+
+def test_property_prefix_index_consistent_under_churn():
+    pytest.importorskip("hypothesis", reason="property sweep needs hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    comp = st.sampled_from("abc")
+    name = st.lists(comp, min_size=1, max_size=3).map(
+        lambda cs_: "/" + "/".join(cs_))
+    op = st.one_of(
+        st.tuples(st.just("insert"), name, st.integers(1, 9)),
+        st.tuples(st.just("evict"), name, st.just(0)),
+    )
+
+    @settings(max_examples=80, deadline=None)
+    @given(st.lists(op, min_size=1, max_size=60),
+           st.integers(2, 8), st.integers(8, 64))
+    def check(ops, cap, cap_bytes):
+        cs = ContentStore(capacity=cap, capacity_bytes=cap_bytes)
+        for kind, n, size in ops:
+            if kind == "insert":
+                cs.insert(d(n, size=size))
+            else:
+                cs.evict_prefix(Name.parse(n))
+            assert len(cs) <= cap and cs.bytes_stored <= cap_bytes
+        assert_consistent(cs)
+
+    check()

@@ -87,6 +87,27 @@ def test_encode_parse_property():
     check()
 
 
+def test_str_and_hash_are_cached_and_stable():
+    n = Name.parse("/lidc/data/obj")
+    s1, s2 = str(n), str(n)
+    assert s1 is s2                       # computed once, cached
+    assert hash(n) == hash(Name(("lidc", "data", "obj")))
+    # cache fields never leak into equality
+    m = Name(("lidc", "data", "obj"))
+    str(n)                                # n cached, m not
+    assert n == m and len({n, m}) == 1
+
+
+def test_append_builds_from_components_directly():
+    n = Name.parse("/a/b")
+    assert n.append("seg=0").components == ("a", "b", "seg=0")
+    assert n.append("c/d", "e").components == ("a", "b", "c", "d", "e")
+    assert n.append("").components == ("a", "b")     # empties are dropped
+    assert n.append(7).components == ("a", "b", "7")  # non-str coerced
+    # appending never mutates the receiver (names are immutable)
+    assert n.components == ("a", "b")
+
+
 def test_prefix_property():
     pytest.importorskip("hypothesis", reason="property sweep needs hypothesis")
     from hypothesis import given, strategies as st

@@ -1,0 +1,256 @@
+"""The windowed segment pipeline: fetcher vs oracle, AIMD, zero-copy.
+
+The heart of the data plane's correctness story: whatever the network
+does — loss, reordering across unequal replica paths, window collapse —
+the bytes a :class:`SegmentFetcher` delivers must be identical to the
+:meth:`DataLake.get_bytes` oracle, deterministically on the virtual
+clock.
+"""
+
+import random
+
+import numpy as np
+import pytest
+
+from repro.core.forwarder import Consumer, Forwarder, Network, link
+from repro.core.names import Name
+from repro.core.packets import Interest
+from repro.core.strategy import AdaptiveStrategy
+from repro.datalake import DataLake, MemoryStore, SegmentFetcher, fetch
+
+SEG = 1024
+
+
+def blob_of(size: int, seed: int) -> bytes:
+    return np.random.default_rng(seed).integers(
+        0, 256, size, dtype=np.uint8).tobytes()
+
+
+def build_plane(n_replicas=2, *, seg=SEG, loss=0.0, seed=0,
+                latencies=(0.001, 0.004, 0.002, 0.006)):
+    """client — edge — N replica gateways with unequal path latencies
+    (unequal paths + a window = natural segment reordering)."""
+    net = Network()
+    client = Forwarder(net, "client",
+                       strategy=AdaptiveStrategy(probe_fanout=1))
+    edge = Forwarder(net, "edge", strategy=AdaptiveStrategy(probe_fanout=1))
+    cf, _ = link(net, client, edge, 0.0005)
+    client.register_route(Name.parse("/lidc/data"), cf)
+    lakes = []
+    for i in range(n_replicas):
+        gw = Forwarder(net, f"gw{i}")
+        fe, fg = link(net, edge, gw, latencies[i % len(latencies)])
+        if loss:
+            fg.loss = loss
+            fg.loss_rng = random.Random(seed * 1000 + i)
+        lake = DataLake(segment_size=seg)
+        lake.attach(gw)
+        edge.register_route(Name.parse("/lidc/data"), fe)
+        lakes.append(lake)
+    return net, client, lakes
+
+
+def publish(lakes, name, blob):
+    for lake in lakes:
+        lake.put_bytes(name, blob)
+
+
+def test_multi_segment_reassembly_matches_oracle():
+    net, client, lakes = build_plane()
+    name = Name.parse("/lidc/data/obj")
+    blob = blob_of(10 * SEG + 17, 1)
+    publish(lakes, name, blob)
+    f = fetch(net, client, name, verify_key=lakes[0].key)
+    assert f.state == "done", f.error
+    assert f.result == lakes[0].get_bytes(name) == blob
+    assert f.stats["segments"] == 11
+
+
+def test_small_object_single_fetch_fallback():
+    net, client, lakes = build_plane()
+    name = Name.parse("/lidc/data/small")
+    publish(lakes, name, b"tiny payload")
+    f = fetch(net, client, name)
+    assert f.state == "done" and f.result == b"tiny payload"
+    assert f.stats["segments"] == 0          # no windowed phase ran
+
+
+def test_missing_object_fails_cleanly():
+    net, client, lakes = build_plane()
+    f = fetch(net, client, Name.parse("/lidc/data/absent"))
+    assert f.state == "failed" and f.error is not None
+
+
+def test_zero_copy_on_put_and_serve():
+    net, client, lakes = build_plane(n_replicas=1)
+    name = Name.parse("/lidc/data/zc")
+    blob = blob_of(8 * SEG, 2)
+    publish(lakes, name, blob)
+    f = fetch(net, client, name)
+    assert f.result == blob
+    for lake in lakes:
+        assert isinstance(lake.store, MemoryStore)
+        assert lake.store.copies == 0        # no bytes() on put or serve
+
+
+def test_window_split_spreads_across_replicas():
+    net, client, lakes = build_plane(n_replicas=3, latencies=(0.001,) * 3)
+    name = Name.parse("/lidc/data/spread")
+    publish(lakes, name, blob_of(30 * SEG, 3))
+    f = fetch(net, client, name, init_cwnd=6)
+    assert f.result is not None
+    serves = [lake.segment_serves for lake in lakes]
+    assert all(s > 0 for s in serves), serves   # every replica pulled weight
+
+
+def test_loss_triggers_multiplicative_decrease_and_recovery():
+    net, client, lakes = build_plane(loss=0.15, seed=5)
+    name = Name.parse("/lidc/data/lossy")
+    blob = blob_of(20 * SEG, 4)
+    publish(lakes, name, blob)
+    f = fetch(net, client, name)
+    assert f.state == "done" and f.result == blob
+    assert f.stats["retransmissions"] > 0
+    assert f.stats["window_decreases"] > 0
+    mds = [c for _, c, e in f.trace if e.startswith("md")]
+    assert mds, "no multiplicative-decrease event in the window trace"
+
+
+def test_fetch_is_deterministic_on_the_virtual_clock():
+    runs = []
+    for _ in range(2):
+        net, client, lakes = build_plane(loss=0.1, seed=9)
+        name = Name.parse("/lidc/data/det")
+        publish(lakes, name, blob_of(12 * SEG + 5, 6))
+        f = fetch(net, client, name)
+        assert f.state == "done"
+        runs.append(f.trace)
+    assert runs[0] == runs[1]   # same seed -> byte-identical window trace
+
+
+def test_second_consumer_served_from_intermediate_cs():
+    net, client, lakes = build_plane(n_replicas=2, latencies=(0.001, 0.001))
+    name = Name.parse("/lidc/data/popular")
+    blob = blob_of(16 * SEG, 7)
+    publish(lakes, name, blob)
+    f1 = fetch(net, client, name)
+    assert f1.result == blob
+    served_before = sum(lake.segment_serves for lake in lakes)
+    f2 = fetch(net, client, name)
+    assert f2.result == blob
+    # the replicas saw (almost) nothing of the second fetch
+    assert sum(lake.segment_serves for lake in lakes) == served_before
+
+
+def test_rto_seeds_from_nexthop_telemetry():
+    net, client, lakes = build_plane()
+    name = Name.parse("/lidc/data/warm")
+    publish(lakes, name, blob_of(4 * SEG, 8))
+    # warm the per-face RTT telemetry with an ordinary fetch
+    Consumer(net, client).get(name.append("manifest"))
+    f = SegmentFetcher(net, client, name)
+    assert f._srtt is not None and f._srtt > 0
+
+
+@pytest.mark.parametrize("size", [0, 1, SEG - 1, SEG, SEG + 1,
+                                  3 * SEG, 3 * SEG + 1])
+def test_boundary_sizes_round_trip(size):
+    net, client, lakes = build_plane()
+    name = Name.parse(f"/lidc/data/b{size}")
+    blob = blob_of(size, size)
+    publish(lakes, name, blob)
+    f = fetch(net, client, name, verify_key=lakes[0].key)
+    assert f.state == "done", f.error
+    assert f.result == blob == lakes[0].get_bytes(name)
+
+
+def test_transient_no_route_retries_instead_of_monolithic_downgrade():
+    """A no-route Nack mid-churn is transient: the fetcher must keep
+    retrying manifest discovery (and go windowed once routing heals),
+    not permanently downgrade a segmented object to one monolithic Data."""
+    net = Network()
+    client = Forwarder(net, "client", strategy=AdaptiveStrategy(probe_fanout=1))
+    gw = Forwarder(net, "gw")
+    cf, _ = link(net, client, gw, 0.001)
+    lake = DataLake(segment_size=SEG)
+    lake.attach(gw)
+    name = Name.parse("/lidc/data/late-route")
+    blob = blob_of(6 * SEG, 11)
+    lake.put_bytes(name, blob)
+    f = SegmentFetcher(net, client, name).start()   # no route yet -> Nacks
+    net.schedule(0.5, lambda: client.register_route(
+        Name.parse("/lidc/data"), cf))              # routing converges
+    net.run()
+    assert f.state == "done" and f.result == blob
+    assert f.stats["segments"] == 6                 # windowed, not monolithic
+    assert f.stats["nacks"] > 0
+
+
+def test_fetch_releases_its_auto_created_consumer_face():
+    net, client, lakes = build_plane()
+    name = Name.parse("/lidc/data/loop")
+    publish(lakes, name, blob_of(4 * SEG, 12))
+    fetch(net, client, name)                        # prime (also a fetch)
+    n_faces = len(client.faces)
+    for _ in range(5):
+        assert fetch(net, client, name).state == "done"
+    assert len(client.faces) == n_faces             # no per-fetch face leak
+
+
+def test_ambiguous_manifest_is_refused_not_corrupted():
+    """A multi-segment manifest without segment_size can't place offsets
+    safely — the fetcher must fail loudly, never reassemble a guess."""
+    import json
+    net, client, lakes = build_plane(n_replicas=1)
+    lake = lakes[0]
+    base = "/lidc/data/legacy"
+    for i, chunk in enumerate((b"aaaa", b"bbbb", b"c")):   # 4+4+1 = 9 bytes
+        lake.store.put(f"{base}/seg={i}", chunk)
+    lake.store.put(f"{base}/manifest",
+                   json.dumps({"segments": 3, "size": 9}).encode())
+    f = fetch(net, client, Name.parse(base))
+    assert f.state == "failed" and "manifest-malformed" in f.error
+
+
+def test_property_reassembly_matches_oracle_under_faults():
+    pytest.importorskip("hypothesis", reason="property sweep needs hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    sizes = st.one_of(
+        st.sampled_from([1, SEG - 1, SEG, SEG + 1, 2 * SEG, 4 * SEG + 3]),
+        st.integers(0, 5 * SEG))
+
+    @settings(max_examples=20, deadline=None)
+    @given(size=sizes, loss=st.floats(0.0, 0.25), seed=st.integers(0, 2 ** 16))
+    def check(size, loss, seed):
+        net, client, lakes = build_plane(loss=loss, seed=seed)
+        name = Name.parse("/lidc/data/prop")
+        blob = blob_of(size, seed)
+        publish(lakes, name, blob)
+        f = fetch(net, client, name, verify_key=lakes[0].key)
+        assert f.state == "done", (size, loss, seed, f.error)
+        assert f.result == lakes[0].get_bytes(name) == blob
+
+    check()
+
+
+def test_quiescent_forwarder_records_timeout_outcomes():
+    """Pit.expire rides a scheduled tick: a producer that goes silent is
+    reported to the strategy even if no later Interest ever arrives."""
+    net = Network()
+    a = Forwarder(net, "a", strategy=AdaptiveStrategy(probe_fanout=1))
+    b = Forwarder(net, "b")
+    fa, _ = link(net, a, b)
+    a.register_route(Name.parse("/x"), fa)
+    b.attach_producer(Name.parse("/x"), lambda i, pub, now: None)  # silence
+    failures = []
+    a.strategy.feedback = lambda name, face, ok, rtt, now: \
+        failures.append(ok) if not ok else None
+    Consumer(net, a).express(
+        Interest(name=Name.parse("/x/q"), lifetime=0.5),
+        on_data=lambda d: None, retries=0)
+    net.run()
+    assert len(a.pit) == 0                  # the entry expired off the tick
+    assert failures, "timeout outcome never reached the strategy"
+    hop = a.fib.nexthops(Name.parse("/x")).get(fa.face_id)
+    assert hop is not None and hop.failures >= 1 and hop.pending == 0
