@@ -1,0 +1,286 @@
+"""Routing-protocol convergence at 100-cluster scale — pure neighbor gossip.
+
+The decentralized control plane (src/repro/core/routing.py) replaces the
+global-BFS route installer; this benchmark proves the replacement holds at
+the paper's target scale.  For each topology:
+
+1. **Cold start** — 100 nodes come up knowing nothing; producers announce
+   prefixes (every 5th prefix anycast from a second origin).  We drive the
+   virtual clock until every node's *derived* FIB agrees with the retained
+   global-BFS **oracle** on reachability and shortest-path cost, and
+   record the virtual convergence time plus the control-message overhead
+   spent getting there.
+2. **Delivery** — a consumer sweeps the namespace; delivery must be
+   >= 0.99 (interests expressed against a just-converged control plane).
+3. **Churn re-convergence** — nodes leave gracefully (in-band
+   withdrawals), others fail abruptly (carrier/hello detection only), the
+   ring is repaired around them and a brand-new node joins by gossiping.
+   We measure the virtual time back to oracle agreement and the delivery
+   rate afterwards.
+
+No code path here installs a route: the oracle (``is_converged`` /
+``oracle_distances``) only *verifies* what the protocol built.
+
+``--smoke`` runs the CI-sized configuration (still 100 clusters — that is
+the point), asserts the convergence/delivery floor and writes
+``BENCH_routing_convergence.json`` for the perf-trajectory gate.
+"""
+
+from __future__ import annotations
+
+import argparse
+import random
+import sys
+import time
+from typing import Dict, List, Optional, Tuple
+
+sys.path.insert(0, "src")  # allow running as a script from the repo root
+
+from _bench_io import write_bench_json  # noqa: E402
+from repro.core.forwarder import Network  # noqa: E402
+from repro.core.names import Name  # noqa: E402
+from repro.core.overlay import MeshTopology  # noqa: E402
+from repro.core.packets import Data, Interest  # noqa: E402
+from repro.core.strategy import AdaptiveStrategy  # noqa: E402
+
+# all virtual-clock / message-count deterministic => safe to gate
+GATE_METRICS = [
+    "ring_cold_convergence_speed",
+    "ring_churn_reconvergence_speed",
+    "ring_delivery_rate",
+    "ring_churn_delivery_rate",
+    "random_cold_convergence_speed",
+    "random_churn_reconvergence_speed",
+    "random_delivery_rate",
+    "random_churn_delivery_rate",
+]
+
+APPS = ("train", "serve", "blast", "align", "fold", "sim", "etl", "render")
+
+
+def gen_prefixes(n: int, seed: int = 7) -> List[Name]:
+    rng = random.Random(seed)
+    out: List[Name] = []
+    for i in range(n):
+        name = Name.parse("/lidc/compute").append(rng.choice(APPS), f"t{i}")
+        out.append(name)
+    return out
+
+
+def build_mesh(kind: str, n_clusters: int, prefixes: List[Name], *,
+               seed: int, backup_every: int = 5
+               ) -> Tuple[MeshTopology, Dict[str, List[int]]]:
+    net = Network()
+    mesh = MeshTopology(net, n_clusters, kind, seed=seed,
+                        strategy_factory=lambda i: AdaptiveStrategy())
+    owners: Dict[str, List[int]] = {}
+
+    def make_handler():
+        def handler(interest: Interest, publish, now: float):
+            return Data(name=interest.name, content=b"r", created_at=now,
+                        freshness=60.0)
+        return handler
+
+    for i, prefix in enumerate(prefixes):
+        origin = i % n_clusters
+        mesh.attach_producer(origin, prefix, make_handler())
+        owners[str(prefix)] = [origin]
+        if backup_every and i % backup_every == 0:
+            backup = (origin + n_clusters // 2) % n_clusters
+            if backup != origin:
+                mesh.attach_producer(backup, prefix, make_handler())
+                owners[str(prefix)].append(backup)
+    return mesh, owners
+
+
+def control_totals(mesh: MeshTopology) -> Dict[str, int]:
+    out = {"msgs": 0, "advs": 0, "bytes": 0, "hellos": 0}
+    for agent in mesh.agents:
+        out["msgs"] += agent.stats["msgs_sent"]
+        out["advs"] += agent.stats["advs_sent"]
+        out["bytes"] += agent.stats["bytes_sent"]
+        out["hellos"] += agent.stats["hellos_sent"]
+    return out
+
+
+def converge_timed(mesh: MeshTopology, *, timeout: float = 60.0
+                   ) -> Tuple[float, Dict[str, int]]:
+    before = control_totals(mesh)
+    elapsed = mesh.converge(timeout=timeout, step=0.02)
+    after = control_totals(mesh)
+    spent = {k: after[k] - before[k] for k in after}
+    return elapsed, spent
+
+
+def drive_interests(mesh: MeshTopology, names: List[Name], *,
+                    consumer_node: int = 0, spacing: float = 1e-3
+                    ) -> Tuple[int, int]:
+    consumer = mesh.consumer_at(consumer_node)
+    delivered = [0]
+    failed = [0]
+    hop_limit = max(64, 2 * len(mesh) + 8)
+    for i, name in enumerate(names):
+        def express(n=name):
+            consumer.express(
+                Interest(name=n, lifetime=2.0, hop_limit=hop_limit),
+                on_data=lambda d: delivered.__setitem__(0, delivered[0] + 1),
+                on_fail=lambda r: failed.__setitem__(0, failed[0] + 1),
+                retries=2)
+        mesh.net.schedule(i * spacing, express)
+    mesh.net.run()
+    return delivered[0], failed[0]
+
+
+def query_names(owners: Dict[str, List[int]], mesh: MeshTopology,
+                n_interests: int, seed: int, tag: str) -> List[Name]:
+    """Query prefixes that still have at least one alive origin."""
+    rng = random.Random(seed)
+    alive = [p for p, origs in owners.items()
+             if any(o not in mesh.down for o in origs)]
+    return [Name.parse(rng.choice(alive)).append(f"{tag}{i}")
+            for i in range(n_interests)]
+
+
+def bench_topology(kind: str, n_clusters: int, n_prefixes: int,
+                   n_interests: int, seed: int) -> Dict[str, float]:
+    prefixes = gen_prefixes(n_prefixes, seed)
+    mesh, owners = build_mesh(kind, n_clusters, prefixes, seed=seed)
+
+    # 1. cold start: nothing is configured; gossip until oracle agreement
+    cold_s, cold_ctl = converge_timed(mesh)
+
+    # 2. delivery against the converged plane
+    delivered, failed = drive_interests(
+        mesh, query_names(owners, mesh, n_interests, seed + 1, "q"))
+    delivery = delivered / max(n_interests, 1)
+
+    # 3. churn: graceful leaves + abrupt failures + a join, ring repaired
+    rng = random.Random(seed + 2)
+    candidates = [i for i in range(1, n_clusters)
+                  if i != 0]
+    victims = sorted(rng.sample(candidates, 6))
+    leavers, failers = victims[:3], victims[3:]
+
+    def repair_around(idx: int) -> None:
+        alive = sorted(v for v in mesh.adjacency[idx] if v not in mesh.down)
+        for a, b in zip(alive, alive[1:]):
+            mesh.connect(a, b)
+
+    for idx in leavers:
+        mesh.leave(idx)
+        repair_around(idx)
+    for idx in failers:
+        mesh.fail_node(idx)
+        repair_around(idx)
+    joiner = mesh.add_node()
+    for j in (0, n_clusters // 3):
+        if j not in mesh.down:
+            mesh.connect(joiner, j)
+    joined_prefix = Name.parse("/lidc/compute/joiner").append(f"n{joiner}")
+    mesh.attach_producer(
+        joiner, joined_prefix,
+        lambda interest, publish, now: Data(name=interest.name, content=b"j",
+                                            created_at=now, freshness=60.0))
+    owners[str(joined_prefix)] = [joiner]
+
+    churn_s, churn_ctl = converge_timed(mesh)
+
+    # 4. delivery after churn (surviving + newly joined prefixes only)
+    churn_delivered, churn_failed = drive_interests(
+        mesh, query_names(owners, mesh, n_interests, seed + 3, "c"))
+    churn_delivery = churn_delivered / max(n_interests, 1)
+
+    totals = control_totals(mesh)
+    return {
+        f"{kind}_cold_convergence_s": cold_s,
+        f"{kind}_cold_convergence_speed": 1.0 / max(cold_s, 1e-9),
+        f"{kind}_cold_control_msgs": float(cold_ctl["msgs"]),
+        f"{kind}_cold_control_advs": float(cold_ctl["advs"]),
+        f"{kind}_cold_control_kib": cold_ctl["bytes"] / 1024.0,
+        f"{kind}_delivery_rate": delivery,
+        f"{kind}_churn_reconvergence_s": churn_s,
+        f"{kind}_churn_reconvergence_speed": 1.0 / max(churn_s, 1e-9),
+        f"{kind}_churn_control_msgs": float(churn_ctl["msgs"]),
+        f"{kind}_churn_delivery_rate": churn_delivery,
+        f"{kind}_control_msgs_total": float(totals["msgs"]),
+        f"{kind}_control_kib_total": totals["bytes"] / 1024.0,
+        f"{kind}_control_msgs_per_delivered": (
+            totals["msgs"] / max(delivered + churn_delivered, 1)),
+    }
+
+
+def run(n_clusters: int, n_prefixes: int, n_interests: int,
+        topologies: Tuple[str, ...], seed: int) -> Dict[str, float]:
+    results: Dict[str, float] = {
+        "clusters": float(n_clusters),
+        "prefixes": float(n_prefixes),
+    }
+    for kind in topologies:
+        t0 = time.perf_counter()
+        results.update(bench_topology(kind, n_clusters, n_prefixes,
+                                      n_interests, seed))
+        results[f"{kind}_wall_s"] = time.perf_counter() - t0
+    return results
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--clusters", type=int, default=100)
+    ap.add_argument("--prefixes", type=int, default=400)
+    ap.add_argument("--interests", type=int, default=2000)
+    ap.add_argument("--topology", default="all",
+                    choices=("ring", "tree", "random", "all"))
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (still 100 clusters) asserting the "
+                         "convergence + delivery floor")
+    ap.add_argument("--json", dest="json_path", default=None,
+                    help="also write results as JSON to this path")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        args.prefixes = min(args.prefixes, 80)
+        args.interests = min(args.interests, 500)
+        topologies = ("ring", "random")
+    else:
+        topologies = (("ring", "tree", "random") if args.topology == "all"
+                      else (args.topology,))
+
+    results = run(args.clusters, args.prefixes, args.interests,
+                  topologies, args.seed)
+    print("metric,value")
+    for k, v in results.items():
+        print(f"{k},{v:.6g}")
+
+    json_path = args.json_path
+    if args.smoke and json_path is None:
+        json_path = "BENCH_routing_convergence.json"
+    if json_path:
+        write_bench_json("routing_convergence", GATE_METRICS, results,
+                         json_path)
+
+    failures = []
+    for kind in topologies:
+        if results[f"{kind}_cold_convergence_s"] > 5.0:
+            failures.append(
+                f"{kind} cold-start convergence "
+                f"{results[f'{kind}_cold_convergence_s']:.2f}s > 5s")
+        if results[f"{kind}_churn_reconvergence_s"] > 10.0:
+            failures.append(
+                f"{kind} churn re-convergence "
+                f"{results[f'{kind}_churn_reconvergence_s']:.2f}s > 10s")
+        for phase in ("delivery_rate", "churn_delivery_rate"):
+            if results[f"{kind}_{phase}"] < 0.99:
+                failures.append(
+                    f"{kind} {phase} {results[f'{kind}_{phase}']:.3f} < 0.99")
+    if failures:
+        for f in failures:
+            print(f"FAIL: {f}", file=sys.stderr)
+        return 1
+    print("ok: decentralized routing converges and delivers at "
+          f"{args.clusters} clusters", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -3,8 +3,9 @@
 from .names import (COMPUTE_PREFIX, DATA_PREFIX, STATUS_PREFIX, Name,
                     canonical_job_name, encode_job, job_fields_of, parse_job)
 from .packets import Data, Interest, sign_data, verify_data
-from .tables import ContentStore, Fib, LinearFib, NextHop, Pit
+from .tables import ContentStore, Fib, LinearFib, NextHop, Pit, Rib, RibRoute
 from .forwarder import Consumer, Forwarder, Nack, Network, link
+from .routing import RoutingAgent, RoutingConfig, capability_cost
 from .strategy import (AdaptiveStrategy, BestRouteStrategy,
                        CompletionTimeStrategy, LoadShareStrategy,
                        MulticastStrategy, Strategy)
@@ -21,8 +22,9 @@ __all__ = [
     "Name", "canonical_job_name", "encode_job", "parse_job", "job_fields_of",
     "COMPUTE_PREFIX", "DATA_PREFIX", "STATUS_PREFIX",
     "Data", "Interest", "sign_data", "verify_data",
-    "ContentStore", "Fib", "LinearFib", "NextHop", "Pit",
+    "ContentStore", "Fib", "LinearFib", "NextHop", "Pit", "Rib", "RibRoute",
     "Consumer", "Forwarder", "Nack", "Network", "link",
+    "RoutingAgent", "RoutingConfig", "capability_cost",
     "Strategy", "AdaptiveStrategy", "BestRouteStrategy", "LoadShareStrategy",
     "MulticastStrategy",
     "CompletionTimeStrategy", "CompletionModel",

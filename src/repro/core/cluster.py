@@ -16,6 +16,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 from .forwarder import Forwarder, Network
 from .jobs import Job, JobSpec, result_name_for
 from .matchmaker import Matchmaker, ServiceEndpoint
+from .names import COMPUTE_PREFIX, DATA_PREFIX, STATUS_PREFIX, Name
 
 __all__ = ["ComputeCluster", "ExecResult"]
 
@@ -70,6 +71,11 @@ class ComputeCluster:
         self.failed_jobs = 0
         # queue of (job, endpoint, grant) waiting for chips
         self._waitq: List[Tuple[Job, ServiceEndpoint, int]] = []
+        # what the cluster *advertises* may differ from what it physically
+        # has (drain by advertising chips=0, shrink by advertising fewer);
+        # the overlay re-originates through on_caps_changed when it moves
+        self.advertise_overrides: Dict[str, Any] = {}
+        self.on_caps_changed: Optional[Callable[[], None]] = None
 
     # -- capability view used by validators --------------------------------
     def capabilities(self) -> Dict[str, Any]:
@@ -92,6 +98,54 @@ class ComputeCluster:
 
     def add_endpoint(self, endpoint: ServiceEndpoint) -> None:
         self.endpoints.append(endpoint)
+        if self.on_caps_changed is not None:
+            self.on_caps_changed()
+
+    # -- the advertised capability record (protocol-facing) -----------------
+    def capability_record(self) -> Dict[str, Any]:
+        """The capability record the routing protocol gossips: the static
+        capability view plus live load signals (free chips, admission-queue
+        depth), with any operator overrides applied.  This — not a static
+        endpoint list held by the overlay — is what remote matchmaking and
+        strategies see."""
+        record = dict(self.capabilities())
+        record["free_chips"] = self.free_chips
+        record["queue_depth"] = len(self._waitq)
+        record.update(self.advertise_overrides)
+        return record
+
+    def advertise(self, **overrides: Any) -> None:
+        """Override advertised capability fields and re-announce, e.g.
+        ``cluster.advertise(chips=0)`` drains the cluster: its compute
+        prefixes are withdrawn in-band and — within one advertisement
+        lifetime — no new compute Interests arrive."""
+        self.advertise_overrides.update(overrides)
+        if self.on_caps_changed is not None:
+            self.on_caps_changed()
+
+    def advertised_prefixes(self) -> List[Name]:
+        """Name prefixes this cluster currently offers, derived from its
+        capability record: its status namespace, one compute prefix per
+        advertised app (refined per arch), and the data namespace if it
+        hosts a lake.  A cluster whose advertised chip count is zero
+        offers no compute prefixes at all."""
+        prefixes = [Name.parse(STATUS_PREFIX).append(self.name)]
+        record = self.capability_record()
+        if int(record.get("chips", 0)) > 0:
+            seen = set()
+            for e in self.endpoints:
+                generic = Name.parse(COMPUTE_PREFIX).append(e.app)
+                if str(generic) not in seen:
+                    seen.add(str(generic))
+                    prefixes.append(generic)
+                for arch in e.archs:
+                    refined = generic.append(arch)
+                    if str(refined) not in seen:
+                        seen.add(str(refined))
+                        prefixes.append(refined)
+        if self.lake is not None:
+            prefixes.append(Name.parse(DATA_PREFIX))
+        return prefixes
 
     # -- job lifecycle -------------------------------------------------------
     def submit(self, spec: JobSpec, now: float) -> Job:
@@ -100,11 +154,17 @@ class ComputeCluster:
         When the matchmaker allows queued admission, a job whose grant
         exceeds the currently free chips is parked Pending on the wait
         queue and started by :meth:`_drain_waitq` as chips free up.
+
+        Admission is bounded by the *advertised* capability record, not
+        raw hardware: a cluster that advertised itself down to N chips
+        honors N even if it physically has more — the advertisement is a
+        contract with the network that routed the Interest here.
         """
         endpoint, grant = self.matchmaker.match(spec, self.endpoints,
                                                 self.free_chips,
                                                 queue_depth=len(self._waitq),
-                                                total_chips=self.chips)
+                                                total_chips=self.chips,
+                                                advertised=self.capability_record())
         job = Job(spec=spec, cluster=self.name, submitted_at=now,
                   granted_chips=grant, endpoint=endpoint.service)
         self.jobs[job.job_id] = job

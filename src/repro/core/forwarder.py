@@ -43,7 +43,8 @@ from .names import Name
 from .packets import Data, Interest
 from .tables import ContentStore, Fib, Pit
 
-__all__ = ["Nack", "Network", "Face", "Forwarder", "Consumer", "wire_size"]
+__all__ = ["Nack", "Network", "Face", "Forwarder", "Consumer", "wire_size",
+           "CONTROL_PREFIX", "link"]
 
 
 @dataclass(frozen=True)
@@ -63,32 +64,62 @@ class Nack:
 # ---------------------------------------------------------------------------
 
 class Network:
-    """Deterministic discrete-event scheduler shared by all nodes."""
+    """Deterministic discrete-event scheduler shared by all nodes.
+
+    Events come in two flavors.  *Live* events are application work
+    (Interests, Data, timers a consumer is waiting on).  *Daemon* events
+    are the control plane's heartbeat — routing hellos, advertisement
+    batches, refresh floods — which would tick forever and must therefore
+    never keep :meth:`run` from quiescing.  ``run()`` stops when only
+    daemon events remain; ``run(until=T)`` drives the clock through
+    daemon events up to T, which is how tests and benchmarks let the
+    routing protocol converge while the data plane is otherwise idle.
+    """
 
     def __init__(self) -> None:
-        self._queue: List[Tuple[float, int, Callable[[], None]]] = []
+        self._queue: List[Tuple[float, int, bool, Callable[[], None]]] = []
         self._seq = itertools.count()
+        self._live = 0
         self.now = 0.0
         self.events_processed = 0
 
-    def schedule(self, delay: float, fn: Callable[[], None]) -> None:
-        heapq.heappush(self._queue, (self.now + max(delay, 0.0), next(self._seq), fn))
+    def schedule(self, delay: float, fn: Callable[[], None],
+                 daemon: bool = False) -> None:
+        if not daemon:
+            self._live += 1
+        heapq.heappush(self._queue,
+                       (self.now + max(delay, 0.0), next(self._seq), daemon, fn))
 
     def run(self, until: Optional[float] = None, max_events: int = 1_000_000) -> None:
-        """Process events in time order until quiescence (or `until`)."""
+        """Process events in time order until quiescence (or `until`).
+
+        Quiescence means *no live events remain* — daemon events (routing
+        heartbeats) alone do not keep the run alive, but they do execute,
+        in time order, for as long as live events or the ``until`` horizon
+        pull the clock forward.  With ``until``, the clock always ends at
+        the horizon so back-to-back windowed runs make steady progress.
+        """
         n = 0
         while self._queue and n < max_events:
-            t, _, fn = self._queue[0]
+            t, _, daemon, fn = self._queue[0]
             if until is not None and t > until:
                 break
+            if until is None and self._live == 0:
+                break
             heapq.heappop(self._queue)
+            if not daemon:
+                self._live -= 1
             self.now = max(self.now, t)
             fn()
             n += 1
         self.events_processed += n
+        if until is not None and (not self._queue or self._queue[0][0] > until):
+            # advance to the horizon only when every event inside it ran —
+            # a max_events exhaustion must not warp queued events' clocks
+            self.now = max(self.now, until)
 
     def idle(self) -> bool:
-        return not self._queue
+        return self._live == 0
 
 
 # ---------------------------------------------------------------------------
@@ -150,7 +181,11 @@ class Face:
         self._net = net
         self._peer_recv = peer_recv
 
-    def send(self, packet: Any) -> None:
+    def send(self, packet: Any, daemon: bool = False) -> None:
+        """``daemon=True`` marks the delivery event as control-plane
+        traffic (routing adverts/hellos) that must not block network
+        quiescence; the wire model (loss, bandwidth, latency) applies to
+        it all the same — the protocol really is in-band."""
         if self.down or self._peer_recv is None or self._net is None:
             return  # packets into a dead face vanish — exactly like the wire
         if (self.loss > 0.0 and self.loss_rng is not None
@@ -171,7 +206,7 @@ class Face:
             self._busy_until = start + wire_size(packet) / self.bandwidth
             delay = (self._busy_until - now) + self.latency + self.jitter
         recv = self._peer_recv
-        self._net.schedule(delay, lambda: recv(packet))
+        self._net.schedule(delay, lambda: recv(packet), daemon=daemon)
 
 
 def link(net: Network, a: "Forwarder", b: "Forwarder", latency: float = 0.001
@@ -190,9 +225,19 @@ def link(net: Network, a: "Forwarder", b: "Forwarder", latency: float = 0.001
 
 ProducerHandler = Callable[[Interest, Callable[[Data], None], float], Optional[Any]]
 
+# control-plane namespace: Interests under this prefix are routing-protocol
+# messages, dispatched to the node's RoutingAgent before CS/PIT/FIB
+CONTROL_PREFIX = ("lidc", "rt")
+
 
 class Forwarder:
-    """One NDN node: FIB + PIT + CS + strategy, with attached producer apps."""
+    """One NDN node: FIB + PIT + CS + strategy, with attached producer apps.
+
+    ``routing`` is the node's optional :class:`~repro.core.routing.
+    RoutingAgent`: Interests under ``/lidc/rt/`` are handed to it directly
+    (hop-by-hop control traffic, never forwarded), and a failed face is
+    reported to it so link death feeds triggered routing updates.
+    """
 
     def __init__(self, net: Network, name: str, strategy=None,
                  cs_capacity: int = 4096,
@@ -205,6 +250,7 @@ class Forwarder:
         self.cs = ContentStore(capacity=cs_capacity,
                                capacity_bytes=cs_capacity_bytes)
         self.strategy = strategy or BestRouteStrategy()
+        self.routing = None   # set by RoutingAgent.__init__
         self._pit_tick_at: Optional[float] = None
         self.faces: Dict[int, Face] = {}
         self._next_face = itertools.count(1)
@@ -230,10 +276,18 @@ class Forwarder:
         """Link/cluster failure: drop routes and stop delivery."""
         face.down = True
         self.fib.remove_face(face.face_id)
+        if self.routing is not None:
+            self.routing.on_face_down(face.face_id)
 
     # -- packet entry point ---------------------------------------------------
     def receive(self, face_id: int, packet: Any) -> None:
         if isinstance(packet, Interest):
+            if (self.routing is not None
+                    and packet.name.components[:2] == CONTROL_PREFIX):
+                # hop-by-hop routing-protocol message: never enters the
+                # CS/PIT/FIB pipeline and is never forwarded
+                self.routing.handle_control(face_id, packet)
+                return
             self._on_interest(face_id, packet)
         elif isinstance(packet, Data):
             self._on_data(face_id, packet)
@@ -528,7 +582,8 @@ class Consumer:
             return
         self._pending[key] = {"waiters": [(on_data, on_fail)],
                               "retries": retries, "interest": interest,
-                              "rto": rto, "sent": self.net.now}
+                              "rto": rto, "sent": self.net.now,
+                              "noroute_retries": 0}
         self.net.schedule(0.0, lambda: self.node.receive(self.face.face_id, interest))
         self._arm_timeout(interest)
 
@@ -588,6 +643,29 @@ class Consumer:
             st = self._pending.get(packet.name.components)
             # NACK is advisory: keep the timeout armed (a retransmission may
             # reach a cluster that just joined), but report if out of retries.
-            if st is not None and st["retries"] == 0:
+            if st is None:
+                return
+            if st["retries"] == 0:
                 self._pending.pop(packet.name.components)
                 self._fail_waiters(st, f"nack:{packet.reason}")
+            elif packet.reason == "no-route" and st["noroute_retries"] < 6:
+                # a no-route NACK during route convergence is transient:
+                # the decentralized control plane is still gossiping this
+                # prefix hop-by-hop.  Retry on a short exponential backoff
+                # (bounded, deterministic, does not consume `retries`)
+                # instead of burning most of an interest lifetime.
+                st["noroute_retries"] += 1
+                backoff = 0.02 * (2 ** (st["noroute_retries"] - 1))
+                nonce = st["interest"].nonce
+                self.net.schedule(backoff,
+                                  lambda: self._fast_retransmit(
+                                      packet.name.components, nonce))
+
+    def _fast_retransmit(self, key: Tuple[str, ...], nonce: int) -> None:
+        st = self._pending.get(key)
+        if st is None or st["interest"].nonce != nonce:
+            return  # answered, failed, or superseded meanwhile
+        fresh = st["interest"].refresh()
+        st["interest"] = fresh
+        self.node.receive(self.face.face_id, fresh)
+        self._arm_timeout(fresh)

@@ -22,7 +22,7 @@ from typing import Callable, Dict, Optional
 
 from .cluster import ComputeCluster
 from .forwarder import Nack
-from .jobs import Job, JobSpec, JobState, result_name_for  # noqa: F401
+from .jobs import JobSpec, JobState, result_name_for
 from .matchmaker import MatchError
 from .names import COMPUTE_PREFIX, STATUS_PREFIX, Name, job_fields_of
 from .packets import Data, Interest, sign_data
@@ -55,9 +55,13 @@ class Gateway:
         if fields is None:
             return self._reject(interest, "malformed-job-name")
         app = fields.pop("app")
-        # 1. application-specific validation (paper §IV.B)
+        # 1. application-specific validation (paper §IV.B) — against the
+        #    *advertised* capability record, the same one the routing
+        #    protocol gossiped: what the network was promised is what the
+        #    gateway honors, even if the hardware underneath differs
         try:
-            self.validators.validate(app, fields, self.cluster.capabilities())
+            self.validators.validate(app, fields,
+                                     self.cluster.capability_record())
         except ValidationError as e:
             return self._reject(interest, f"validation:{e}")
         spec = JobSpec(app=app, fields=fields)

@@ -12,7 +12,7 @@ memory model, then grants chips.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import Callable, List, Mapping, Optional, Sequence, Tuple
 
 from .jobs import JobSpec
 
@@ -100,13 +100,26 @@ class Matchmaker:
 
     def match(self, spec: JobSpec, endpoints: Sequence[ServiceEndpoint],
               free_chips: int, *, queue_depth: int = 0,
-              total_chips: Optional[int] = None) -> Tuple[ServiceEndpoint, int]:
+              total_chips: Optional[int] = None,
+              advertised: Optional[Mapping] = None
+              ) -> Tuple[ServiceEndpoint, int]:
         """Pick (endpoint, chip grant) for a job.
 
         The returned grant may exceed ``free_chips`` when queued admission
         applies (``queue_depth < max_queue_depth`` and the job fits the
         cluster's *total* capacity) — the caller queues such jobs.
+
+        ``advertised`` is the cluster's capability record as gossiped by
+        the routing protocol; when present it caps both budgets, so a
+        cluster that advertised fewer chips than it physically has never
+        grants past its advertisement.
         """
+        if advertised is not None and "chips" in advertised:
+            adv_chips = int(advertised["chips"])
+            used = max(0, (total_chips or free_chips) - free_chips)
+            free_chips = max(0, min(free_chips, adv_chips - used))
+            if total_chips is not None:
+                total_chips = min(total_chips, adv_chips)
         candidates = [e for e in endpoints if e.serves(spec)]
         if not candidates:
             raise MatchError(f"no endpoint serves app={spec.app} "

@@ -1,12 +1,17 @@
 """The multi-cluster compute overlay + a client-side facade.
 
-Clusters join the overlay by *announcing name prefixes* (the analog of NLSR
-route announcement in the paper's NDN testbed): the generic
-``/lidc/compute/<app>`` plus refined per-arch prefixes, their status
-namespace, and — if they host a lake — the data namespace.  Leaving (or
-dying) withdraws the routes; consumers' retransmissions then reach the
-remaining clusters.  No central controller exists anywhere in this file —
-that is the point of the paper.
+Clusters join the overlay by *advertising name prefixes through the
+routing protocol* (:mod:`repro.core.routing`, the analog of NLSR in the
+paper's NDN testbed): the generic ``/lidc/compute/<app>`` plus refined
+per-arch prefixes, their status namespace, and — if they host a lake —
+the data namespace, each advertisement carrying the cluster's capability
+record (chips, free chips, queue depth).  Joining requires **zero route
+pre-configuration**: the cluster's gateway gossips to whatever node it is
+linked to, and the overlay converges hop-by-hop.  Leaving withdraws the
+routes in-band; dying is detected by hello/carrier failure.  No central
+controller — and, since this refactor, no omniscient route installer —
+exists anywhere in this file; the global BFS survives only as the test
+oracle (:meth:`MeshTopology.oracle_distances`).
 
 :class:`LidcSystem` wires network + clusters + lake + client together for
 examples, tests and benchmarks.
@@ -22,9 +27,9 @@ from typing import Any, Callable, Dict, Iterable, List, Optional, Set, Tuple
 from .cluster import ComputeCluster
 from .forwarder import Consumer, Face, Forwarder, Network, link
 from .gateway import Gateway
-from .names import (COMPUTE_PREFIX, DATA_PREFIX, STATUS_PREFIX, Name,
-                    canonical_job_name)
+from .names import Name, canonical_job_name
 from .packets import Data, Interest
+from .routing import RoutingAgent, RoutingConfig
 from .strategy import BestRouteStrategy, Strategy
 
 __all__ = ["Overlay", "MeshTopology", "LidcClient", "LidcSystem"]
@@ -33,62 +38,87 @@ __all__ = ["Overlay", "MeshTopology", "LidcClient", "LidcSystem"]
 class Overlay:
     """A star/partial-mesh overlay rooted at an edge router.
 
-    The edge router is *not* a controller: it holds no job state, only FIB
-    routes learned from announcements, exactly like any NDN router.
+    The edge router is *not* a controller: it holds no job state and is
+    never told any routes — it learns them from the clusters' in-band
+    advertisements, exactly like any NDN router running the protocol.
     """
 
-    def __init__(self, net: Network, strategy: Optional[Strategy] = None):
+    def __init__(self, net: Network, strategy: Optional[Strategy] = None,
+                 routing: Optional[RoutingConfig] = None):
         self.net = net
+        self.routing_cfg = routing or RoutingConfig()
         self.edge = Forwarder(net, "edge", strategy=strategy or BestRouteStrategy())
+        self.edge_agent = RoutingAgent(self.edge, self.routing_cfg)
+        self.edge_agent.start()
         self.links: Dict[str, Tuple[Face, Face]] = {}
         self.clusters: Dict[str, ComputeCluster] = {}
         self.gateways: Dict[str, Gateway] = {}
+        self.agents: Dict[str, RoutingAgent] = {}
 
     # -- membership ----------------------------------------------------------
     def announced_prefixes(self, cluster: ComputeCluster) -> List[Name]:
-        prefixes = [Name.parse(STATUS_PREFIX).append(cluster.name)]
-        seen = set()
-        for e in cluster.endpoints:
-            generic = Name.parse(COMPUTE_PREFIX).append(e.app)
-            if str(generic) not in seen:
-                seen.add(str(generic))
-                prefixes.append(generic)
-            for arch in e.archs:
-                refined = generic.append(arch)
-                if str(refined) not in seen:
-                    seen.add(str(refined))
-                    prefixes.append(refined)
-        if cluster.lake is not None:
-            prefixes.append(Name.parse(DATA_PREFIX))
-        return prefixes
+        """What the cluster advertises — derived from its capability
+        record (see :meth:`ComputeCluster.advertised_prefixes`), not from
+        a static endpoint list held by the overlay."""
+        return cluster.advertised_prefixes()
 
     def add_cluster(self, cluster: ComputeCluster, *, latency: float = 0.002,
-                    cost: float = 1.0, validators=None) -> Gateway:
-        """Join: link the gateway node and announce its prefixes."""
+                    validators=None) -> Gateway:
+        """Join: link the gateway node; the cluster *advertises* its
+        prefixes and capability record through the protocol.  Nothing is
+        written into the edge's FIB from here."""
         gw = Gateway(cluster, validators=validators)
         edge_face, gw_face = link(self.net, self.edge, cluster.node, latency)
         self.links[cluster.name] = (edge_face, gw_face)
         self.clusters[cluster.name] = cluster
         self.gateways[cluster.name] = gw
-        for prefix in self.announced_prefixes(cluster):
-            self.edge.register_route(prefix, edge_face, cost=cost)
+        agent = RoutingAgent(cluster.node, self.routing_cfg,
+                             name=cluster.name)
+        self.agents[cluster.name] = agent
+        # refreshes re-sample the record so free_chips/queue_depth gossip live
+        agent.caps_provider = cluster.capability_record
+        self.edge_agent.add_neighbor(edge_face)
+        agent.add_neighbor(gw_face)
+        agent.start()
+        self._advertise_cluster(cluster, agent)
+        cluster.on_caps_changed = (
+            lambda c=cluster, a=agent: self._advertise_cluster(c, a))
         return gw
 
+    def _advertise_cluster(self, cluster: ComputeCluster,
+                           agent: RoutingAgent) -> None:
+        """(Re-)originate the cluster's advertisements from its current
+        capability record; prefixes it no longer serves (e.g. it
+        advertised its chips down to zero) are withdrawn in-band."""
+        caps = cluster.capability_record()
+        wanted = {str(p): p for p in cluster.advertised_prefixes()}
+        for prefix_s in [p for p in agent.origins if p not in wanted]:
+            agent.withdraw(Name.parse(prefix_s))
+        for prefix in wanted.values():
+            agent.originate(prefix, caps=caps)
+
     def remove_cluster(self, name: str) -> None:
-        """Graceful leave: withdraw routes, drop the link."""
+        """Graceful leave: withdraw routes in-band, then drop the link."""
         cluster = self.clusters.pop(name, None)
         self.gateways.pop(name, None)
+        agent = self.agents.pop(name, None)
         if cluster is None:
             return
+        if agent is not None:
+            agent.withdraw_all()
+            agent.flush_now()   # withdrawals hit the wire before the cut
+            agent.stop()        # no zombie heartbeat after removal
+        cluster.on_caps_changed = None
         edge_face, gw_face = self.links.pop(name)
-        self.edge.fib.remove_face(edge_face.face_id)
         edge_face.down = gw_face.down = True
+        self.edge_agent.remove_neighbor(edge_face.face_id)
 
     def fail_cluster(self, name: str) -> None:
-        """Abrupt failure: the cluster goes dark *without* withdrawing routes.
-
-        The edge only discovers it through timeouts/NACK absence — this is
-        the hard case the paper's decentralized design must survive.
+        """Abrupt failure: the cluster goes dark *without* withdrawing
+        routes — the hard case the decentralized design must survive.
+        Until the edge's routing agent notices the dead carrier at its
+        next heartbeat and purges the routes locally, only timeouts/NACK
+        absence reveal the failure; no withdrawal is ever sent.
         """
         cluster = self.clusters[name]
         cluster.fail()
@@ -104,9 +134,11 @@ class Overlay:
     def partition(self, names: Iterable[str]) -> None:
         """Overlay partition: the named clusters stay *alive* (jobs keep
         running, state is kept) but both link directions are cut — the
-        fault-injection hook for split-brain scenarios.  Routes are not
-        withdrawn; only timeouts reveal the partition, exactly like
-        :meth:`fail_cluster` but with the cluster's clock still ticking."""
+        fault-injection hook for split-brain scenarios.  No withdrawal is
+        sent (exactly like :meth:`fail_cluster`, but with the cluster's
+        clock still ticking): timeouts reveal the cut first, then each
+        side's routing agent detects the dead carrier at its next
+        heartbeat and purges its own routes; healing resyncs in-band."""
         for name in names:
             edge_face, gw_face = self.links[name]
             edge_face.down = gw_face.down = True
@@ -123,19 +155,26 @@ class Overlay:
 # ---------------------------------------------------------------------------
 
 class MeshTopology:
-    """N forwarders wired into a ring / tree / random mesh.
+    """N forwarders wired into a ring / tree / random mesh — a dumb link
+    fabric plus one :class:`~repro.core.routing.RoutingAgent` per node.
 
     The star :class:`Overlay` above models one edge router; this models the
     *multi-organization* deployments the paper targets — every node is an
     independent NDN forwarder, producers announce prefixes from arbitrary
-    nodes, and routes are installed along shortest paths (the stand-in for
-    NLSR flooding in the paper's testbed).  Equal-cost next hops are all
-    installed, so strategies see real multipath and failover choices.
+    nodes, and routes disseminate **hop-by-hop through the routing
+    protocol**: no function in this class writes another node's FIB.
+    Equal-cost next hops (and near-equal detours, within the protocol's
+    multipath slack) all appear in the derived FIBs, so strategies see
+    real multipath and failover choices.
 
     Churn is first-class: :meth:`leave` gracefully withdraws a node's
-    announcements, :meth:`fail_node` makes it go dark (routes stay, packets
-    vanish — the hard case), :meth:`heal_node` brings it back, and
-    :meth:`add_node` grows the mesh mid-run.
+    announcements in-band, :meth:`fail_node` makes it go dark (neighbors
+    detect the dead link and send triggered updates — the hard case),
+    :meth:`heal_node` brings it back (hello resync), and :meth:`add_node`
+    grows the mesh mid-run.  :meth:`converge` drives the virtual clock
+    until the derived FIBs agree with the retained global-BFS **oracle**
+    (:meth:`oracle_distances`) — the oracle verifies the protocol, it
+    never installs anything.
     """
 
     KINDS = ("ring", "tree", "random")
@@ -143,28 +182,24 @@ class MeshTopology:
     def __init__(self, net: Network, n: int, kind: str = "ring", *,
                  seed: int = 0, extra_edges: Optional[int] = None,
                  latency: float = 0.001,
-                 strategy_factory: Optional[Callable[[int], Strategy]] = None):
+                 strategy_factory: Optional[Callable[[int], Strategy]] = None,
+                 routing: Optional[RoutingConfig] = None):
         if kind not in self.KINDS:
             raise ValueError(f"unknown topology kind {kind!r}; want {self.KINDS}")
         self.net = net
         self.kind = kind
         self.latency = latency
+        self.routing_cfg = routing or RoutingConfig()
         self._strategy_factory = strategy_factory
         self.nodes: List[Forwarder] = []
+        self.agents: List[RoutingAgent] = []
         self.adjacency: Dict[int, Set[int]] = {}
         self.down: Set[int] = set()
         # (i, j) -> the face on node i that leads to node j
         self.faces: Dict[Tuple[int, int], Face] = {}
-        # (origin, prefix key) -> [(node idx, face_id)] routes we installed
-        self._announcements: Dict[Tuple[int, Tuple[str, ...]],
-                                  List[Tuple[int, int]]] = {}
-        # (node idx, prefix key, face_id) -> announcement refcount; two
-        # origins of one anycast prefix can share a (node, face) route, and
-        # withdrawing one must not sever the other's
-        self._route_refs: Dict[Tuple[int, Tuple[str, ...], int], int] = {}
         # origin -> prefixes its local producers serve (drives re-announce)
         self._producer_prefixes: Dict[int, List[Name]] = {}
-        self._bfs_cache: Dict[int, Tuple[Dict[int, int], Dict[int, List[int]]]] = {}
+        self._bfs_cache: Dict[int, Dict[int, int]] = {}
         for _ in range(n):
             self.add_node()
         rng = random.Random(seed)
@@ -188,8 +223,11 @@ class MeshTopology:
         idx = len(self.nodes)
         strategy = (self._strategy_factory(idx)
                     if self._strategy_factory is not None else None)
-        self.nodes.append(Forwarder(self.net, name or f"mesh{idx}",
-                                    strategy=strategy))
+        node = Forwarder(self.net, name or f"mesh{idx}", strategy=strategy)
+        self.nodes.append(node)
+        agent = RoutingAgent(node, self.routing_cfg)
+        agent.start()
+        self.agents.append(agent)
         self.adjacency[idx] = set()
         self._bfs_cache.clear()
         return idx
@@ -200,17 +238,70 @@ class MeshTopology:
         fa, fb = link(self.net, self.nodes[i], self.nodes[j], self.latency)
         self.faces[(i, j)] = fa
         self.faces[(j, i)] = fb
+        self.agents[i].add_neighbor(fa)
+        self.agents[j].add_neighbor(fb)
         self.adjacency[i].add(j)
         self.adjacency[j].add(i)
         self._bfs_cache.clear()
 
-    # -- shortest-path route installation ------------------------------------
-    def _bfs(self, origin: int) -> Tuple[Dict[int, int], Dict[int, List[int]]]:
-        """Distances from origin + each node's equal-cost next hops toward it.
+    # -- announcements (protocol origination; nothing global) ----------------
+    def announce(self, origin: int, prefix: Name,
+                 caps: Optional[Dict[str, Any]] = None) -> None:
+        """Originate ``prefix`` at ``origin`` — dissemination is entirely
+        the routing protocol's job from here."""
+        if origin in self.down:
+            return
+        self.agents[origin].originate(prefix, caps=caps)
 
-        Nodes currently ``down`` are invisible — routes computed after a
-        failure (see :meth:`refresh_routes`) steer around them.
+    def withdraw(self, origin: int, prefix: Name) -> None:
+        """Withdraw one origin's announcement in-band (anycast twins
+        announced elsewhere are untouched — per-origin sequence-gated
+        withdrawals cannot sever another origin's routes)."""
+        self.agents[origin].withdraw(prefix)
+        served = self._producer_prefixes.get(origin)
+        if served and prefix in served:
+            served.remove(prefix)
+
+    def attach_producer(self, origin: int, prefix: Name, handler) -> None:
+        """Producer app at a node: local handler + protocol announcement."""
+        self.nodes[origin].attach_producer(prefix, handler)
+        self._producer_prefixes.setdefault(origin, []).append(prefix)
+        self.announce(origin, prefix)
+
+    def consumer_at(self, idx: int, name: str = "consumer") -> Consumer:
+        return Consumer(self.net, self.nodes[idx], name=name)
+
+    def refresh_routes(self) -> None:
+        """Compatibility shim for callers that used to force global
+        re-convergence: every *alive* node runs one local failure-detect +
+        re-originate + flush round immediately instead of waiting for its
+        next heartbeat.  Still strictly neighbor-to-neighbor."""
+        for idx, agent in enumerate(self.agents):
+            if idx not in self.down:
+                agent.poke()
+
+    def converge(self, *, timeout: float = 30.0, step: float = 0.05) -> float:
+        """Drive the virtual clock until the protocol's derived FIBs agree
+        with the BFS oracle (or ``timeout`` virtual seconds elapse).
+        Returns the virtual time spent; raises if convergence never came.
         """
+        deadline = self.net.now + timeout
+        t0 = self.net.now
+        while True:
+            if self.is_converged():
+                return self.net.now - t0
+            if self.net.now >= deadline:
+                raise TimeoutError(
+                    f"routing did not converge within {timeout}s "
+                    f"(virtual); divergent state remains")
+            self.net.run(until=min(self.net.now + step, deadline))
+
+    # -- the retained global-BFS oracle (verification only) ------------------
+    def oracle_distances(self, origin: int) -> Dict[int, int]:
+        """Hop distances from ``origin`` over currently-alive nodes.  This
+        is the old global-BFS installer demoted to a *test oracle*: the
+        property tests and the convergence benchmark compare the
+        protocol's derived FIBs against it; nothing forwards with it."""
         cached = self._bfs_cache.get(origin)
         if cached is not None:
             return cached
@@ -222,87 +313,72 @@ class MeshTopology:
                 if v not in dist and v not in self.down:
                     dist[v] = dist[u] + 1
                     q.append(v)
-        nexthops: Dict[int, List[int]] = {}
-        for u, d in dist.items():
-            if u == origin:
-                continue
-            nexthops[u] = sorted(v for v in self.adjacency[u]
-                                 if dist.get(v, 1 << 30) == d - 1)
-        self._bfs_cache[origin] = (dist, nexthops)
-        return dist, nexthops
+        self._bfs_cache[origin] = dist
+        return dist
 
-    def announce(self, origin: int, prefix: Name) -> None:
-        """Install routes toward ``origin`` for ``prefix`` on every node.
-
-        Every shortest-path next hop is installed at cost = distance, and
-        equal-distance *lateral* neighbors at cost = distance + 0.5 —
-        detour routes that strategies only reach after the primaries are
-        exhausted, which is what lets forwarding route around a dark node
-        without waiting for routing to re-converge (PIT nonce suppression
-        keeps lateral forwarding loop-free).
-        """
-        key = (origin, prefix.components)
-        if key in self._announcements or origin in self.down:
-            return
-        dist, nexthops = self._bfs(origin)
-        installed: List[Tuple[int, int]] = []
-
-        def install(u: int, face: Face, cost: float) -> None:
-            self.nodes[u].register_route(prefix, face, cost=cost)
-            ref = (u, prefix.components, face.face_id)
-            self._route_refs[ref] = self._route_refs.get(ref, 0) + 1
-            installed.append((u, face.face_id))
-
-        for u, vias in nexthops.items():
-            for v in vias:
-                install(u, self.faces[(u, v)], float(dist[u]))
-            for v in self.adjacency[u]:
-                if dist.get(v) == dist[u] and v != origin:
-                    install(u, self.faces[(u, v)], dist[u] + 0.5)
-        self._announcements[key] = installed
-
-    def withdraw(self, origin: int, prefix: Name) -> None:
-        """Remove only the routes this origin's announcement installed."""
-        for u, face_id in self._announcements.pop((origin, prefix.components), ()):
-            ref = (u, prefix.components, face_id)
-            remaining = self._route_refs.get(ref, 1) - 1
-            if remaining <= 0:
-                self._route_refs.pop(ref, None)
-                self.nodes[u].fib.unregister(prefix, face_id)
-            else:
-                self._route_refs[ref] = remaining
-
-    def attach_producer(self, origin: int, prefix: Name, handler) -> None:
-        """Producer app at a node: local handler + mesh-wide announcement."""
-        self.nodes[origin].attach_producer(prefix, handler)
-        self._producer_prefixes.setdefault(origin, []).append(prefix)
-        self.announce(origin, prefix)
-
-    def consumer_at(self, idx: int, name: str = "consumer") -> Consumer:
-        return Consumer(self.net, self.nodes[idx], name=name)
-
-    def refresh_routes(self) -> None:
-        """Routing re-convergence (the NLSR stand-in): recompute every
-        announcement's shortest paths around whatever is currently down."""
-        for origin, comps in list(self._announcements):
-            self.withdraw(origin, Name(comps))
-        self._bfs_cache.clear()
+    def announced(self) -> Dict[Tuple[str, ...], List[int]]:
+        """prefix key -> alive origins currently announcing it."""
+        out: Dict[Tuple[str, ...], List[int]] = {}
         for origin, prefixes in self._producer_prefixes.items():
-            if origin not in self.down:
-                for p in prefixes:
-                    self.announce(origin, p)
+            if origin in self.down:
+                continue
+            for p in prefixes:
+                if str(p) in self.agents[origin].origins:
+                    out.setdefault(p.components, []).append(origin)
+        return out
+
+    def is_converged(self) -> bool:
+        """Does every alive node's FIB agree with the oracle on both
+        *reachability* and *shortest-path cost* for every announcement?
+
+        Assumes announcements carry no capability cost (the mesh tests and
+        benchmarks announce bare prefixes), so FIB cost == hop distance.
+        """
+        announced = self.announced()
+        for u in range(len(self.nodes)):
+            if u in self.down:
+                continue
+            fib = self.nodes[u].fib
+            for key, origins in announced.items():
+                dists = [self.oracle_distances(o).get(u) for o in origins]
+                dists = [d for d in dists if d is not None]
+                want = min(dists) if dists else None
+                hops = fib.nexthops(Name(key))
+                have = min((h.cost for h in hops.values()), default=None)
+                if want is None or want == 0:
+                    # unreachable (or the origin itself): no usable route
+                    # may remain — a nexthop through a live face is stale
+                    live = [h for h in hops.values()
+                            if not self.nodes[u].faces[h.face_id].down]
+                    if want == 0:
+                        continue    # the origin node itself: FIB content free
+                    if live:
+                        return False
+                elif have != float(want):
+                    return False
+            # and nothing *extra*: prefixes nobody announces must be gone
+            for p in list(fib.prefixes()):
+                if p.components not in announced:
+                    if any(not self.nodes[u].faces[h.face_id].down
+                           for h in fib.nexthops(p).values()):
+                        return False
+        return True
 
     # -- churn ----------------------------------------------------------------
     def leave(self, idx: int) -> None:
-        """Graceful leave: withdraw announcements, then drop the links."""
-        for origin, comps in list(self._announcements):
-            if origin == idx:
-                self.withdraw(origin, Name(comps))
+        """Graceful leave: flood withdrawals in-band, then drop the links.
+        The departed node's agent retires (no zombie heartbeat); unlike
+        :meth:`fail_node`, a leave is permanent."""
+        self.agents[idx].withdraw_all()
+        self.agents[idx].flush_now()    # withdrawals leave before the cut
+        self.agents[idx].stop()
         self._producer_prefixes.pop(idx, None)
         self.fail_node(idx)
 
     def fail_node(self, idx: int) -> None:
-        """Node goes dark without withdrawing routes (the hard case)."""
+        """Node goes dark without withdrawing routes (the hard case):
+        neighbors find out via carrier/hello failure detection and send
+        triggered updates — there is no oracle to clean up after it."""
         self.down.add(idx)
         self._bfs_cache.clear()
         for j in self.adjacency[idx]:
@@ -446,12 +522,18 @@ class LidcClient:
 # ---------------------------------------------------------------------------
 
 class LidcSystem:
-    """Network + overlay + shared data lake + one client, pre-wired."""
+    """Network + overlay + shared data lake + one client, pre-wired.
 
-    def __init__(self, strategy: Optional[Strategy] = None):
+    Clusters added here need **zero route pre-configuration**: each one
+    advertises its prefixes + capability record through the routing
+    protocol and the edge learns them in-band.
+    """
+
+    def __init__(self, strategy: Optional[Strategy] = None,
+                 routing: Optional[RoutingConfig] = None):
         from ..datalake.lake import DataLake
         self.net = Network()
-        self.overlay = Overlay(self.net, strategy=strategy)
+        self.overlay = Overlay(self.net, strategy=strategy, routing=routing)
         self.lake = DataLake()
         self.client = LidcClient(self.net, self.overlay.edge)
 

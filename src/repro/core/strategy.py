@@ -135,6 +135,18 @@ class AdaptiveStrategy(Strategy):
     two cheapest — deterministic placement spread with no coordinator.
     Off by default: single-job workloads want the cheapest upstreams.
 
+    FIB costs are no longer static announcement hop counts: the routing
+    protocol derives them from *advertised* cost — path length plus the
+    origin's capability penalty (a cluster that advertised no free chips
+    or a deep admission queue costs more; see
+    :func:`repro.core.routing.capability_cost`).  Cold-prefix probing
+    ranks by that cost, so the very first Interest for a prefix is seeded
+    toward the cluster that advertised spare capacity.  ``cost_bias``
+    additionally folds the advertised cost into the *measured* ranking
+    (score × (1 + cost_bias × (cost − 1))), so a capability downgrade
+    gossiped mid-run steers warm traffic too; 0 keeps the historical
+    pure-telemetry ranking.
+
     ``split_segments`` (on by default) is the bulk-data fast path: an
     Interest whose final component is ``seg=i`` belongs to a windowed
     object fetch, and is steered to the *least-loaded* upstream — argmin
@@ -149,12 +161,14 @@ class AdaptiveStrategy(Strategy):
     def __init__(self, probe_fanout: int = 2, explore_every: int = 16,
                  loss_weight: float = 8.0,
                  rotate_cold_probes: bool = False,
-                 split_segments: bool = True) -> None:
+                 split_segments: bool = True,
+                 cost_bias: float = 0.0) -> None:
         self.probe_fanout = max(1, probe_fanout)
         self.explore_every = max(2, explore_every)
         self.loss_weight = loss_weight
         self.rotate_cold_probes = rotate_cold_probes
         self.split_segments = split_segments
+        self.cost_bias = cost_bias
         self._decisions = 0
         self.probes = 0
         self.explorations = 0
@@ -163,7 +177,9 @@ class AdaptiveStrategy(Strategy):
     def _rank(self, nexthops: List[NextHop]) -> List[NextHop]:
         return sorted(
             nexthops,
-            key=lambda h: (h.score(loss_weight=self.loss_weight), h.cost, h.face_id))
+            key=lambda h: (h.score(loss_weight=self.loss_weight)
+                           * (1.0 + self.cost_bias * max(h.cost - 1.0, 0.0)),
+                           h.cost, h.face_id))
 
     def choose(self, interest, entry, nexthops, now):
         self._decisions += 1

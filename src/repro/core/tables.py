@@ -1,5 +1,11 @@
-"""FIB, PIT and Content Store — the three NDN forwarding tables.
+"""RIB, FIB, PIT and Content Store — the NDN control/forwarding tables.
 
+* RIB: the *routing* information base — every prefix advertisement a node
+  has heard from its neighbors (per origin, per face, sequence-numbered
+  and lifetime-bounded).  The RIB is protocol state; the FIB is derived
+  from it locally (:meth:`Rib.nexthops` -> :meth:`Fib.sync_prefix`), which
+  is the paper's decentralized control plane: no node ever installs a
+  route it did not learn hop-by-hop.
 * FIB: longest-prefix-match over announced name prefixes -> next-hop faces,
   with per-nexthop cost and health (strategies rank on these).  The match
   runs over a *compressed name-component trie* so a lookup costs
@@ -31,7 +37,8 @@ from typing import Dict, Iterable, List, Optional, Set, Tuple
 from .names import Name
 from .packets import Data, Interest
 
-__all__ = ["Fib", "LinearFib", "NextHop", "Pit", "PitEntry", "ContentStore"]
+__all__ = ["Fib", "LinearFib", "NextHop", "Pit", "PitEntry", "ContentStore",
+           "Rib", "RibRoute"]
 
 Key = Tuple[str, ...]
 
@@ -70,6 +77,30 @@ class NextHop:
         """Congestion/RTT score used by adaptive strategies (lower = better)."""
         rtt = self.rtt_ewma if self.rtt_ewma > 0 else rtt_floor
         return rtt * (1.0 + loss_weight * self.loss_ewma) * (1.0 + 0.25 * self.pending)
+
+
+def _sync_nexthops(fib, prefix: Name, desired: Dict[int, float]) -> bool:
+    """Shared body of ``Fib.sync_prefix`` / ``LinearFib.sync_prefix`` —
+    one implementation so the trie and the linear oracle *cannot* diverge.
+
+    Makes the prefix's nexthop set exactly ``desired`` (face -> cost):
+    unlike ``register`` (which keeps the minimum cost ever seen — correct
+    for additive announcements, wrong for a route whose path just got
+    longer) it assigns costs, removes faces absent from ``desired``, and
+    preserves the learned NextHop statistics of faces that stay."""
+    changed = False
+    for fid in [f for f in fib.nexthops(prefix) if f not in desired]:
+        fib.unregister(prefix, fid)
+        changed = True
+    for fid, cost in desired.items():
+        hop = fib.nexthops(prefix).get(fid)
+        if hop is None:
+            fib.register(prefix, fid, cost)
+            changed = True
+        elif hop.cost != cost:
+            hop.cost = cost
+            changed = True
+    return changed
 
 
 class _TrieNode:
@@ -202,6 +233,12 @@ class Fib:
             self.unregister(Name(key), face_id)
         self._by_face.pop(face_id, None)
 
+    def sync_prefix(self, prefix: Name, desired: Dict[int, float]) -> bool:
+        """RIB->FIB derivation entry point: set semantics over the nexthop
+        set; see :func:`_sync_nexthops` (shared with :class:`LinearFib` so
+        the oracle cannot diverge).  Returns True if anything changed."""
+        return _sync_nexthops(self, prefix, desired)
+
     def lookup(self, name: Name) -> Tuple[Optional[Name], List[NextHop]]:
         """Longest-prefix match; returns (matched_prefix, nexthops)."""
         self.lookups += 1
@@ -282,6 +319,10 @@ class LinearFib:
             if not self._table[prefix]:
                 del self._table[prefix]
 
+    def sync_prefix(self, prefix: Name, desired: Dict[int, float]) -> bool:
+        """Same shared implementation as :meth:`Fib.sync_prefix`."""
+        return _sync_nexthops(self, prefix, desired)
+
     def lookup(self, name: Name) -> Tuple[Optional[Name], List[NextHop]]:
         self.lookups += 1
         comps = name.components
@@ -303,6 +344,171 @@ class LinearFib:
 
     def __len__(self) -> int:
         return len(self._table)
+
+
+# ---------------------------------------------------------------------------
+# RIB
+# ---------------------------------------------------------------------------
+
+@dataclass
+class RibRoute:
+    """One learned route: a neighbor's advertisement for (prefix, origin).
+
+    ``cost`` is the neighbor's advertised cost plus the local link cost;
+    ``path`` is the advertiser chain from the origin (loop prevention);
+    ``expires_at`` bounds staleness — a route that is not refreshed dies.
+    ``caps`` carries the origin's capability record (chips, memory, queue
+    depth) so matchmaking/strategies can see what the network advertised.
+    """
+
+    origin: str
+    face_id: int
+    seq: int
+    cost: float
+    path: Tuple[str, ...]
+    expires_at: float
+    caps: Optional[Dict] = None
+    # origin-signed fields carried through re-advertisement unchanged
+    lifetime: float = 0.0
+    sig: str = ""
+
+
+class Rib:
+    """Routing information base: per-prefix, per-(origin, face) routes.
+
+    The RIB holds everything the routing protocol learned; the FIB holds
+    only the locally *derived* forwarding choice (:meth:`nexthops` ->
+    :meth:`Fib.sync_prefix`).  Splitting the two is what lets withdrawals,
+    expiry and link failure re-derive a clean FIB with no dangling faces.
+    """
+
+    def __init__(self) -> None:
+        self._prefixes: Dict[Key, Dict[Tuple[str, int], RibRoute]] = {}
+        # face -> prefixes with at least one route through it
+        self._by_face: Dict[int, Set[Key]] = {}
+
+    # -- mutation ----------------------------------------------------------
+    def upsert(self, prefix: Name, route: RibRoute) -> bool:
+        """Insert/replace the (origin, face) route; True if it changed the
+        derivable state (cost/seq/caps/path — not a pure lifetime refresh
+        ... which still extends ``expires_at``)."""
+        key = prefix.components
+        routes = self._prefixes.setdefault(key, {})
+        slot = (route.origin, route.face_id)
+        prior = routes.get(slot)
+        routes[slot] = route
+        self._by_face.setdefault(route.face_id, set()).add(key)
+        return (prior is None or prior.cost != route.cost
+                or prior.seq != route.seq or prior.path != route.path
+                or prior.caps != route.caps)
+
+    def remove(self, prefix: Name, *, origin: Optional[str] = None,
+               face_id: Optional[int] = None) -> bool:
+        """Remove routes for a prefix, filtered by origin and/or face."""
+        key = prefix.components
+        routes = self._prefixes.get(key)
+        if routes is None:
+            return False
+        doomed = [s for s in routes
+                  if (origin is None or s[0] == origin)
+                  and (face_id is None or s[1] == face_id)]
+        for s in doomed:
+            del routes[s]
+        if not routes:
+            del self._prefixes[key]
+        self._reindex_faces(key, {s[1] for s in doomed})
+        return bool(doomed)
+
+    def remove_face(self, face_id: int) -> List[Key]:
+        """Link died: drop every route through it; returns affected keys."""
+        affected = []
+        for key in list(self._by_face.get(face_id, ())):
+            routes = self._prefixes.get(key, {})
+            for s in [s for s in routes if s[1] == face_id]:
+                del routes[s]
+            if not routes:
+                self._prefixes.pop(key, None)
+            affected.append(key)
+        self._by_face.pop(face_id, None)
+        return affected
+
+    def expire(self, now: float) -> List[Key]:
+        """Drop lifetime-expired routes; returns affected prefix keys."""
+        affected = []
+        for key in list(self._prefixes):
+            routes = self._prefixes[key]
+            dead = [s for s, r in routes.items() if r.expires_at <= now]
+            if not dead:
+                continue
+            faces = set()
+            for s in dead:
+                faces.add(s[1])
+                del routes[s]
+            if not routes:
+                del self._prefixes[key]
+            self._reindex_faces(key, faces)
+            affected.append(key)
+        return affected
+
+    def _reindex_faces(self, key: Key, candidate_faces: Set[int]) -> None:
+        still = {s[1] for s in self._prefixes.get(key, {})}
+        for fid in candidate_faces:
+            if fid not in still:
+                bucket = self._by_face.get(fid)
+                if bucket is not None:
+                    bucket.discard(key)
+                    if not bucket:
+                        del self._by_face[fid]
+
+    # -- queries -----------------------------------------------------------
+    def routes(self, prefix: Name) -> Dict[Tuple[str, int], RibRoute]:
+        return self._prefixes.get(prefix.components, {})
+
+    def origins(self, prefix: Name) -> List[str]:
+        return sorted({s[0] for s in self._prefixes.get(prefix.components, {})})
+
+    def best(self, prefix: Name, origin: str) -> Optional[RibRoute]:
+        """Lowest-cost route toward one origin (face id breaks ties)."""
+        cands = [r for (o, _), r in
+                 self._prefixes.get(prefix.components, {}).items()
+                 if o == origin]
+        if not cands:
+            return None
+        return min(cands, key=lambda r: (r.cost, r.face_id))
+
+    def nexthops(self, prefix: Name, *, slack: float = 1.0) -> Dict[int, float]:
+        """Derive the FIB nexthop set: per-face minimum cost over every
+        origin, keeping faces within ``slack`` of the overall best — the
+        detour routes strategies fail over to before re-convergence."""
+        best_per_face: Dict[int, float] = {}
+        for route in self._prefixes.get(prefix.components, {}).values():
+            cur = best_per_face.get(route.face_id)
+            if cur is None or route.cost < cur:
+                best_per_face[route.face_id] = route.cost
+        if not best_per_face:
+            return {}
+        best = min(best_per_face.values())
+        return {f: c for f, c in best_per_face.items() if c <= best + slack}
+
+    def capabilities(self, prefix: Name) -> Dict[str, Dict]:
+        """Advertised capability record per origin (best route's copy)."""
+        out: Dict[str, Dict] = {}
+        for origin in self.origins(prefix):
+            r = self.best(prefix, origin)
+            if r is not None and r.caps is not None:
+                out[origin] = r.caps
+        return out
+
+    def prefixes(self) -> Iterable[Name]:
+        return (Name(k) for k in self._prefixes)
+
+    def next_expiry(self) -> Optional[float]:
+        times = [r.expires_at for routes in self._prefixes.values()
+                 for r in routes.values()]
+        return min(times) if times else None
+
+    def __len__(self) -> int:
+        return len(self._prefixes)
 
 
 # ---------------------------------------------------------------------------

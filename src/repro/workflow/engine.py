@@ -54,6 +54,7 @@ class _StageRun:
     from_cache: bool = False                  # completed straight off receipt
     submitted_at: Optional[float] = None
     completed_at: Optional[float] = None
+    noroute_retries: int = 0                  # free retries while routes gossip
 
 
 @dataclass
@@ -181,6 +182,14 @@ class WorkflowEngine:
         if sr.status != StageStatus.SUBMITTED:
             return
         self._trace(run, "submit-fail", sr.inst.id, reason)
+        if reason.endswith("no-route") and sr.noroute_retries < 3:
+            # the overlay hasn't converged on this prefix yet (clusters
+            # join by advertising — zero pre-configuration means a stage
+            # can race the gossip): re-express without burning one of the
+            # crash-recovery attempts.  Only the *submit* path gets this;
+            # a status loss mid-run is a real recovery attempt.
+            sr.noroute_retries += 1
+            sr.attempts -= 1
         self._retry_or_fail(run, sr, f"submit:{reason}")
 
     def _retry_or_fail(self, run: WorkflowRun, sr: _StageRun, reason: str

@@ -105,33 +105,39 @@ def test_mesh_equal_cost_multipath_installed():
     net = Network()
     mesh = MeshTopology(net, 6, "ring")    # even ring: two equal paths
     _serve(mesh, 3, "/svc/m")
+    mesh.converge()                 # routes arrive by gossip, not fiat
     # node 0 is antipodal to 3: both ring directions are shortest
     hops = mesh.nodes[0].fib.nexthops(Name.parse("/svc/m"))
     assert len(hops) >= 2
+    assert min(h.cost for h in hops.values()) == 3.0
 
 
-def test_mesh_down_nodes_excluded_from_refreshed_routes():
+def test_mesh_down_nodes_excluded_after_reconvergence():
     net = Network()
     mesh = MeshTopology(net, 7, "ring")
     _serve(mesh, 3, "/svc/r")
+    mesh.converge()
     mesh.fail_node(2)
-    mesh.refresh_routes()
-    # node 1's refreshed route to 3 must go the long way (via 0), not via 2
+    mesh.converge()                 # neighbors detect + triggered updates
+    # node 1's re-converged route to 3 must go the long way (via 0), not via 2
     face_to_2 = mesh.faces[(1, 2)].face_id
     hops = mesh.nodes[1].fib.nexthops(Name.parse("/svc/r"))
     assert face_to_2 not in hops and len(hops) >= 1
 
 
-def test_mesh_withdraw_anycast_refcounts_shared_routes():
+def test_mesh_withdraw_anycast_keeps_other_origins_routes():
     net = Network()
     mesh = MeshTopology(net, 6, "ring")
     _serve(mesh, 2, "/svc/any")
     _serve(mesh, 3, "/svc/any", tag=b"other")
+    mesh.converge()
     # node 0's face toward 1 carries routes for BOTH origins' announcements
     face01 = mesh.faces[(0, 1)].face_id
     assert face01 in mesh.nodes[0].fib.nexthops(Name.parse("/svc/any"))
     mesh.withdraw(3, Name.parse("/svc/any"))
-    # origin 2 still reaches through that shared face
+    mesh.converge()
+    # origin 2 still reaches through that shared face — a per-origin,
+    # sequence-gated withdrawal cannot sever another origin's routes
     assert face01 in mesh.nodes[0].fib.nexthops(Name.parse("/svc/any"))
     assert "data" in mesh.consumer_at(0).get(Name.parse("/svc/any/q"))
 

@@ -1,0 +1,453 @@
+"""The decentralized control plane vs the retained global-BFS oracle.
+
+Covers the PR's acceptance properties:
+
+* converged decentralized FIBs reproduce the oracle's reachability and
+  shortest-path costs on random ring/tree/random topologies;
+* withdrawal / leave / failure leave **no stale nexthops**;
+* Fib and LinearFib removal/derivation stay symmetric (``sync_prefix``);
+* advertisements are signed (a tampered or wrong-key advert is dropped);
+* capability advertisements steer placement: a cluster that lowers its
+  advertised chips mid-run stops receiving new compute Interests within
+  one advertisement lifetime.
+"""
+
+import random
+
+import pytest
+
+from repro.core.forwarder import Network
+from repro.core.names import Name
+from repro.core.overlay import LidcSystem, MeshTopology
+from repro.core.packets import Data
+from repro.core.routing import RoutingConfig, capability_cost
+from repro.core.strategy import AdaptiveStrategy
+from repro.core.tables import Fib, LinearFib
+
+# ---------------------------------------------------------------------------
+# protocol == oracle (property tests)
+# ---------------------------------------------------------------------------
+
+
+def _serve(mesh, origin, prefix, tag=b"v"):
+    def handler(interest, publish, now):
+        return Data(name=interest.name, content=tag, created_at=now,
+                    freshness=30.0)
+    mesh.attach_producer(origin, Name.parse(prefix), handler)
+
+
+def _build_random_scenario(seed: int):
+    rng = random.Random(seed)
+    kind = rng.choice(MeshTopology.KINDS)
+    n = rng.randint(4, 10)
+    mesh = MeshTopology(Network(), n, kind, seed=seed)
+    announcements = []
+    for p in range(rng.randint(1, 4)):
+        prefix = f"/svc/p{p}"
+        for origin in rng.sample(range(n), rng.randint(1, 2)):
+            _serve(mesh, origin, prefix)
+            announcements.append((origin, prefix))
+    return rng, mesh, announcements
+
+
+def _assert_matches_oracle(mesh):
+    """Every alive node's FIB min cost == oracle min distance; withdrawn/
+    unreachable prefixes have no live routes (is_converged checks both —
+    here we assert it *stays* true, not just that converge() returned)."""
+    assert mesh.is_converged()
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_converged_fibs_match_bfs_oracle_randomized(seed):
+    rng, mesh, announcements = _build_random_scenario(seed)
+    mesh.converge(timeout=20.0)
+    _assert_matches_oracle(mesh)
+
+    # withdraw a random announcement: no stale nexthops may survive
+    origin, prefix = rng.choice(announcements)
+    mesh.withdraw(origin, Name.parse(prefix))
+    mesh.converge(timeout=20.0)
+    _assert_matches_oracle(mesh)
+
+    # fail a random non-origin node (the hard case: no withdrawal is sent)
+    candidates = [i for i in range(len(mesh)) if i not in mesh.down]
+    victim = rng.choice(candidates)
+    mesh.fail_node(victim)
+    mesh.converge(timeout=20.0)
+    _assert_matches_oracle(mesh)
+
+
+def test_converged_fibs_match_bfs_oracle_property():
+    pytest.importorskip("hypothesis", reason="property sweep needs hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(0, 10_000), st.integers(0, 2))
+    def check(seed, churn_kind):
+        rng, mesh, announcements = _build_random_scenario(seed)
+        mesh.converge(timeout=20.0)
+        assert mesh.is_converged()
+        if churn_kind == 1 and announcements:
+            origin, prefix = rng.choice(announcements)
+            mesh.withdraw(origin, Name.parse(prefix))
+        elif churn_kind == 2:
+            mesh.leave(rng.randrange(len(mesh)))
+        mesh.converge(timeout=20.0)
+        assert mesh.is_converged()
+
+    check()
+
+
+def test_withdrawal_leaves_no_stale_nexthops_anywhere():
+    mesh = MeshTopology(Network(), 10, "random", seed=11)
+    for origin in (0, 4, 7):
+        _serve(mesh, origin, "/svc/shared")
+    mesh.converge()
+    for origin in (0, 4, 7):
+        mesh.withdraw(origin, Name.parse("/svc/shared"))
+    mesh.converge()
+    for node in mesh.nodes:
+        assert not node.fib.nexthops(Name.parse("/svc/shared")), node.name
+
+
+def test_leave_and_fail_leave_no_dangling_faces():
+    """The regression the RIB/FIB split fixes: routes through a departed
+    node used to linger in other nodes' FIBs pointing at dead faces."""
+    mesh = MeshTopology(Network(), 8, "ring")
+    _serve(mesh, 2, "/svc/a")
+    _serve(mesh, 6, "/svc/b")
+    mesh.converge()
+    mesh.leave(2)       # graceful: in-band withdrawal
+    mesh.fail_node(6)   # abrupt: carrier/hello detection only
+    mesh.converge(timeout=20.0)
+    for idx, node in enumerate(mesh.nodes):
+        if idx in mesh.down:
+            continue
+        for prefix in list(node.fib.prefixes()):
+            for h in node.fib.nexthops(prefix).values():
+                assert not node.faces[h.face_id].down, (
+                    f"{node.name} keeps a nexthop for {prefix} "
+                    f"through a dead face")
+
+
+# ---------------------------------------------------------------------------
+# Fib / LinearFib symmetry (sync_prefix is the derivation entry point)
+# ---------------------------------------------------------------------------
+
+def test_sync_prefix_sets_costs_up_and_down():
+    """register() keeps the min cost ever seen — correct for additive
+    announcements, wrong for re-derivation: a route whose path lengthened
+    after a failure must be able to *raise* its cost."""
+    for cls in (Fib, LinearFib):
+        fib = cls()
+        fib.register(Name.parse("/a"), 1, cost=2.0)
+        fib.register(Name.parse("/a"), 1, cost=5.0)     # min-sticky: stays 2
+        assert fib.nexthops(Name.parse("/a"))[1].cost == 2.0
+        fib.sync_prefix(Name.parse("/a"), {1: 5.0})     # set semantics
+        assert fib.nexthops(Name.parse("/a"))[1].cost == 5.0
+        fib.sync_prefix(Name.parse("/a"), {1: 1.0, 2: 3.0})
+        assert {f: h.cost for f, h in fib.nexthops(Name.parse("/a")).items()} \
+            == {1: 1.0, 2: 3.0}
+        fib.sync_prefix(Name.parse("/a"), {})
+        assert fib.lookup(Name.parse("/a/x")) == (None, [])
+
+
+def test_sync_prefix_preserves_learned_stats():
+    fib = Fib()
+    fib.register(Name.parse("/a"), 1, cost=1.0)
+    hop = fib.nexthops(Name.parse("/a"))[1]
+    hop.record(ok=True, rtt=0.25)
+    fib.sync_prefix(Name.parse("/a"), {1: 4.0, 2: 1.0})
+    kept = fib.nexthops(Name.parse("/a"))[1]
+    assert kept is hop and kept.rtt_ewma == pytest.approx(0.25)
+    assert kept.cost == 4.0
+
+
+def test_sync_prefix_keeps_trie_and_linear_equivalent():
+    """Mirrored op streams including sync_prefix (the new derivation op)
+    keep the trie FIB and the linear oracle byte-identical — the symmetric
+    removal regression test."""
+    comps = ["a", "b", "c", "lidc", "compute", "x"]
+    for trial in range(80):
+        rng = random.Random(trial)
+        trie, oracle = Fib(), LinearFib()
+        for _ in range(rng.randint(1, 50)):
+            name = Name(tuple(rng.choice(comps)
+                              for _ in range(rng.randint(1, 4))))
+            roll = rng.random()
+            if roll < 0.4:
+                cost = rng.choice([1.0, 2.0, 3.0])
+                face = rng.randint(1, 5)
+                trie.register(name, face, cost)
+                oracle.register(name, face, cost)
+            elif roll < 0.7:
+                desired = {rng.randint(1, 5): float(rng.randint(1, 6))
+                           for _ in range(rng.randint(0, 3))}
+                assert (trie.sync_prefix(name, desired)
+                        == oracle.sync_prefix(name, desired))
+            elif roll < 0.85:
+                fid = rng.randint(1, 5) if rng.random() < 0.5 else None
+                trie.unregister(name, fid)
+                oracle.unregister(name, fid)
+            else:
+                face = rng.randint(1, 5)
+                trie.remove_face(face)
+                oracle.remove_face(face)
+        assert len(trie) == len(oracle)
+        assert sorted(map(str, trie.prefixes())) \
+            == sorted(map(str, oracle.prefixes()))
+        for _ in range(25):
+            q = Name(tuple(rng.choice(comps)
+                           for _ in range(rng.randint(1, 5))))
+            m1, h1 = trie.lookup(q)
+            m2, h2 = oracle.lookup(q)
+            assert (m1 is None) == (m2 is None), str(q)
+            if m1 is not None:
+                assert m1.components == m2.components
+                assert ([(h.face_id, h.cost) for h in h1]
+                        == [(h.face_id, h.cost) for h in h2])
+
+
+# ---------------------------------------------------------------------------
+# protocol plumbing edge cases
+# ---------------------------------------------------------------------------
+
+def test_fail_face_feeds_triggered_updates():
+    """Forwarder.fail_face reports the dead link to the routing agent:
+    RIB routes through it are purged and updates propagate."""
+    net = Network()
+    mesh = MeshTopology(net, 3, "ring")
+    _serve(mesh, 2, "/svc/f")
+    mesh.converge()
+    node0 = mesh.nodes[0]
+    face02 = mesh.faces[(0, 2)]
+    assert face02.face_id in node0.fib.nexthops(Name.parse("/svc/f"))
+    node0.fail_face(face02)
+    net.run(until=net.now + 1.0)
+    hops = node0.fib.nexthops(Name.parse("/svc/f"))
+    assert face02.face_id not in hops
+    assert hops, "the long-way route via node 1 must survive"
+
+
+def test_malformed_and_nonneighbor_control_ignored():
+    from repro.core.packets import Interest
+    net = Network()
+    mesh = MeshTopology(net, 2, "ring")
+    agent = mesh.agents[0]
+    rib_before = len(agent.rib)
+    # control from a face that is not a declared adjacency: dropped
+    agent.handle_control(9999, Interest(name=Name.parse("/lidc/rt/x/1"),
+                                        app_params={"t": "adv", "advs": []}))
+    # adverts missing mandatory fields: ignored, no crash
+    nb_face = next(iter(agent.neighbors))
+    agent.handle_control(nb_face, Interest(
+        name=Name.parse("/lidc/rt/mesh1/1"),
+        app_params={"t": "adv", "n": "mesh1", "advs": [{"p": "/a"}, {}]}))
+    assert len(agent.rib) == rib_before
+
+
+def test_withdraw_tombstone_blocks_stale_resurrection():
+    """A late advertisement at or below the withdrawn sequence number must
+    not resurrect the prefix (sequence-gated tombstones)."""
+    net = Network()
+    mesh = MeshTopology(net, 2, "ring")
+    _serve(mesh, 0, "/svc/t")
+    mesh.converge()
+    agent1 = mesh.agents[1]
+    stale = dict(next(iter(agent1.rib.routes(Name.parse("/svc/t")).values()
+                           )).__dict__)
+    mesh.withdraw(0, Name.parse("/svc/t"))
+    mesh.converge()
+    assert len(agent1.rib.routes(Name.parse("/svc/t"))) == 0
+    # replay the pre-withdrawal advert (same seq): tombstone rejects it
+    from repro.core.packets import Interest
+    replay = {"p": "/svc/t", "o": stale["origin"], "s": stale["seq"],
+              "c": 0.0, "pa": [stale["origin"]], "lt": stale["lifetime"],
+              "sig": stale["sig"]}
+    nb_face = next(iter(agent1.neighbors))
+    agent1.handle_control(nb_face, Interest(
+        name=Name.parse("/lidc/rt/mesh0/99"),
+        app_params={"t": "adv", "n": "mesh0", "advs": [replay]}))
+    net.run(until=net.now + 1.0)
+    assert len(agent1.rib.routes(Name.parse("/svc/t"))) == 0
+    assert not mesh.nodes[1].fib.nexthops(Name.parse("/svc/t"))
+
+
+# ---------------------------------------------------------------------------
+# advertisement authenticity
+# ---------------------------------------------------------------------------
+
+def test_adverts_signed_wrong_key_dropped():
+    net = Network()
+    good = MeshTopology(net, 2, "ring",
+                        routing=RoutingConfig(sign_key=b"key-A"))
+    # replace node 1's agent key: it now rejects node 0's advertisements
+    good.agents[1].cfg = RoutingConfig(sign_key=b"key-B")
+    _serve(good, 0, "/svc/sec")
+    net.run(until=1.0)
+    assert len(good.agents[1].rib) == 0
+    assert good.agents[1].stats["dropped_bad_sig"] > 0
+
+
+def test_adverts_accepted_with_shared_key():
+    net = Network()
+    mesh = MeshTopology(net, 2, "ring",
+                        routing=RoutingConfig(sign_key=b"key-A"))
+    _serve(mesh, 0, "/svc/sec")
+    net.run(until=1.0)
+    assert len(mesh.agents[1].rib) == 1
+    assert mesh.agents[1].stats["dropped_bad_sig"] == 0
+
+
+# ---------------------------------------------------------------------------
+# capability advertisements
+# ---------------------------------------------------------------------------
+
+def test_capability_cost_orders_loaded_clusters_last():
+    fresh = capability_cost({"chips": 8, "free_chips": 8, "queue_depth": 0})
+    busy = capability_cost({"chips": 8, "free_chips": 0, "queue_depth": 2})
+    drained = capability_cost({"chips": 0, "free_chips": 0})
+    assert fresh < busy < drained
+
+
+def test_cold_probe_seeded_by_advertised_capability_cost():
+    """Line 0 — 1 — 2: both ends announce /svc/x, node 2 advertises no
+    free capacity.  The very first (cold) Interest from node 1 must go to
+    node 0 — the strategy's cold ranking is seeded from advertised cost
+    before any RTT measurement exists."""
+    net = Network()
+    mesh = MeshTopology(net, 3, "tree",    # 1-0, 2-0 ... use explicit line
+                        strategy_factory=lambda i: AdaptiveStrategy(
+                            probe_fanout=1))
+    calls = {"fresh": 0, "busy": 0}
+
+    def make(tag):
+        def handler(interest, publish, now):
+            calls[tag] += 1
+            return Data(name=interest.name, content=tag.encode(),
+                        created_at=now, freshness=30.0)
+        return handler
+
+    mesh.nodes[1].attach_producer(Name.parse("/svc/x"), make("fresh"))
+    mesh.announce(1, Name.parse("/svc/x"),
+                  caps={"chips": 8, "free_chips": 8, "queue_depth": 0})
+    mesh.nodes[2].attach_producer(Name.parse("/svc/x"), make("busy"))
+    mesh.announce(2, Name.parse("/svc/x"),
+                  caps={"chips": 8, "free_chips": 0, "queue_depth": 3})
+    net.run(until=1.0)
+    box = mesh.consumer_at(0).get(Name.parse("/svc/x/q"))
+    assert box["data"].content == b"fresh"
+    assert calls == {"fresh": 1, "busy": 0}
+
+
+def test_lowered_chip_advertisement_stops_new_compute_interests():
+    """ISSUE satellite: a cluster that lowers its advertised chips mid-run
+    stops receiving new compute Interests within one advertisement
+    lifetime (everything on the virtual clock, via matchmaker/gateway)."""
+    from repro.runtime.fleet import standard_endpoints
+    from repro.runtime.executors import memory_model
+
+    cfg = RoutingConfig()       # stock timers; the bound is one lifetime
+    sys_ = LidcSystem(routing=cfg)
+    for name in ("podA", "podB"):
+        sys_.add_cluster(name, chips=8,
+                         endpoints=standard_endpoints(["lidc-demo"]),
+                         memory_model=memory_model)
+
+    def blast(tag):
+        return {"app": "blast", "srr": "SRR2931415", "db": "human",
+                "mem": 4, "cpu": 2, "tag": tag}
+
+    # blast jobs span ~8 virtual hours; poll coarsely to keep the event
+    # count (and wall time) down — the protocol rides the same clock
+    h0 = sys_.client.run_job(blast("warmup"), interval=120.0)
+    assert h0 is not None and h0.state == "Completed"
+    victim = h0.result["cluster"]
+    other = "podB" if victim == "podA" else "podA"
+    gw_victim = sys_.overlay.gateways[victim]
+    served_before = gw_victim.receipts_served
+
+    # the victim drains itself: advertised chips drop to zero mid-run —
+    # its compute prefixes are withdrawn in-band
+    sys_.overlay.clusters[victim].advertise(chips=0)
+    sys_.net.run(until=sys_.net.now + cfg.adv_lifetime)
+
+    for i in range(2):
+        h = sys_.client.run_job(blast(f"after-{i}"), interval=120.0)
+        assert h is not None and h.state == "Completed"
+        assert h.result["cluster"] == other
+    assert gw_victim.receipts_served == served_before
+
+    # restoring the advertisement brings the cluster back into rotation
+    sys_.overlay.clusters[victim].advertise(chips=8)
+    sys_.net.run(until=sys_.net.now + cfg.adv_lifetime)
+    edge_hops = sys_.overlay.edge.fib.nexthops(
+        Name.parse("/lidc/compute/blast"))
+    assert len(edge_hops) == 2
+
+
+def test_same_name_rejoin_outruns_withdrawal_tombstones():
+    """A cluster that left (flooding withdrawals) can rejoin under the
+    same name: the new agent's clock-seeded sequence numbers exceed the
+    tombstoned withdrawal seqs, so its advertisements are not dropped."""
+    from repro.runtime.fleet import standard_endpoints
+    from repro.runtime.executors import memory_model
+
+    sys_ = LidcSystem()
+    for name in ("podA", "podB"):
+        sys_.add_cluster(name, chips=8,
+                         endpoints=standard_endpoints(["lidc-demo"]),
+                         memory_model=memory_model)
+    sys_.net.run(until=1.0)
+    # leave and rejoin at the SAME virtual instant (reconfiguration
+    # scripts do exactly this), well within the tombstones' lifetime
+    sys_.overlay.remove_cluster("podA")
+    sys_.add_cluster("podA", chips=8,
+                     endpoints=standard_endpoints(["lidc-demo"]),
+                     memory_model=memory_model)
+    sys_.net.run(until=3.0)
+    assert len(sys_.overlay.edge.fib.nexthops(
+        Name.parse("/lidc/compute/blast"))) == 2
+
+
+def test_refresh_gossips_live_load_signals():
+    """Capability records are re-sampled at every refresh: a cluster whose
+    chips fill up after origination gossips the *current* free_chips, not
+    the snapshot taken when it joined."""
+    from repro.runtime.fleet import standard_endpoints
+    from repro.runtime.executors import memory_model
+
+    cfg = RoutingConfig(refresh_interval=1.0)
+    sys_ = LidcSystem(routing=cfg)
+    sys_.add_cluster("pod", chips=8,
+                     endpoints=standard_endpoints(["lidc-demo"]),
+                     memory_model=memory_model)
+    sys_.net.run(until=0.5)
+    prefix = Name.parse("/lidc/compute/blast")
+    assert sys_.overlay.edge_agent.advertised_capabilities(
+        prefix)["pod"]["free_chips"] == 8
+    sys_.overlay.clusters["pod"].free_chips = 0     # chips fill up mid-run
+    sys_.net.run(until=sys_.net.now + 3 * cfg.refresh_interval)
+    assert sys_.overlay.edge_agent.advertised_capabilities(
+        prefix)["pod"]["free_chips"] == 0
+
+
+def test_zero_preconfiguration_join():
+    """Nothing ever writes the edge FIB: a fresh system's edge knows no
+    routes until the gossip arrives, then jobs route normally."""
+    from repro.runtime.fleet import standard_endpoints
+    from repro.runtime.executors import memory_model
+
+    sys_ = LidcSystem()
+    sys_.add_cluster("solo", chips=8,
+                     endpoints=standard_endpoints(["lidc-demo"]),
+                     memory_model=memory_model)
+    assert len(sys_.overlay.edge.fib) == 0          # zero pre-configuration
+    sys_.net.run(until=0.1)
+    assert len(sys_.overlay.edge.fib) > 0           # learned in-band
+    caps = sys_.overlay.edge_agent.advertised_capabilities(
+        Name.parse("/lidc/compute/blast"))
+    assert caps["solo"]["chips"] == 8               # capability record rode along
+    h = sys_.client.run_job({"app": "blast", "srr": "SRR2931415",
+                             "db": "human", "mem": 4, "cpu": 2})
+    assert h is not None and h.state == "Completed"
