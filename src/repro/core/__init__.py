@@ -11,9 +11,11 @@ from .strategy import (AdaptiveStrategy, BestRouteStrategy,
                        MulticastStrategy, Strategy)
 from .jobs import Job, JobSpec, JobState, result_name_for
 from .validation import ValidationError, ValidatorRegistry, default_registry
-from .matchmaker import MatchError, Matchmaker, ServiceEndpoint
-from .cluster import ComputeCluster, ExecResult
+from .matchmaker import CapacityError, MatchError, Matchmaker, ServiceEndpoint
+from .cluster import ComputeCluster, ExecPlan, ExecResult
+from .compute_plane import ClusterScheduler, SchedulerConfig
 from .gateway import Gateway
+from . import reasons
 from .overlay import (JobHandle, LidcClient, LidcSystem, MeshTopology,
                       Overlay)
 from .scheduler import CompletionModel
@@ -30,7 +32,8 @@ __all__ = [
     "CompletionTimeStrategy", "CompletionModel",
     "Job", "JobSpec", "JobState", "result_name_for",
     "ValidationError", "ValidatorRegistry", "default_registry",
-    "MatchError", "Matchmaker", "ServiceEndpoint",
-    "ComputeCluster", "ExecResult", "Gateway",
+    "CapacityError", "MatchError", "Matchmaker", "ServiceEndpoint",
+    "ComputeCluster", "ExecPlan", "ExecResult", "Gateway",
+    "ClusterScheduler", "SchedulerConfig", "reasons",
     "JobHandle", "LidcClient", "LidcSystem", "MeshTopology", "Overlay",
 ]

@@ -6,6 +6,12 @@ endpoints, a chip-capacity accountant, and a connection to the data lake.
 Job execution is pluggable: tests run *real* JAX steps on tiny configs;
 benchmarks use a calibrated cost model so the virtual clock reflects
 Table-I-style run times without hours of wall time.
+
+The admit→queue→execute→complete lifecycle lives in the cluster's
+:class:`~repro.core.compute_plane.ClusterScheduler` (priority classes,
+phase-boundary preemption, ETA-aware admission, starvation-free
+backfill); this class keeps the capability accounting, the advertised
+record the routing protocol gossips, and failure injection.
 """
 
 from __future__ import annotations
@@ -13,12 +19,13 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
+from .compute_plane import ClusterScheduler, SchedulerConfig
 from .forwarder import Forwarder, Network
-from .jobs import Job, JobSpec, result_name_for
+from .jobs import Job, JobSpec
 from .matchmaker import Matchmaker, ServiceEndpoint
 from .names import COMPUTE_PREFIX, DATA_PREFIX, STATUS_PREFIX, Name
 
-__all__ = ["ComputeCluster", "ExecResult"]
+__all__ = ["ComputeCluster", "ExecResult", "ExecPlan"]
 
 
 @dataclass
@@ -37,7 +44,9 @@ class ExecPlan:
     Each phase's ``work_fn`` performs that phase's real side effects
     (train steps + checkpoint into the lake).  If the cluster dies between
     phases, completed phases' checkpoints survive — a retransmitted job
-    resumes from them on another cluster.
+    resumes from them on another cluster.  Phase boundaries are also the
+    scheduler's *preemption points*: a preempted job releases its chips at
+    the next boundary and later resumes from exactly this position.
     """
 
     phases: List[Tuple[float, Callable[[], None]]]
@@ -52,7 +61,9 @@ class ComputeCluster:
     def __init__(self, net: Network, name: str, *, chips: int = 256,
                  hbm_gb_per_chip: float = 16.0, lake=None,
                  memory_model=None, region: str = "local",
-                 strategy=None, max_queue_depth: int = 0):
+                 strategy=None, max_queue_depth: int = 0,
+                 scheduler_config: Optional[SchedulerConfig] = None,
+                 completion_model=None):
         self.net = net
         self.name = name
         self.chips = chips
@@ -69,13 +80,23 @@ class ComputeCluster:
         self.alive = True
         self.completed_jobs = 0
         self.failed_jobs = 0
-        # queue of (job, endpoint, grant) waiting for chips
-        self._waitq: List[Tuple[Job, ServiceEndpoint, int]] = []
+        self.scheduler = ClusterScheduler(self, config=scheduler_config,
+                                          model=completion_model)
         # what the cluster *advertises* may differ from what it physically
         # has (drain by advertising chips=0, shrink by advertising fewer);
         # the overlay re-originates through on_caps_changed when it moves
         self.advertise_overrides: Dict[str, Any] = {}
         self.on_caps_changed: Optional[Callable[[], None]] = None
+        # capability-record cache: the record is consulted on every
+        # admission and every routing refresh; rebuild only when the
+        # scheduler or the advertised capabilities actually changed
+        self._caps_cache: Optional[Dict[str, Any]] = None
+        self._caps_key: Tuple[int, int] = (-1, -1)
+        # load-triggered re-advertisement damping state: what was last
+        # pushed into the gossip, and when
+        self._advertised_load: Dict[str, float] = {
+            "free_chips": float(chips), "queue_depth": 0.0, "eta_p50": 0.0}
+        self._last_readvertise = net.now
 
     # -- capability view used by validators --------------------------------
     def capabilities(self) -> Dict[str, Any]:
@@ -98,6 +119,7 @@ class ComputeCluster:
 
     def add_endpoint(self, endpoint: ServiceEndpoint) -> None:
         self.endpoints.append(endpoint)
+        self._caps_cache = None
         if self.on_caps_changed is not None:
             self.on_caps_changed()
 
@@ -105,14 +127,30 @@ class ComputeCluster:
     def capability_record(self) -> Dict[str, Any]:
         """The capability record the routing protocol gossips: the static
         capability view plus live load signals (free chips, admission-queue
-        depth), with any operator overrides applied.  This — not a static
-        endpoint list held by the overlay — is what remote matchmaking and
-        strategies see."""
-        record = dict(self.capabilities())
-        record["free_chips"] = self.free_chips
-        record["queue_depth"] = len(self._waitq)
-        record.update(self.advertise_overrides)
-        return record
+        depth, median predicted completion ``eta_p50``), with any operator
+        overrides applied.  This — not a static endpoint list held by the
+        overlay — is what remote matchmaking and strategies see.
+
+        The dict is cached behind a dirty flag: admission consults it per
+        job and the routing layer per refresh, but it only changes when
+        the scheduler state or the advertised capabilities move
+        (:meth:`_load_changed` invalidates; a cheap live-signal key also
+        catches direct ``free_chips`` mutation in tests/benchmarks).
+        ``eta_p50`` is therefore "as of the last scheduler event" —
+        between events the running jobs' release times are fixed, so the
+        staleness is bounded by the event density, and the gossip refresh
+        re-samples the record anyway.
+        """
+        key = (self.free_chips, self.scheduler.queue_depth)
+        if self._caps_cache is None or self._caps_key != key:
+            record = dict(self.capabilities())
+            record["free_chips"] = self.free_chips
+            record["queue_depth"] = self.scheduler.queue_depth
+            record["eta_p50"] = round(self.scheduler.eta_p50(), 6)
+            record.update(self.advertise_overrides)
+            self._caps_cache = record
+            self._caps_key = key
+        return self._caps_cache
 
     def advertise(self, **overrides: Any) -> None:
         """Override advertised capability fields and re-announce, e.g.
@@ -120,6 +158,7 @@ class ComputeCluster:
         prefixes are withdrawn in-band and — within one advertisement
         lifetime — no new compute Interests arrive."""
         self.advertise_overrides.update(overrides)
+        self._caps_cache = None
         if self.on_caps_changed is not None:
             self.on_caps_changed()
 
@@ -147,119 +186,84 @@ class ComputeCluster:
             prefixes.append(Name.parse(DATA_PREFIX))
         return prefixes
 
+    # -- load signal plumbing ------------------------------------------------
+    def _load_changed(self) -> None:
+        """Scheduler state moved: invalidate the capability-record cache
+        and, when the load swing is significant, re-advertise through the
+        routing protocol — damped, so gossip reflects load changes within
+        one refresh interval without flooding an advertisement per job.
+        """
+        self._caps_cache = None
+        if self.on_caps_changed is None:
+            return
+        cfg = self.scheduler.cfg
+        now = self.net.now
+        if now - self._last_readvertise < cfg.readvertise_min_interval:
+            return
+        cur = {"free_chips": float(self.free_chips),
+               "queue_depth": float(self.scheduler.queue_depth),
+               "eta_p50": self.scheduler.eta_p50()}
+        if not self._load_swing(self._advertised_load, cur,
+                                cfg.readvertise_factor):
+            return
+        self._advertised_load = cur
+        self._last_readvertise = now
+        self.on_caps_changed()
+
+    @staticmethod
+    def _load_swing(last: Dict[str, float], cur: Dict[str, float],
+                    factor: float) -> bool:
+        """Did any load signal move enough to be worth a triggered
+        re-advertisement?  Saturation flips (free chips or queue crossing
+        zero) always count; otherwise a signal must change by at least
+        ``factor``x in either direction."""
+        for key in ("free_chips", "queue_depth", "eta_p50"):
+            a, b = last.get(key, 0.0), cur.get(key, 0.0)
+            if (a <= 0.0) != (b <= 0.0):
+                return True
+            if a > 0.0 and b > 0.0 and max(a / b, b / a) >= factor:
+                return True
+        return False
+
     # -- job lifecycle -------------------------------------------------------
     def submit(self, spec: JobSpec, now: float) -> Job:
         """Bind, admit and schedule a job. Raises MatchError if infeasible.
 
         When the matchmaker allows queued admission, a job whose grant
-        exceeds the currently free chips is parked Pending on the wait
-        queue and started by :meth:`_drain_waitq` as chips free up.
+        exceeds the currently free chips is parked Pending on the
+        scheduler's queue and started — in effective-priority order, with
+        backfill and aging — as chips free up.
 
         Admission is bounded by the *advertised* capability record, not
         raw hardware: a cluster that advertised itself down to N chips
         honors N even if it physically has more — the advertisement is a
         contract with the network that routed the Interest here.
         """
-        endpoint, grant = self.matchmaker.match(spec, self.endpoints,
-                                                self.free_chips,
-                                                queue_depth=len(self._waitq),
-                                                total_chips=self.chips,
-                                                advertised=self.capability_record())
+        scheduler = self.scheduler
+        endpoint, grant = self.matchmaker.match(
+            spec, self.endpoints, self.free_chips,
+            queue_depth=scheduler.queue_depth,
+            total_chips=self.chips,
+            advertised=self.capability_record(),
+            eta_fn=lambda e, g: scheduler.run_estimate(spec)
+                                * (1.0 + e.running))
         job = Job(spec=spec, cluster=self.name, submitted_at=now,
                   granted_chips=grant, endpoint=endpoint.service)
         self.jobs[job.job_id] = job
-        if grant <= self.free_chips:
-            self._start(job, endpoint, grant)
-        else:
-            self._waitq.append((job, endpoint, grant))
+        scheduler.admit(job, endpoint, grant)
         return job
-
-    def _start(self, job: Job, endpoint: ServiceEndpoint, grant: int) -> None:
-        assert grant <= self.free_chips
-        self.free_chips -= grant
-        endpoint.running += 1
-        job.start(self.net.now)
-        try:
-            assert endpoint.executor is not None, f"{endpoint.service} has no executor"
-            res = endpoint.executor(job, self)
-        except Exception as e:  # execution failed synchronously
-            self._finish(job, endpoint, grant, error=f"{type(e).__name__}: {e}")
-            return
-        if isinstance(res, ExecPlan):
-            self._run_phase(job, endpoint, grant, res, 0)
-            return
-        # completion lands after the job's *virtual* duration
-        self.net.schedule(res.duration,
-                          lambda: self._finish(job, endpoint, grant, res=res))
-
-    def _run_phase(self, job: Job, endpoint: ServiceEndpoint, grant: int,
-                   plan: "ExecPlan", i: int) -> None:
-        if i >= len(plan.phases):
-            try:
-                res = plan.finalize()
-            except Exception as e:
-                self._finish(job, endpoint, grant,
-                             error=f"{type(e).__name__}: {e}")
-                return
-            self._finish(job, endpoint, grant, res=res)
-            return
-        duration, work = plan.phases[i]
-
-        def complete_phase() -> None:
-            if not self.alive:
-                return  # died mid-phase: this phase's work never happened
-            try:
-                work()
-            except Exception as e:
-                self._finish(job, endpoint, grant,
-                             error=f"{type(e).__name__}: {e}")
-                return
-            self._run_phase(job, endpoint, grant, plan, i + 1)
-
-        self.net.schedule(duration, complete_phase)
-
-    def _finish(self, job: Job, endpoint: ServiceEndpoint, grant: int,
-                res: Optional[ExecResult] = None,
-                error: Optional[str] = None) -> None:
-        self.free_chips += grant
-        endpoint.running -= 1
-        if not self.alive:
-            return  # cluster died mid-job: job stays Running forever (paper:
-                    # clients time out, retransmit, land on another cluster)
-        now = self.net.now
-        if error is not None or res is None:
-            job.fail(now, error or "executor returned nothing")
-            self.failed_jobs += 1
-        else:
-            job.complete(now, res.payload)
-            self.completed_jobs += 1
-            if self.lake is not None:
-                rname = result_name_for(job.spec)
-                self.lake.put_json(rname, {"job_id": job.job_id,
-                                           "cluster": self.name,
-                                           **res.payload})
-                if res.arrays:
-                    self.lake.put_arrays(rname.append("arrays"), res.arrays)
-        self._drain_waitq()
-
-    def _drain_waitq(self) -> None:
-        still: List[Tuple[Job, ServiceEndpoint, int]] = []
-        for job, endpoint, grant in self._waitq:
-            if grant <= self.free_chips and self.alive:
-                self._start(job, endpoint, grant)
-            else:
-                still.append((job, endpoint, grant))
-        self._waitq = still
 
     # -- failure injection ----------------------------------------------------
     def fail(self) -> None:
         """The whole cluster goes dark (power/network loss)."""
         self.alive = False
+        self._caps_cache = None
         for f in self.node.faces.values():
             f.down = True
 
     def restore(self) -> None:
         self.alive = True
+        self._caps_cache = None
         for f in self.node.faces.values():
             f.down = False
 

@@ -36,9 +36,10 @@ from __future__ import annotations
 
 import heapq
 import itertools
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
+from . import reasons
 from .names import Name
 from .packets import Data, Interest
 from .tables import ContentStore, Fib, Pit
@@ -49,10 +50,18 @@ __all__ = ["Nack", "Network", "Face", "Forwarder", "Consumer", "wire_size",
 
 @dataclass(frozen=True)
 class Nack:
-    """Negative acknowledgement (no route / rejected / no capacity)."""
+    """Negative acknowledgement (no route / rejected / no capacity).
+
+    ``info`` carries optional structured detail — a *busy receipt* from a
+    saturated gateway puts its predicted completion time (``eta``) and
+    live load here, which the forwarder feeds into per-nexthop ETA
+    estimates so strategies can rank clusters by transfer cost plus
+    predicted completion instead of hop cost alone.
+    """
 
     interest: Interest
     reason: str
+    info: Optional[Dict[str, Any]] = field(default=None, compare=False)
 
     @property
     def name(self) -> Name:
@@ -339,11 +348,16 @@ class Forwarder:
             self._send(in_face, cached)
             return
         # 2. Local producer? (longest-prefix over registered producers)
-        for prefix in interest.name.prefixes():
-            handler = self._producers.get(prefix.components)
-            if handler is not None:
-                self._dispatch_producer(handler, in_face, interest)
-                return
+        #    An interest flagged skip_local bypasses this node's own
+        #    producers — a saturated gateway spilling work upstream must
+        #    not be handed the work right back; forwarding clears the
+        #    flag, so the producers of every *other* node still answer.
+        if not interest.skip_local:
+            for prefix in interest.name.prefixes():
+                handler = self._producers.get(prefix.components)
+                if handler is not None:
+                    self._dispatch_producer(handler, in_face, interest)
+                    return
         # 3. PIT insert (aggregation / duplicate suppression / retransmission)
         prior = self.pit.get(interest.name)
         is_retx = (prior is not None and in_face in prior.in_faces
@@ -386,7 +400,7 @@ class Forwarder:
         if not live:
             if nack_if_stuck:
                 self.pit.satisfy(interest.name)
-                self._send(in_face, Nack(interest, "no-route"))
+                self._send(in_face, Nack(interest, reasons.NO_ROUTE))
             return
         chosen = self.strategy.choose(interest, entry, live, now)
         fwd = interest.decrement_hop()
@@ -414,8 +428,17 @@ class Forwarder:
             self.stats["agg"] += 1
             return
 
-        def publish(data: Data) -> None:
-            self._on_data(face_id=-1, data=data)  # as if it arrived locally
+        def publish(packet: Any) -> None:
+            if isinstance(packet, Nack):
+                # an async producer (e.g. a gateway whose spill attempt
+                # failed) may answer negatively after the fact: resolve
+                # the PIT and propagate downstream like a sync Nack
+                for e in self.pit.satisfy(interest.name):
+                    for down in e.in_faces:
+                        if down in self.faces:
+                            self._send(down, packet)
+                return
+            self._on_data(face_id=-1, data=packet)  # as if it arrived locally
 
         result = handler(interest, publish, now)
         if isinstance(result, Data):
@@ -478,9 +501,16 @@ class Forwarder:
         # ("I am healthy and don't have it") — scoring it as path loss would
         # let every small-object manifest probe poison the loss EWMA of
         # perfectly healthy replicas
+        if nack.info and "eta" in nack.info:
+            # busy receipt: the upstream quoted a predicted completion
+            # time — remember it on the nexthop so ETA-aware strategies
+            # rank by transfer cost + predicted completion
+            hop = self._hop_for(nack.name, face_id)
+            if hop is not None:
+                hop.record_eta(float(nack.info["eta"]))
         if face_id in entry.sent_at and face_id not in entry.resolved:
             entry.resolved.add(face_id)
-            if nack.reason == "data-not-found":
+            if reasons.is_authoritative(nack.reason):
                 self._release_pending(nack.name, face_id)
             else:
                 self._record_outcome(nack.name, face_id, False,
@@ -612,7 +642,7 @@ class Consumer:
                 self._arm_timeout(fresh)
             else:
                 del self._pending[key]
-                self._fail_waiters(st, "timeout")
+                self._fail_waiters(st, reasons.TIMEOUT)
 
         # retransmit *before* the upstream PIT entry expires (RTO < lifetime)
         # so forwarders see a live entry + fresh nonce — the retransmission
@@ -647,8 +677,8 @@ class Consumer:
                 return
             if st["retries"] == 0:
                 self._pending.pop(packet.name.components)
-                self._fail_waiters(st, f"nack:{packet.reason}")
-            elif packet.reason == "no-route" and st["noroute_retries"] < 6:
+                self._fail_waiters(st, reasons.nack_failure(packet.reason))
+            elif packet.reason == reasons.NO_ROUTE and st["noroute_retries"] < 6:
                 # a no-route NACK during route convergence is transient:
                 # the decentralized control plane is still gossiping this
                 # prefix hop-by-hop.  Retry on a short exponential backoff

@@ -11,20 +11,41 @@ Our gateway attaches three producers to the cluster's forwarder node:
 
 * ``/lidc/compute`` — parse the semantic name, run the per-app validator,
   check the result cache, matchmake to a named endpoint, admit, and answer
-  with a signed *receipt* (job_id + where status/results will live).
+  with a signed *receipt* (job_id + ETA + where status/results will live).
 * ``/lidc/status/<job_id>`` — the paper's four-state status protocol.
 * ``/lidc/data`` — delegated to the data lake (the fileserver pod).
+
+Saturation is a first-class network signal here, not a dead end:
+
+* A feasible-but-saturated cluster answers with a **busy receipt** — a
+  Nack whose ``info`` carries the scheduler's predicted completion time
+  (``eta``) and live load — so strategies upstream rank clusters by
+  transfer cost *plus predicted completion* instead of blindly
+  retrying.  (``legacy_nack=True`` restores the historical bare
+  ``no-capacity:`` Nack; the property tests prove the two paths admit
+  and execute identically.)
+* Past the scheduler's **spill threshold**, the gateway *re-expresses
+  the compute Interest upstream* through its own forwarder
+  (``skip_local``), shedding the work toward peer clusters with no
+  controller involved.  The hop-carried ``spill=`` path field bounds the
+  shed chain and suppresses loops (a gateway that finds itself in the
+  path answers busy instead of forwarding the work in a circle), and the
+  peer's receipt is republished under the original Interest name, so the
+  client transparently lands on the peer's status namespace.
 """
 
 from __future__ import annotations
 
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict, List, Optional
 
+from . import reasons
 from .cluster import ComputeCluster
-from .forwarder import Nack
-from .jobs import JobSpec, JobState, result_name_for
-from .matchmaker import MatchError
-from .names import COMPUTE_PREFIX, STATUS_PREFIX, Name, job_fields_of
+from .forwarder import Consumer, Nack
+from .jobs import (SPILL_FIELD, Job, JobSpec, JobState, decode_spill_path,
+                   encode_spill_path, result_name_for)
+from .matchmaker import CapacityError, MatchError
+from .names import (COMPUTE_PREFIX, STATUS_PREFIX, Name, canonical_job_name,
+                    job_fields_of)
 from .packets import Data, Interest, sign_data
 from .validation import ValidationError, ValidatorRegistry, default_registry
 
@@ -34,27 +55,40 @@ __all__ = ["Gateway"]
 class Gateway:
     def __init__(self, cluster: ComputeCluster,
                  validators: Optional[ValidatorRegistry] = None,
-                 signing_key: bytes = b"lidc-gateway-key"):
+                 signing_key: bytes = b"lidc-gateway-key",
+                 legacy_nack: bool = False):
         self.cluster = cluster
         self.validators = validators or default_registry()
         self.key = signing_key
+        self.legacy_nack = legacy_nack
         self.receipts_served = 0
         self.cache_shortcuts = 0
+        self.busy_receipts = 0
+        self.spills = 0
+        self.spill_failures = 0
         self.rejections: Dict[str, int] = {}
         self._jobs_by_sig: Dict[str, str] = {}
+        self._spill_consumer: Optional[Consumer] = None
         node = cluster.node
         node.attach_producer(Name.parse(COMPUTE_PREFIX), self._on_compute)
         node.attach_producer(Name.parse(STATUS_PREFIX), self._on_status)
         if cluster.lake is not None:
             cluster.lake.attach(node)
+        # evict the dedupe map when a job completes or fails — without
+        # this the map grows forever and a finished signature shadows
+        # later bookkeeping (see tests/test_gateway_protocol.py)
+        cluster.scheduler.on_job_done.append(self._evict_sig)
 
     # ------------------------------------------------------------- compute
     def _on_compute(self, interest: Interest, publish: Callable[[Data], None],
                     now: float):
         fields = job_fields_of(interest.name)
         if fields is None:
-            return self._reject(interest, "malformed-job-name")
+            return self._reject(interest, reasons.MALFORMED_JOB_NAME)
         app = fields.pop("app")
+        # the hop-carried spill path is transport metadata: strip it
+        # before validation/spec so the work keeps its canonical identity
+        spill_path = decode_spill_path(fields.pop(SPILL_FIELD, ""))
         # 1. application-specific validation (paper §IV.B) — against the
         #    *advertised* capability record, the same one the routing
         #    protocol gossiped: what the network was promised is what the
@@ -63,7 +97,7 @@ class Gateway:
             self.validators.validate(app, fields,
                                      self.cluster.capability_record())
         except ValidationError as e:
-            return self._reject(interest, f"validation:{e}")
+            return self._reject(interest, reasons.validation_reason(e))
         spec = JobSpec(app=app, fields=fields)
         # 2. result cache: identical canonical request already computed?
         #    (paper §VII: "identical requests ... uniquely identifying names")
@@ -83,17 +117,108 @@ class Gateway:
             job = self.cluster.jobs.get(existing_id)
             if job is not None and job.state not in (JobState.FAILED,):
                 return self._receipt(interest, now, state=job.state.value,
-                                     job_id=job.job_id, spec=spec)
-        # 4. matchmake + admit (the K8s-job spawn)
+                                     job_id=job.job_id, spec=spec, job=job)
+        # 4. loop suppression: a spilled Interest that finds this cluster
+        #    already on its path must not circulate — answer busy with our
+        #    current ETA so the sender's strategy learns, never re-shed
+        if self.cluster.name in spill_path:
+            return self._busy(interest, spec, reason_detail="spill-loop")
         if not self.cluster.alive:
-            return self._reject(interest, "cluster-down")
+            return self._reject(interest, reasons.CLUSTER_DOWN)
+        # 5. decentralized work shedding: past the spill threshold, hand
+        #    the Interest to a peer cluster through our own forwarder
+        scheduler = self.cluster.scheduler
+        if (scheduler.cfg.spill_enabled
+                and len(spill_path) < scheduler.cfg.max_spill_hops
+                and scheduler.should_spill(spec,
+                                           spec.chips(default=1))):
+            return self._spill(interest, spec, spill_path, publish)
+        # 6. matchmake + admit (the K8s-job spawn)
         try:
             job = self.cluster.submit(spec, now)
+        except CapacityError as e:
+            # feasible here, just saturated: shed upstream if allowed,
+            # else answer with the ETA-carrying busy receipt
+            if (scheduler.cfg.spill_enabled
+                    and len(spill_path) < scheduler.cfg.max_spill_hops):
+                return self._spill(interest, spec, spill_path, publish)
+            if self.legacy_nack:
+                return self._reject(interest, reasons.no_capacity_reason(e))
+            return self._busy(interest, spec)
         except MatchError as e:
-            return self._reject(interest, f"no-capacity:{e}")
-        self._jobs_by_sig[sig] = job.job_id
+            return self._reject(interest, reasons.no_capacity_reason(e))
+        if job.state not in (JobState.FAILED, JobState.COMPLETED):
+            # a job that already finished synchronously (instant executor
+            # or sync failure) must not (re-)enter the dedupe map — the
+            # eviction hook fired before we got here
+            self._jobs_by_sig[sig] = job.job_id
         return self._receipt(interest, now, state=job.state.value,
-                             job_id=job.job_id, spec=spec)
+                             job_id=job.job_id, spec=spec, job=job)
+
+    def _evict_sig(self, job: Job) -> None:
+        sig = job.spec.signature()
+        if self._jobs_by_sig.get(sig) == job.job_id:
+            del self._jobs_by_sig[sig]
+
+    # --------------------------------------------------------------- spill
+    def _spill(self, interest: Interest, spec: JobSpec,
+               spill_path: List[str], publish: Callable) -> None:
+        """Re-express the compute Interest upstream with ourselves
+        appended to the hop-carried spill path.  ``skip_local`` keeps our
+        own forwarder from handing the work straight back to this
+        gateway; the peer's receipt is republished under the *original*
+        Interest name (same canonical work, the peer's status namespace).
+        """
+        self.spills += 1
+        cfg = self.cluster.scheduler.cfg
+        path = list(spill_path) + [self.cluster.name]
+        fields = {"app": spec.app, **spec.fields,
+                  SPILL_FIELD: encode_spill_path(path)}
+        upstream = Interest(name=canonical_job_name(fields),
+                            lifetime=cfg.spill_lifetime,
+                            must_be_fresh=True, skip_local=True)
+        if self._spill_consumer is None:
+            self._spill_consumer = Consumer(
+                self.cluster.net, self.cluster.node,
+                name=f"{self.cluster.name}-spill")
+
+        def on_receipt(d: Data) -> None:
+            payload = d.json()
+            payload["spilled_via"] = encode_spill_path(path)
+            state = payload.get("state", "Pending")
+            out = Data.from_json(interest.name, payload,
+                                 created_at=self.cluster.net.now,
+                                 freshness=self._receipt_freshness(state))
+            publish(sign_data(out, self.key, self.cluster.name))
+
+        def on_fail(reason: str) -> None:
+            # every peer declined (or the path timed out): take the job
+            # after all if the queue can hold it, else answer busy
+            self.spill_failures += 1
+            now = self.cluster.net.now
+            if self.cluster.alive:
+                try:
+                    job = self.cluster.submit(spec, now)
+                except MatchError:
+                    job = None
+                if job is not None:
+                    if job.state not in (JobState.FAILED,
+                                         JobState.COMPLETED):
+                        # same terminal-state guard as the sync admit
+                        # path: the eviction hook already fired for a
+                        # synchronously-finished job
+                        self._jobs_by_sig[spec.signature()] = job.job_id
+                    publish(self._receipt(interest, now,
+                                          state=job.state.value,
+                                          job_id=job.job_id, spec=spec,
+                                          job=job))
+                    return
+            publish(self._busy(interest, spec,
+                               reason_detail=f"spill-failed:{reason}"))
+
+        self._spill_consumer.express(upstream, on_data=on_receipt,
+                                     on_fail=on_fail, retries=1)
+        return None  # receipt (or busy) is published asynchronously
 
     # ------------------------------------------------------------- status
     def _on_status(self, interest: Interest, publish: Callable[[Data], None],
@@ -103,18 +228,24 @@ class Gateway:
         # status names are /lidc/status/<cluster>/<job_id> so they route by
         # prefix to the owning cluster (announced in overlay.py)
         if len(comps) < len(base) + 2:
-            return self._reject(interest, "status-needs-job-id")
+            return self._reject(interest, reasons.STATUS_NEEDS_JOB_ID)
         job_id = comps[len(base) + 1]
         job = self.cluster.jobs.get(job_id)
         if job is None:
-            return self._reject(interest, "unknown-job")
-        d = Data.from_json(interest.name, job.status_payload(),
+            return self._reject(interest, reasons.UNKNOWN_JOB)
+        payload = job.status_payload()
+        if job.state in (JobState.PENDING, JobState.RUNNING):
+            eta = self.cluster.scheduler.eta_of(job_id)
+            if eta is not None:
+                payload["eta"] = round(eta, 6)
+        d = Data.from_json(interest.name, payload,
                            created_at=now, freshness=0.25)
         return sign_data(d, self.key, self.cluster.name)
 
     # ------------------------------------------------------------- helpers
     def _receipt(self, interest: Interest, now: float, *, state: str,
-                 job_id: str, spec: JobSpec) -> Data:
+                 job_id: str, spec: JobSpec,
+                 job: Optional[Job] = None) -> Data:
         self.receipts_served += 1
         payload = {
             "job_id": job_id,
@@ -124,16 +255,40 @@ class Gateway:
                 self.cluster.name, job_id)),
             "result_name": str(result_name_for(spec)),
         }
-        # Completed receipts are durable cache entries (the §VII result
-        # cache); Pending/Running receipts go stale fast so a retransmitted
-        # Interest after a cluster failure is NOT satisfied by a stale
-        # pointer to a dead cluster's job.
-        freshness = 300.0 if state == "Completed" else 1.0
+        if job is not None and state in ("Pending", "Running"):
+            eta = self.cluster.scheduler.eta_of(job.job_id)
+            if eta is not None:
+                payload["eta"] = round(eta, 6)
         d = Data.from_json(interest.name, payload, created_at=now,
-                           freshness=freshness)
+                           freshness=self._receipt_freshness(state))
         return sign_data(d, self.key, self.cluster.name)
 
+    @staticmethod
+    def _receipt_freshness(state: str) -> float:
+        """Completed receipts are durable cache entries (the §VII result
+        cache); Pending/Running receipts go stale fast so a retransmitted
+        Interest after a cluster failure is NOT satisfied by a stale
+        pointer to a dead cluster's job.  One rule for local *and*
+        spill-republished receipts."""
+        return 300.0 if state == "Completed" else 1.0
+
+    def _busy(self, interest: Interest, spec: JobSpec,
+              reason_detail: Optional[str] = None) -> Nack:
+        """The busy receipt: a structured Nack quoting this cluster's
+        predicted completion time and live load, so upstream strategies
+        rank us by transfer cost + predicted completion."""
+        self.busy_receipts += 1
+        self.rejections[reasons.BUSY] = self.rejections.get(reasons.BUSY, 0) + 1
+        scheduler = self.cluster.scheduler
+        reason = reasons.BUSY if reason_detail is None \
+            else f"{reasons.BUSY}:{reason_detail}"
+        return Nack(interest, reason, info={
+            "eta": round(scheduler.eta(spec), 6),
+            "free_chips": self.cluster.free_chips,
+            "queue_depth": scheduler.queue_depth,
+        })
+
     def _reject(self, interest: Interest, reason: str) -> Nack:
-        self.rejections[reason.split(":")[0]] = \
-            self.rejections.get(reason.split(":")[0], 0) + 1
+        kind = reasons.kind_of(reason)
+        self.rejections[kind] = self.rejections.get(kind, 0) + 1
         return Nack(interest, reason)

@@ -18,12 +18,38 @@ from typing import Any, Dict, Optional
 from .names import DATA_PREFIX, Name, canonical_job_name
 
 __all__ = ["JobState", "JobSpec", "Job", "result_name_for",
-           "INPUTS_FIELD", "encode_input_names", "decode_input_names"]
+           "INPUTS_FIELD", "PRIORITY_FIELD", "SPILL_FIELD",
+           "encode_input_names", "decode_input_names",
+           "encode_spill_path", "decode_spill_path"]
 
 # Job field carrying the data-lake names a computation reads (workflow
 # stages use this; the field is part of the canonical name, so the same
 # program over different inputs yields different result names).
 INPUTS_FIELD = "in"
+
+# Priority class of the job (higher = more urgent; absent = 0).  Part of
+# the canonical name — the same work at a different priority is a
+# different *request*, but the compute-plane scheduler is what interprets
+# it (see repro.core.compute_plane).
+PRIORITY_FIELD = "prio"
+
+# Hop-carried spill path: when a saturated gateway sheds a compute
+# Interest upstream it appends its own cluster name to this field
+# (":"-joined).  The field is *transport metadata*: it bounds and
+# loop-suppresses decentralized work shedding, and it is excluded from
+# the job's signature so a spilled request keeps the canonical result
+# name (and result-cache identity) of the original.
+SPILL_FIELD = "spill"
+
+
+def encode_spill_path(path) -> str:
+    """Join cluster names into the hop-carried ``spill=`` field value."""
+    return ":".join(str(p) for p in path)
+
+
+def decode_spill_path(value: str):
+    """Invert :func:`encode_spill_path` (empty value -> empty path)."""
+    return [p for p in str(value or "").split(":") if p]
 
 
 def encode_input_names(names) -> str:
@@ -87,12 +113,26 @@ class JobSpec:
         """Data-lake names this job reads (workflow stages set these)."""
         return decode_input_names(self.fields.get(INPUTS_FIELD, ""))
 
+    @property
+    def priority(self) -> int:
+        """Priority class (higher = more urgent; absent/unparseable = 0)."""
+        try:
+            return int(self.fields.get(PRIORITY_FIELD, 0))
+        except (TypeError, ValueError):
+            return 0
+
     def name(self) -> Name:
         return canonical_job_name({"app": self.app, **self.fields})
 
     def signature(self) -> str:
-        """Stable identity of the *work* (drives caching & the scheduler)."""
-        return hashlib.sha256(str(self.name()).encode()).hexdigest()[:16]
+        """Stable identity of the *work* (drives caching & the scheduler).
+
+        The hop-carried spill path is transport metadata, not work: a
+        request shed across clusters keeps the original's signature, so
+        result caching and dedupe see one computation."""
+        fields = {k: v for k, v in self.fields.items() if k != SPILL_FIELD}
+        name = canonical_job_name({"app": self.app, **fields})
+        return hashlib.sha256(str(name).encode()).hexdigest()[:16]
 
 
 def result_name_for(spec: JobSpec) -> Name:
@@ -117,6 +157,8 @@ class Job:
     # resources actually granted by the matchmaker
     granted_chips: int = 0
     endpoint: Optional[str] = None
+    # times this job was preempted at a phase boundary (compute plane)
+    preemptions: int = 0
 
     def __post_init__(self) -> None:
         if not self.job_id:
@@ -127,6 +169,13 @@ class Job:
         assert self.state == JobState.PENDING, self.state
         self.state = JobState.RUNNING
         self.started_at = now
+
+    def preempt(self, now: float) -> None:
+        """A higher-priority job took the chips at a phase boundary: back
+        to Pending; a later :meth:`start` resumes from the checkpoint."""
+        assert self.state == JobState.RUNNING, self.state
+        self.state = JobState.PENDING
+        self.preemptions += 1
 
     def complete(self, now: float, result: Dict[str, Any]) -> None:
         assert self.state == JobState.RUNNING, self.state

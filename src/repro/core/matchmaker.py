@@ -16,11 +16,18 @@ from typing import Callable, List, Mapping, Optional, Sequence, Tuple
 
 from .jobs import JobSpec
 
-__all__ = ["ServiceEndpoint", "MatchError", "Matchmaker"]
+__all__ = ["ServiceEndpoint", "MatchError", "CapacityError", "Matchmaker"]
 
 
 class MatchError(Exception):
-    pass
+    """No endpoint can run this job here, ever (wrong app/arch/memory)."""
+
+
+class CapacityError(MatchError):
+    """An endpoint *could* run this job, but the cluster is saturated
+    (chips busy and the admission queue full).  Gateways answer this with
+    a busy receipt carrying an ETA — or shed the work upstream — instead
+    of the structural no-capacity Nack."""
 
 
 # (spec, chips) -> estimated bytes per chip, or None if unknown
@@ -71,8 +78,9 @@ class Matchmaker:
         self.max_queue_depth = max_queue_depth
 
     def _feasible(self, spec: JobSpec, candidates: Sequence[ServiceEndpoint],
-                  chip_budget: int, want: int
-                  ) -> List[Tuple[float, ServiceEndpoint, int]]:
+                  chip_budget: int, want: int,
+                  eta_fn: Optional[Callable[[ServiceEndpoint, int], float]]
+                  = None) -> List[Tuple[float, ServiceEndpoint, int]]:
         feasible: List[Tuple[float, ServiceEndpoint, int]] = []
         for e in candidates:
             grant = min(want, e.max_chips)
@@ -93,15 +101,19 @@ class Matchmaker:
                     if fitted is None:
                         continue
                     grant = fitted
-            # score: prefer least-loaded, then most-specific arch match
+            # score: prefer the endpoint predicted to complete soonest
+            # (eta_fn, when the compute plane supplies one) or, without a
+            # predictor, least-loaded; most-specific arch match breaks ties
+            load = eta_fn(e, grant) if eta_fn is not None else float(e.running)
             specificity = (1 if e.archs else 0) + (1 if e.shapes else 0)
-            feasible.append((e.running - 0.1 * specificity, e, grant))
+            feasible.append((load - 0.1 * specificity, e, grant))
         return feasible
 
     def match(self, spec: JobSpec, endpoints: Sequence[ServiceEndpoint],
               free_chips: int, *, queue_depth: int = 0,
               total_chips: Optional[int] = None,
-              advertised: Optional[Mapping] = None
+              advertised: Optional[Mapping] = None,
+              eta_fn: Optional[Callable[[ServiceEndpoint, int], float]] = None
               ) -> Tuple[ServiceEndpoint, int]:
         """Pick (endpoint, chip grant) for a job.
 
@@ -112,7 +124,13 @@ class Matchmaker:
         ``advertised`` is the cluster's capability record as gossiped by
         the routing protocol; when present it caps both budgets, so a
         cluster that advertised fewer chips than it physically has never
-        grants past its advertisement.
+        grants past its advertisement.  ``eta_fn(endpoint, grant)`` — the
+        compute plane's predicted completion — replaces the raw running
+        count in endpoint scoring when provided.
+
+        Raises :class:`CapacityError` (a :class:`MatchError`) when an
+        endpoint could serve the job but the cluster is saturated, and a
+        plain :class:`MatchError` when nothing here could ever run it.
         """
         if advertised is not None and "chips" in advertised:
             adv_chips = int(advertised["chips"])
@@ -125,15 +143,24 @@ class Matchmaker:
             raise MatchError(f"no endpoint serves app={spec.app} "
                              f"arch={spec.arch} shape={spec.shape}")
         want = spec.chips(default=1)
-        feasible = self._feasible(spec, candidates, free_chips, want)
-        if not feasible and queue_depth < self.max_queue_depth:
-            budget = total_chips if total_chips is not None else free_chips
-            feasible = self._feasible(spec, candidates, budget, want)
+        feasible = self._feasible(spec, candidates, free_chips, want, eta_fn)
         if not feasible:
-            raise MatchError(
-                f"no feasible endpoint for {spec.app}/{spec.arch} "
-                f"(want {want} chips, free {free_chips}, "
-                f"queued {queue_depth}/{self.max_queue_depth})")
+            # one total-budget pass serves both queued admission and the
+            # saturated-vs-structural classification below
+            budget = total_chips if total_chips is not None else free_chips
+            total_feasible = self._feasible(spec, candidates, budget, want,
+                                            eta_fn)
+            if queue_depth < self.max_queue_depth:
+                feasible = total_feasible
+            if not feasible:
+                msg = (f"no feasible endpoint for {spec.app}/{spec.arch} "
+                       f"(want {want} chips, free {free_chips}, "
+                       f"queued {queue_depth}/{self.max_queue_depth})")
+                if total_feasible:
+                    # the job fits the cluster's *total* budget: only the
+                    # current load stands in the way
+                    raise CapacityError(msg)
+                raise MatchError(msg)
         feasible.sort(key=lambda t: (t[0], t[1].service))
         _, endpoint, grant = feasible[0]
         return endpoint, grant

@@ -63,11 +63,13 @@ class Overlay:
         return cluster.advertised_prefixes()
 
     def add_cluster(self, cluster: ComputeCluster, *, latency: float = 0.002,
-                    validators=None) -> Gateway:
+                    validators=None, legacy_nack: bool = False) -> Gateway:
         """Join: link the gateway node; the cluster *advertises* its
         prefixes and capability record through the protocol.  Nothing is
-        written into the edge's FIB from here."""
-        gw = Gateway(cluster, validators=validators)
+        written into the edge's FIB from here.  ``legacy_nack`` restores
+        the historical bare ``no-capacity`` Nack on saturation instead of
+        the ETA-carrying busy receipt."""
+        gw = Gateway(cluster, validators=validators, legacy_nack=legacy_nack)
         edge_face, gw_face = link(self.net, self.edge, cluster.node, latency)
         self.links[cluster.name] = (edge_face, gw_face)
         self.clusters[cluster.name] = cluster
@@ -539,12 +541,17 @@ class LidcSystem:
 
     def add_cluster(self, name: str, *, chips: int = 8, endpoints=(),
                     latency: float = 0.002, hbm_gb_per_chip: float = 16.0,
-                    memory_model=None, validators=None) -> ComputeCluster:
+                    memory_model=None, validators=None,
+                    max_queue_depth: int = 0, scheduler_config=None,
+                    legacy_nack: bool = False) -> ComputeCluster:
         cluster = ComputeCluster(self.net, name, chips=chips,
                                  hbm_gb_per_chip=hbm_gb_per_chip,
-                                 lake=self.lake, memory_model=memory_model)
+                                 lake=self.lake, memory_model=memory_model,
+                                 max_queue_depth=max_queue_depth,
+                                 scheduler_config=scheduler_config)
         for e in endpoints:
             cluster.add_endpoint(e)
         self.overlay.add_cluster(cluster, latency=latency,
-                                 validators=validators)
+                                 validators=validators,
+                                 legacy_nack=legacy_nack)
         return cluster

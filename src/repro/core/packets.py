@@ -46,9 +46,15 @@ class Interest:
     # Application parameters that are *not* part of the routed name
     # (e.g. job payloads too big to put in a component).
     app_params: Optional[Dict[str, Any]] = None
+    # Skip this node's *own* producers and go straight to forwarding —
+    # how a saturated gateway re-expresses a compute Interest upstream
+    # (spill) without its own forwarder handing the work right back to
+    # it.  First-hop-only by construction: forwarding clears the flag,
+    # so remote producers still answer normally.
+    skip_local: bool = False
 
     def decrement_hop(self) -> "Interest":
-        return replace(self, hop_limit=self.hop_limit - 1)
+        return replace(self, hop_limit=self.hop_limit - 1, skip_local=False)
 
     def refresh(self) -> "Interest":
         """Retransmission: same name, new nonce (so PITs treat it as new)."""

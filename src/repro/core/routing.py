@@ -96,10 +96,15 @@ class RoutingConfig:
 def capability_cost(caps: Optional[Dict[str, Any]]) -> float:
     """Origin-side cost seed derived from a capability record.
 
-    A loaded cluster (no free chips, deep admission queue) advertises a
-    higher base cost, so strategies that seed their ranking from the FIB
-    cost — cold-prefix probing in AdaptiveStrategy — prefer clusters that
-    advertised spare capacity, before a single Interest has been sent.
+    A loaded cluster (no free chips, deep admission queue, high median
+    predicted completion) advertises a higher base cost, so strategies
+    that seed their ranking from the FIB cost — cold-prefix probing in
+    AdaptiveStrategy — prefer clusters that advertised spare capacity,
+    before a single Interest has been sent.  ``eta_p50`` is the compute
+    plane's gossiped median predicted completion over its queue (see
+    :meth:`repro.core.compute_plane.ClusterScheduler.eta_p50`): the
+    paper's §VII "predict completion times" signal, folded into route
+    cost with a cap so a pathological quote cannot black-hole a cluster.
     """
     if not caps:
         return 0.0
@@ -111,6 +116,7 @@ def capability_cost(caps: Optional[Dict[str, Any]]) -> float:
     elif free is not None and int(free) <= 0:
         cost += 0.5          # full right now; queued admission territory
     cost += 0.125 * float(caps.get("queue_depth", 0))
+    cost += min(2.0, 0.25 * float(caps.get("eta_p50", 0.0)))
     return cost
 
 

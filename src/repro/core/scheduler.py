@@ -19,7 +19,7 @@ measured duration flows back through the strategy layer.
 from __future__ import annotations
 
 import math
-from collections import defaultdict
+from collections import defaultdict, deque
 from dataclasses import dataclass
 from typing import Any, Dict, List, Mapping, Optional, Tuple
 
@@ -84,7 +84,11 @@ class CompletionModel:
         # running ridge-regression sufficient statistics, per face
         self._xtx: Dict[int, np.ndarray] = {}
         self._xty: Dict[int, np.ndarray] = {}
-        self.observations: List[Tuple[Tuple, int, float]] = []
+        # recent-history ring for debugging/telemetry; the compute plane
+        # feeds one observation per completed job, so this must be
+        # bounded — the learned state lives in the EWMAs and the ridge
+        # sufficient statistics above, not here
+        self.observations: deque = deque(maxlen=4096)
         # per-face transport health: EWMA rtt + EWMA loss from strategy feedback
         self._transport_rtt: Dict[int, _Ewma] = {}
         self._transport_loss: Dict[int, float] = {}

@@ -147,6 +147,15 @@ class AdaptiveStrategy(Strategy):
     gossiped mid-run steers warm traffic too; 0 keeps the historical
     pure-telemetry ranking.
 
+    ``eta_weight`` makes the ranking *completion-aware*: a saturated
+    gateway's busy receipt quotes its predicted completion time, the
+    forwarder folds the quote into the nexthop's ``eta_ewma``, and the
+    ranking adds ``eta_weight x eta`` seconds to that upstream's score —
+    so the strategy weighs transfer cost (RTT) *plus predicted
+    completion*, not hop cost alone, and a cluster that stops quoting
+    (the ETA decays on every success) wins traffic back.  0 (default)
+    keeps the historical transport-only ranking.
+
     ``split_segments`` (on by default) is the bulk-data fast path: an
     Interest whose final component is ``seg=i`` belongs to a windowed
     object fetch, and is steered to the *least-loaded* upstream — argmin
@@ -162,13 +171,15 @@ class AdaptiveStrategy(Strategy):
                  loss_weight: float = 8.0,
                  rotate_cold_probes: bool = False,
                  split_segments: bool = True,
-                 cost_bias: float = 0.0) -> None:
+                 cost_bias: float = 0.0,
+                 eta_weight: float = 0.0) -> None:
         self.probe_fanout = max(1, probe_fanout)
         self.explore_every = max(2, explore_every)
         self.loss_weight = loss_weight
         self.rotate_cold_probes = rotate_cold_probes
         self.split_segments = split_segments
         self.cost_bias = cost_bias
+        self.eta_weight = eta_weight
         self._decisions = 0
         self.probes = 0
         self.explorations = 0
@@ -178,7 +189,8 @@ class AdaptiveStrategy(Strategy):
         return sorted(
             nexthops,
             key=lambda h: (h.score(loss_weight=self.loss_weight)
-                           * (1.0 + self.cost_bias * max(h.cost - 1.0, 0.0)),
+                           * (1.0 + self.cost_bias * max(h.cost - 1.0, 0.0))
+                           + self.eta_weight * h.eta_ewma,
                            h.cost, h.face_id))
 
     def choose(self, interest, entry, nexthops, now):

@@ -59,15 +59,26 @@ class NextHop:
     failures: int = 0
     pending: int = 0          # interests forwarded, not yet answered
     last_used: float = 0.0    # when a strategy last forwarded through here
+    # predicted-completion quote from the upstream's last busy receipt
+    # (seconds; 0 = never quoted / recovered).  Decays on success so a
+    # cluster that stops being busy wins traffic back.
+    eta_ewma: float = 0.0
 
     def record(self, ok: bool, rtt: float = 0.0, alpha: float = 0.3) -> None:
         if ok:
             self.successes += 1
             self.rtt_ewma = rtt if self.rtt_ewma == 0 else (1 - alpha) * self.rtt_ewma + alpha * rtt
             self.loss_ewma = (1 - alpha) * self.loss_ewma
+            self.eta_ewma = (1 - alpha) * self.eta_ewma
         else:
             self.failures += 1
             self.loss_ewma = (1 - alpha) * self.loss_ewma + alpha
+
+    def record_eta(self, eta: float, alpha: float = 0.4) -> None:
+        """Fold in a busy receipt's predicted-completion quote."""
+        eta = max(eta, 0.0)
+        self.eta_ewma = eta if self.eta_ewma == 0 \
+            else (1 - alpha) * self.eta_ewma + alpha * eta
 
     @property
     def measured(self) -> bool:

@@ -41,6 +41,7 @@ from __future__ import annotations
 import json
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
+from ..core import reasons
 from ..core.forwarder import Consumer, Forwarder, Network
 from ..core.names import Name
 from ..core.packets import Data, Interest, verify_data
@@ -235,7 +236,7 @@ class SegmentFetcher:
     def _on_manifest_fail(self, reason: str) -> None:
         if self.state != "manifest":
             return
-        if reason == "nack:data-not-found":
+        if reason == reasons.nack_failure(reasons.DATA_NOT_FOUND):
             # authoritative "no such manifest": the object is unsegmented
             # (or absent) — a single bare-name fetch decides.  Transport
             # Nacks (no-route during churn/partition) are transient and

@@ -30,6 +30,7 @@ from typing import Any, Callable, Dict, Iterable, List, Optional
 
 import numpy as np
 
+from ..core import reasons
 from ..core.names import DATA_PREFIX, Name
 from ..core.packets import Data, Interest, sign_data
 from ..core.forwarder import Forwarder, Nack
@@ -168,7 +169,7 @@ class DataLake:
             else:
                 blob = self.get_bytes(interest.name)   # monolithic oracle
                 if blob is None:
-                    return Nack(interest, "data-not-found")
+                    return Nack(interest, reasons.DATA_NOT_FOUND)
                 self.monolithic_serves += 1
             d = Data(name=interest.name, content=blob, created_at=now,
                      freshness=30.0)

@@ -22,7 +22,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
 
-from ..core.jobs import INPUTS_FIELD, JobSpec, encode_input_names, result_name_for
+from ..core.jobs import (INPUTS_FIELD, PRIORITY_FIELD, JobSpec,
+                         encode_input_names, result_name_for)
 from ..core.names import Name, canonical_job_name
 
 __all__ = ["WorkflowError", "StageSpec", "StageInstance", "Workflow",
@@ -104,8 +105,13 @@ class WorkflowSpec:
         workflow = wf.compile()
     """
 
-    def __init__(self, name: str = "workflow"):
+    def __init__(self, name: str = "workflow", priority: int = 0):
+        """``priority`` is the workflow's scheduling class: every stage
+        inherits it as a ``prio=`` job field (part of the canonical
+        name) unless the stage sets its own; the compute-plane scheduler
+        dispatches — and may preempt — by it."""
         self.name = name
+        self.priority = int(priority)
         self._stages: Dict[str, StageSpec] = {}
 
     def stage(self, stage: str, app: str, *,
@@ -193,6 +199,8 @@ class WorkflowSpec:
             insts: List[StageInstance] = []
             for part in parts:
                 fields: Dict[str, Any] = {"app": spec.app, **spec.params}
+                if self.priority and PRIORITY_FIELD not in fields:
+                    fields[PRIORITY_FIELD] = self.priority
                 if part is not None:
                     fields["part"] = part
                     fields["parts"] = spec.fanout

@@ -26,6 +26,7 @@ import json
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
+from ..core import reasons
 from ..core.forwarder import Consumer, Forwarder, Network
 from ..core.names import Name
 from ..core.packets import Data, Interest
@@ -55,6 +56,7 @@ class _StageRun:
     submitted_at: Optional[float] = None
     completed_at: Optional[float] = None
     noroute_retries: int = 0                  # free retries while routes gossip
+    busy_retries: int = 0                     # free backoff retries on busy
 
 
 @dataclass
@@ -182,7 +184,7 @@ class WorkflowEngine:
         if sr.status != StageStatus.SUBMITTED:
             return
         self._trace(run, "submit-fail", sr.inst.id, reason)
-        if reason.endswith("no-route") and sr.noroute_retries < 3:
+        if reasons.is_no_route_failure(reason) and sr.noroute_retries < 3:
             # the overlay hasn't converged on this prefix yet (clusters
             # join by advertising — zero pre-configuration means a stage
             # can race the gossip): re-express without burning one of the
@@ -190,12 +192,35 @@ class WorkflowEngine:
             # a status loss mid-run is a real recovery attempt.
             sr.noroute_retries += 1
             sr.attempts -= 1
+        elif reasons.is_busy_failure(reason) and sr.busy_retries < 4:
+            # every reachable cluster quoted a busy receipt: the fleet is
+            # saturated, not broken.  Back off one poll interval and
+            # re-express without burning a crash-recovery attempt — the
+            # re-expressed Interest re-ranks by the quoted ETAs (and by
+            # then some cluster's queue has drained or spilled).
+            sr.busy_retries += 1
+            sr.attempts -= 1
+            self._retry_or_fail(run, sr, f"submit:{reason}",
+                                delay=self.poll_interval * sr.busy_retries)
+            return
         self._retry_or_fail(run, sr, f"submit:{reason}")
 
-    def _retry_or_fail(self, run: WorkflowRun, sr: _StageRun, reason: str
-                       ) -> None:
+    def _retry_or_fail(self, run: WorkflowRun, sr: _StageRun, reason: str,
+                       delay: float = 0.0) -> None:
         if sr.attempts < self.max_stage_attempts:
-            self._launch(run, sr)
+            if delay > 0.0:
+                attempt = sr.attempts
+
+                def relaunch() -> None:
+                    # still waiting on this very attempt? (a late duplicate
+                    # receipt may have completed the stage meanwhile)
+                    if (sr.status == StageStatus.SUBMITTED
+                            and sr.attempts == attempt):
+                        self._launch(run, sr)
+
+                self.net.schedule(delay, relaunch)
+            else:
+                self._launch(run, sr)
             return
         sr.status = StageStatus.FAILED
         if run.failed is None:

@@ -1,0 +1,606 @@
+"""The cluster scheduler: priorities, preemption, backfill/aging, ETA, spill.
+
+All scenarios run on the deterministic virtual clock; start/finish times
+are asserted exactly.  The equivalence tests at the bottom are the
+acceptance property for the refactor: with preemption and spill disabled,
+the legacy ``no-capacity`` Nack path (``legacy_nack=True``) and the new
+busy-receipt path admit, start and complete the *same* jobs at the *same*
+virtual times — the busy receipt only changes what a rejected client
+learns.
+"""
+
+import random
+
+import pytest
+
+from repro.core import reasons
+from repro.core.cluster import ComputeCluster, ExecPlan, ExecResult
+from repro.core.compute_plane import LOCAL_FACE, SchedulerConfig
+from repro.core.forwarder import Network
+from repro.core.jobs import JobSpec
+from repro.core.matchmaker import ServiceEndpoint
+from repro.core.names import canonical_job_name
+from repro.core.overlay import LidcClient, LidcSystem
+from repro.core.packets import Interest
+from repro.core.validation import ValidatorRegistry
+
+
+# ---------------------------------------------------------------------------
+# a tiny simulated application: fields drive duration/phases, a shared log
+# records exactly which (job, phase) work actually executed
+# ---------------------------------------------------------------------------
+
+def sim_executor(log):
+    def executor(job, cluster):
+        fields = job.spec.fields
+        dur = float(fields.get("d", 1))
+        phases = int(fields.get("phases", 0))
+        uid = fields.get("u", job.job_id)
+        if phases <= 0:
+            log.append((uid, "run", cluster.name))
+            return ExecResult(payload={"u": uid}, duration=dur)
+
+        def phase_fn(i):
+            def work():
+                log.append((uid, f"phase{i}", cluster.name))
+            return work
+
+        return ExecPlan(
+            phases=[(dur / phases, phase_fn(i)) for i in range(phases)],
+            finalize=lambda: ExecResult(payload={"u": uid}, duration=0.0))
+
+    return executor
+
+
+def sim_endpoint(log, *, max_chips=1 << 20):
+    return ServiceEndpoint(service="sim.lidck8s.svc.cluster.local",
+                           app="sim", max_chips=max_chips,
+                           executor=sim_executor(log))
+
+
+def sim_validators():
+    reg = ValidatorRegistry()
+    reg.register("sim", lambda fields, caps: None)
+    return reg
+
+
+def make_cluster(net, log, *, chips=8, max_queue_depth=8, config=None):
+    cluster = ComputeCluster(net, "c0", chips=chips,
+                             max_queue_depth=max_queue_depth,
+                             scheduler_config=config)
+    cluster.add_endpoint(sim_endpoint(log))
+    return cluster
+
+
+def spec(uid, *, chips=1, d=1.0, prio=0, phases=0):
+    fields = {"chips": chips, "d": d, "u": uid}
+    if prio:
+        fields["prio"] = prio
+    if phases:
+        fields["phases"] = phases
+    return JobSpec(app="sim", fields=fields)
+
+
+# ---------------------------------------------------------------------------
+# dispatch order, backfill, aging
+# ---------------------------------------------------------------------------
+
+def test_priority_order_beats_fifo():
+    net, log = Network(), []
+    cluster = make_cluster(net, log, chips=4)
+    cluster.submit(spec("running", chips=4, d=2.0), now=0.0)
+    low = cluster.submit(spec("low", chips=4, d=1.0), now=0.0)
+    high = cluster.submit(spec("high", chips=4, d=1.0, prio=5), now=0.0)
+    net.run()
+    assert high.started_at == 2.0       # outranked the earlier-queued job
+    assert low.started_at == 3.0
+    assert low.state.value == high.state.value == "Completed"
+
+
+def test_backfill_starts_small_jobs_around_blocked_head():
+    net, log = Network(), []
+    cluster = make_cluster(net, log, chips=8,
+                           config=SchedulerConfig(starvation_age=100.0))
+    cluster.submit(spec("wide0", chips=6, d=3.0), now=0.0)
+    big = cluster.submit(spec("big", chips=8, d=1.0), now=0.0)   # blocked
+    small = cluster.submit(spec("small", chips=2, d=0.5), now=0.0)
+    net.run()
+    assert small.started_at == 0.0      # backfilled around the blocked head
+    assert big.started_at == 3.0        # ran when the wide job released
+    assert cluster.scheduler.stats["backfills"] >= 1
+
+
+def test_aged_head_blocks_backfill_so_large_grants_never_starve():
+    net, log = Network(), []
+    cluster = make_cluster(
+        net, log, chips=8,
+        config=SchedulerConfig(starvation_age=1.0, aging_rate=0.0))
+    cluster.submit(spec("wide0", chips=6, d=3.0), now=0.0)
+    big = cluster.submit(spec("big", chips=8, d=1.0), now=0.0)   # blocked
+    young = cluster.submit(spec("young", chips=2, d=0.2), now=0.0)
+    late = {"job": None}
+
+    def submit_late():
+        # arrives after the head aged past starvation_age: must NOT
+        # backfill even though 2 chips are free — the head reserves them
+        late["job"] = cluster.submit(spec("late", chips=2, d=0.2),
+                                     now=net.now)
+
+    net.schedule(2.0, submit_late)
+    net.run()
+    assert young.started_at == 0.0          # backfill while the head is young
+    assert big.started_at == 3.0            # the reservation held
+    assert late["job"].started_at >= big.started_at
+    assert late["job"].state.value == "Completed"
+
+
+def test_low_priority_ages_past_fresh_high_priority_arrivals():
+    net, log = Network(), []
+    cluster = make_cluster(
+        net, log, chips=4,
+        config=SchedulerConfig(aging_rate=1.0, starvation_age=1e9))
+    cluster.submit(spec("seed", chips=4, d=1.0), now=0.0)
+    low = cluster.submit(spec("batch", chips=4, d=1.0, prio=0), now=0.0)
+
+    def submit_urgent(uid):
+        cluster.submit(spec(uid, chips=4, d=1.0, prio=2), now=net.now)
+
+    # a fresh urgent job lands just before every completion boundary
+    for i in range(4):
+        net.schedule(0.5 + i, lambda i=i: submit_urgent(f"urgent{i}"))
+    net.run()
+    # with aging_rate=1, the batch job's effective priority (0 + waited
+    # seconds) passes the urgent class (2 + small waits) by t=3 — it runs
+    # ahead of the urgent2/urgent3 arrivals instead of starving
+    assert low.state.value == "Completed"
+    assert low.started_at == 3.0
+    urgent2 = next(j for j in cluster.jobs.values()
+                   if j.spec.fields["u"] == "urgent2")
+    assert urgent2.started_at > low.started_at
+
+
+# ---------------------------------------------------------------------------
+# preemption at phase boundaries
+# ---------------------------------------------------------------------------
+
+def test_preemption_releases_at_phase_boundary_and_resumes_locally():
+    net, log = Network(), []
+    cluster = make_cluster(net, log, chips=8)
+    victim = cluster.submit(spec("victim", chips=8, d=4.0, phases=4), now=0.0)
+    urgent = {"job": None}
+
+    def submit_urgent():
+        # chips=4 (not 8): a distinct CompletionModel job key, so the
+        # learned-duration assertion below sees only the victim's EWMA
+        urgent["job"] = cluster.submit(
+            spec("urgent", chips=4, d=1.0, prio=5), now=net.now)
+
+    net.schedule(0.5, submit_urgent)
+    net.run()
+    # the victim released at the t=1.0 phase boundary, not immediately
+    assert urgent["job"].started_at == 1.0
+    assert urgent["job"].finished_at == 2.0
+    # ...and resumed at t=2.0 with phases 1-3 (no re-execution of phase 0)
+    assert victim.state.value == "Completed"
+    assert victim.preemptions == 1
+    assert victim.finished_at == 5.0
+    phase_runs = [e for e in log if e[0] == "victim"]
+    assert phase_runs == [("victim", f"phase{i}", "c0") for i in range(4)]
+    assert cluster.scheduler.stats["preemptions"] == 1
+    assert cluster.scheduler.stats["resumes"] == 1
+    # the completion model learned the victim's TOTAL on-chip time (4s),
+    # not just the post-resume segment (3s)
+    est = cluster.scheduler.run_estimate(
+        spec("victim", chips=8, d=4.0, phases=4))
+    assert est == pytest.approx(4.0)
+
+
+def test_preemption_disabled_leaves_running_jobs_alone():
+    net, log = Network(), []
+    cluster = make_cluster(net, log, chips=8,
+                           config=SchedulerConfig(preemption=False))
+    victim = cluster.submit(spec("victim", chips=8, d=4.0, phases=4), now=0.0)
+    urgent = cluster.submit(spec("urgent", chips=8, d=1.0, prio=5), now=0.0)
+    net.run()
+    assert victim.preemptions == 0
+    assert urgent.started_at == 4.0     # waited for the full run
+    assert cluster.scheduler.stats["preemptions"] == 0
+
+
+def test_equal_priorities_never_preempt():
+    net, log = Network(), []
+    cluster = make_cluster(net, log, chips=8)
+    a = cluster.submit(spec("a", chips=8, d=2.0, phases=2), now=0.0)
+    b = cluster.submit(spec("b", chips=8, d=1.0), now=0.0)
+    net.run()
+    assert a.preemptions == 0
+    assert b.started_at == 2.0
+
+
+# ---------------------------------------------------------------------------
+# ETA
+# ---------------------------------------------------------------------------
+
+def test_eta_accounts_for_running_and_queued_work():
+    net, log = Network(), []
+    cluster = make_cluster(net, log, chips=4,
+                           config=SchedulerConfig(default_run_estimate=1.0))
+    cluster.submit(spec("r", chips=4, d=2.0), now=0.0)
+    queued = cluster.submit(spec("q", chips=4, d=1.0), now=0.0)
+    sched = cluster.scheduler
+    # queued job: starts when the runner releases (t=2), prior estimate 1s
+    assert sched.eta_of(queued.job_id) == pytest.approx(3.0)
+    # a hypothetical new arrival queues behind it
+    assert sched.eta(spec("new", chips=4)) == pytest.approx(4.0)
+    assert sched.eta_p50() == pytest.approx(3.0)
+    net.run()
+    assert sched.eta_p50() == 0.0       # drained
+
+
+def test_eta_learns_from_observed_run_times():
+    net, log = Network(), []
+    cluster = make_cluster(net, log, chips=4)
+    s = spec("learn", chips=4, d=2.5)
+    cluster.submit(s, now=0.0)
+    net.run()
+    # the completion fed the model under the cluster's local face
+    est = cluster.scheduler.run_estimate(s)
+    assert est == pytest.approx(2.5, rel=1e-6)
+    pred = cluster.scheduler.model.predict(
+        {"app": "sim", **s.fields}, face_id=LOCAL_FACE)
+    assert pred == pytest.approx(2.5, rel=1e-6)
+
+
+def test_capability_record_carries_eta_p50_and_caches():
+    net, log = Network(), []
+    cluster = make_cluster(net, log, chips=4)
+    rec1 = cluster.capability_record()
+    assert rec1["eta_p50"] == 0.0
+    assert cluster.capability_record() is rec1      # cached, same dict
+    cluster.submit(spec("r", chips=4, d=2.0), now=0.0)
+    cluster.submit(spec("q", chips=4, d=1.0), now=0.0)
+    rec2 = cluster.capability_record()
+    assert rec2 is not rec1                         # invalidated by load
+    assert rec2["queue_depth"] == 1
+    assert rec2["eta_p50"] == pytest.approx(3.0)
+
+
+def test_load_triggered_readvertisement_is_damped():
+    net, log = Network(), []
+    cluster = make_cluster(
+        net, log, chips=4,
+        config=SchedulerConfig(readvertise_min_interval=0.5,
+                               readvertise_factor=2.0))
+    calls = []
+    cluster.on_caps_changed = lambda: calls.append(net.now)
+    # a burst of admissions at t in [0.6, 0.605, ...]: saturation flips and
+    # queues build, but the damping interval bounds the re-advertisements
+    for i in range(6):
+        net.schedule(0.6 + i * 0.001,
+                     lambda i=i: cluster.submit(
+                         spec(f"j{i}", chips=4, d=5.0), now=net.now))
+    net.run(until=1.0)
+    assert 1 <= len(calls) <= 2         # not one advert per admission
+    net.run(until=60.0)
+    # drain is also a significant swing -> at least one more re-advert
+    assert len(calls) >= 2
+    assert all(b - a >= 0.5 for a, b in zip(calls, calls[1:]))
+
+
+# ---------------------------------------------------------------------------
+# busy receipts + the legacy flag (system level, through the overlay)
+# ---------------------------------------------------------------------------
+
+def build_system(n=1, *, chips=4, max_queue_depth=0, config=None,
+                 legacy_nack=False, log=None):
+    sys_ = LidcSystem()
+    log = log if log is not None else []
+    for i in range(n):
+        cluster = ComputeCluster(sys_.net, f"pod{i}", chips=chips,
+                                 lake=sys_.lake,
+                                 max_queue_depth=max_queue_depth,
+                                 scheduler_config=config)
+        cluster.add_endpoint(sim_endpoint(log))
+        sys_.overlay.add_cluster(cluster, validators=sim_validators(),
+                                 legacy_nack=legacy_nack)
+    sys_.net.run(until=0.2)             # let the advertisements gossip
+    return sys_, log
+
+
+def express_at(sys_, consumer, t, fields, outcomes, uid, retries=0):
+    """Schedule a compute Interest at virtual time ``t`` (so long-running
+    jobs cannot complete between submissions the way back-to-back
+    ``client.submit`` calls — each a full ``net.run()`` — would allow)."""
+    def submit():
+        consumer.express(
+            Interest(name=canonical_job_name(fields),
+                     lifetime=2.0, must_be_fresh=True),
+            on_data=lambda d: outcomes.__setitem__(uid, ("receipt", d)),
+            on_fail=lambda r: outcomes.__setitem__(uid, ("fail", r)),
+            retries=retries)
+    sys_.net.schedule(max(0.0, t - sys_.net.now), submit)
+
+
+def test_saturated_gateway_answers_busy_receipt_with_eta():
+    sys_, log = build_system()
+    out = {}
+    c = sys_.client.consumer
+    express_at(sys_, c, 0.3, {"app": "sim", "chips": 4, "d": 60, "u": "a"},
+               out, "a")
+    express_at(sys_, c, 0.4, {"app": "sim", "chips": 4, "d": 1, "u": "b"},
+               out, "b")
+    sys_.net.run()
+    assert out["a"][0] == "receipt"
+    assert out["b"][0] == "fail" and reasons.is_busy_failure(out["b"][1])
+    nack = sys_.client.consumer.nacks[-1]
+    assert reasons.kind_of(nack.reason) == reasons.BUSY
+    assert nack.info is not None and nack.info["eta"] > 0
+    assert nack.info["free_chips"] == 0
+    gw = sys_.overlay.gateways["pod0"]
+    assert gw.busy_receipts == 1
+
+
+def test_legacy_flag_restores_bare_no_capacity_nack():
+    sys_, log = build_system(legacy_nack=True)
+    out = {}
+    c = sys_.client.consumer
+    express_at(sys_, c, 0.3, {"app": "sim", "chips": 4, "d": 60, "u": "a"},
+               out, "a")
+    express_at(sys_, c, 0.4, {"app": "sim", "chips": 4, "d": 1, "u": "b"},
+               out, "b")
+    sys_.net.run()
+    assert out["b"][0] == "fail"
+    nack = sys_.client.consumer.nacks[-1]
+    assert reasons.kind_of(nack.reason) == reasons.NO_CAPACITY
+    assert nack.info is None
+
+
+def test_pending_receipt_carries_eta():
+    sys_, log = build_system(max_queue_depth=4)
+    out = {}
+    c = sys_.client.consumer
+    express_at(sys_, c, 0.3, {"app": "sim", "chips": 4, "d": 10, "u": "a"},
+               out, "a")
+    express_at(sys_, c, 0.4, {"app": "sim", "chips": 4, "d": 1, "u": "b"},
+               out, "b")
+    sys_.net.run()
+    assert out["b"][0] == "receipt"
+    receipt = out["b"][1].json()
+    assert receipt["state"] == "Pending"
+    assert receipt["eta"] > 0
+
+
+# ---------------------------------------------------------------------------
+# decentralized spill
+# ---------------------------------------------------------------------------
+
+def spill_config(**kw):
+    return SchedulerConfig(spill_queue_depth=0, **kw)
+
+
+def test_saturated_cluster_spills_to_peer_in_band():
+    sys_ = LidcSystem()
+    log = []
+    spiller = ComputeCluster(sys_.net, "hot", chips=4, lake=sys_.lake,
+                             max_queue_depth=8,
+                             scheduler_config=spill_config())
+    spiller.add_endpoint(sim_endpoint(log))
+    peer = ComputeCluster(sys_.net, "cold", chips=4, lake=sys_.lake,
+                          max_queue_depth=8)
+    peer.add_endpoint(sim_endpoint(log))
+    sys_.overlay.add_cluster(spiller, validators=sim_validators())
+    sys_.overlay.add_cluster(peer, validators=sim_validators())
+    sys_.net.run(until=0.2)
+    # a client attached *at the hot cluster's node*: its gateway producer
+    # answers first, so every job lands on "hot" regardless of strategy
+    client = LidcClient(sys_.net, spiller.node, name="local-client")
+    out = {}
+    express_at(sys_, client.consumer, 0.3,
+               {"app": "sim", "chips": 4, "d": 30, "u": "fill"}, out, "fill")
+    express_at(sys_, client.consumer, 0.4,
+               {"app": "sim", "chips": 4, "d": 1, "u": "shed"}, out, "shed",
+               retries=2)
+    sys_.net.run()
+    assert out["fill"][1].json()["cluster"] == "hot"
+    # the hot gateway re-expressed the Interest upstream; the peer's
+    # receipt came back under the original name
+    assert out["shed"][0] == "receipt"
+    receipt = out["shed"][1].json()
+    assert receipt["cluster"] == "cold"
+    assert receipt["spilled_via"] == "hot"
+    gw = sys_.overlay.gateways["hot"]
+    assert gw.spills == 1
+    assert ("shed", "run", "cold") in log       # executed on the peer
+    # the spilled request kept the canonical result name (spill= is
+    # transport metadata, not work identity)
+    s = JobSpec(app="sim", fields={"chips": 4, "d": 1, "u": "shed"})
+    from repro.core.jobs import result_name_for
+    assert receipt["result_name"] == str(result_name_for(s))
+
+
+def test_spill_loop_is_suppressed_by_hop_carried_path():
+    net, log = Network(), []
+    cluster = make_cluster(net, log, chips=4, config=spill_config())
+    from repro.core.gateway import Gateway
+    gw = Gateway(cluster, validators=sim_validators())
+    # an Interest whose spill path already contains this cluster must be
+    # answered busy (with an ETA), never re-shed or executed in a circle
+    name = canonical_job_name({"app": "sim", "chips": 4, "u": "x",
+                               "spill": "other:c0"})
+    out = gw._on_compute(Interest(name=name), publish=lambda d: None,
+                         now=0.0)
+    from repro.core.forwarder import Nack
+    assert isinstance(out, Nack)
+    assert reasons.is_busy_failure(out.reason)
+    assert out.info is not None and "eta" in out.info
+    assert gw.spills == 0
+
+
+def test_spill_fallback_admits_locally_when_no_peer_answers():
+    # one lonely saturated cluster with spill enabled: the re-expression
+    # finds no route, and the gateway falls back to queued admission
+    sys_ = LidcSystem()
+    log = []
+    cluster = ComputeCluster(sys_.net, "solo", chips=4, lake=sys_.lake,
+                             max_queue_depth=8,
+                             scheduler_config=spill_config())
+    cluster.add_endpoint(sim_endpoint(log))
+    sys_.overlay.add_cluster(cluster, validators=sim_validators())
+    sys_.net.run(until=0.2)
+    client = LidcClient(sys_.net, cluster.node, name="local-client")
+    out = {}
+    express_at(sys_, client.consumer, 0.3,
+               {"app": "sim", "chips": 4, "d": 3, "u": "fill"}, out, "fill")
+    express_at(sys_, client.consumer, 0.4,
+               {"app": "sim", "chips": 4, "d": 1, "u": "fb"}, out, "fb",
+               retries=3)
+    sys_.net.run()
+    assert out["fb"][0] == "receipt"
+    assert out["fb"][1].json()["cluster"] == "solo"
+    gw = sys_.overlay.gateways["solo"]
+    assert gw.spills == 1 and gw.spill_failures == 1
+    fb = next(j for j in cluster.jobs.values()
+              if j.spec.fields["u"] == "fb")
+    assert fb.state.value == "Completed"
+
+
+# ---------------------------------------------------------------------------
+# the equivalence property: legacy Nack path == new path with
+# preemption/spill disabled (same admissions, same virtual timings)
+# ---------------------------------------------------------------------------
+
+def _drive_workload(sys_, jobs):
+    """Submit jobs at their arrival times through one consumer; return
+    {uid: (kind, detail)} outcomes + per-uid (start, finish) timings."""
+    outcomes = {}
+    for t, fields, uid in jobs:
+        def submit(fields=fields, uid=uid):
+            sys_.client.consumer.express(
+                Interest(name=canonical_job_name(fields),
+                         lifetime=2.0, must_be_fresh=True),
+                on_data=lambda d, uid=uid: outcomes.setdefault(
+                    uid, ("receipt", d.json()["state"])),
+                on_fail=lambda r, uid=uid: outcomes.setdefault(
+                    uid, ("fail", r)),
+                retries=0)
+        sys_.net.schedule(t, submit)
+    sys_.net.run()
+    timings = {}
+    for cluster in sys_.overlay.clusters.values():
+        for job in cluster.jobs.values():
+            timings[job.spec.fields["u"]] = (
+                job.started_at, job.finished_at, job.state.value)
+    return outcomes, timings
+
+
+def _random_workload(seed, n=30):
+    rng = random.Random(seed)
+    jobs = []
+    t = 0.3
+    for i in range(n):
+        t += rng.random() * 0.8
+        fields = {"app": "sim", "chips": rng.choice([1, 2, 4]),
+                  "d": round(rng.uniform(0.2, 3.0), 3), "u": f"j{seed}-{i}"}
+        jobs.append((round(t, 3), fields, fields["u"]))
+    return jobs
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_legacy_nack_path_equivalent_to_new_scheduler(seed):
+    cfg = SchedulerConfig(preemption=False)     # spill off by default too
+    jobs = _random_workload(seed)
+    new_sys, _ = build_system(chips=4, max_queue_depth=2, config=cfg,
+                              legacy_nack=False)
+    old_sys, _ = build_system(chips=4, max_queue_depth=2, config=cfg,
+                              legacy_nack=True)
+    new_out, new_t = _drive_workload(new_sys, list(jobs))
+    old_out, old_t = _drive_workload(old_sys, list(jobs))
+    # identical admissions with identical virtual start/finish times
+    assert new_t == old_t
+    assert set(new_out) == set(old_out)
+    for uid in new_out:
+        nk, nd = new_out[uid]
+        ok, od = old_out[uid]
+        assert nk == ok
+        if nk == "fail":
+            # the only divergence allowed: what a rejected client learns
+            assert reasons.is_busy_failure(nd)
+            assert od.startswith(f"nack:{reasons.NO_CAPACITY}")
+        else:
+            assert nd == od
+
+
+# ---------------------------------------------------------------------------
+# review regressions
+# ---------------------------------------------------------------------------
+
+def test_failure_kind_classifies_on_first_wrapped_reason():
+    # a busy receipt whose spill-failure detail embeds a no-route must
+    # classify as busy (backoff), never as a transient no-route (free
+    # immediate re-expressions at the saturated gateway)
+    nested = "nack:busy:spill-failed:nack:no-route"
+    assert reasons.is_busy_failure(nested)
+    assert not reasons.is_no_route_failure(nested)
+    assert reasons.is_no_route_failure("nack:no-route")
+    assert not reasons.is_busy_failure("nack:no-route")
+    assert reasons.failure_kind("timeout") == reasons.TIMEOUT
+
+
+def test_preempt_mark_withdrawn_when_head_starts_on_freed_chips():
+    """A victim marked for preemption must NOT release at its boundary if
+    the blocked head already started off naturally freed chips."""
+    net, log = Network(), []
+    cluster = make_cluster(net, log, chips=8)
+    victim = cluster.submit(spec("victim", chips=4, d=4.0, phases=4), now=0.0)
+    cluster.submit(spec("filler", chips=4, d=0.6), now=0.0)
+    urgent = {"job": None}
+
+    def submit_urgent():
+        urgent["job"] = cluster.submit(
+            spec("urgent", chips=4, d=0.5, prio=5), now=net.now)
+
+    net.schedule(0.3, submit_urgent)
+    net.run()
+    # the filler's chips (freed at 0.6) started the urgent job; the
+    # victim's mark was reconciled away and it ran to completion whole
+    assert urgent["job"].started_at == pytest.approx(0.6)
+    assert victim.preemptions == 0
+    assert victim.finished_at == pytest.approx(4.0)
+    assert cluster.scheduler.stats["preemptions"] == 0
+    assert cluster.scheduler.stats["resumes"] == 0
+
+
+def test_spill_fallback_failed_job_not_reinserted_into_dedupe_map():
+    """A spill fallback whose local admission fails synchronously must
+    not park the dead signature in the gateway dedupe map forever."""
+    sys_ = LidcSystem()
+
+    def boom(job, cl):
+        raise RuntimeError("synthetic")
+
+    cluster = ComputeCluster(sys_.net, "solo", chips=4, lake=sys_.lake,
+                             max_queue_depth=8,
+                             scheduler_config=spill_config())
+    cluster.add_endpoint(ServiceEndpoint(service="sim.svc", app="sim",
+                                         executor=boom))
+    sys_.overlay.add_cluster(cluster, validators=sim_validators())
+    sys_.net.run(until=0.2)
+    client = LidcClient(sys_.net, cluster.node, name="local-client")
+    out = {}
+    # saturate the cluster so the job spills; free the chips again before
+    # the (peer-less) spill gives up, so the fallback admission *starts*
+    # the job, whose executor fails synchronously
+    sys_.net.schedule(0.25 - sys_.net.now,
+                      lambda: setattr(cluster, "free_chips", 0))
+    express_at(sys_, client.consumer, 0.3,
+               {"app": "sim", "chips": 4, "d": 1, "u": "sf"}, out, "sf",
+               retries=1)
+    sys_.net.schedule(1.0 - sys_.net.now,
+                      lambda: setattr(cluster, "free_chips", 4))
+    sys_.net.run()
+    gw = sys_.overlay.gateways["solo"]
+    assert gw.spills == 1 and gw.spill_failures == 1
+    failed = [j for j in cluster.jobs.values()
+              if j.spec.fields.get("u") == "sf"]
+    assert failed and failed[0].state.value == "Failed"
+    assert gw._jobs_by_sig == {}        # terminal job never (re-)entered

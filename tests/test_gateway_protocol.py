@@ -1,0 +1,201 @@
+"""The gateway status protocol and rejection taxonomy (paper §IV.A/B).
+
+Covers the previously-untested negative paths — ``unknown-job``,
+``malformed-job-name``, ``status-needs-job-id``, validation failures —
+plus receipt freshness semantics (Completed receipts are durable result
+pointers; Pending/Running receipts go stale fast so a dead cluster's
+receipt cannot satisfy a retransmission) and the ``_jobs_by_sig`` dedupe
+map's eviction on job completion/failure (the map used to grow forever).
+"""
+
+import pytest
+
+from repro.core import reasons
+from repro.core.cluster import ComputeCluster, ExecResult
+from repro.core.matchmaker import ServiceEndpoint
+from repro.core.names import Name
+from repro.core.overlay import LidcSystem
+from repro.core.packets import Interest, verify_data
+from repro.core.validation import ValidationError, ValidatorRegistry
+
+
+def sim_validators():
+    reg = ValidatorRegistry()
+
+    def validate(fields, caps):
+        if fields.get("poison"):
+            raise ValidationError("poisoned job rejected")
+
+    reg.register("sim", validate)
+    return reg
+
+
+def sim_endpoint(fail_uids=()):
+    def executor(job, cluster):
+        if job.spec.fields.get("u") in fail_uids:
+            raise RuntimeError("synthetic executor failure")
+        return ExecResult(payload={"u": job.spec.fields.get("u")},
+                          duration=float(job.spec.fields.get("d", 0.5)))
+
+    return ServiceEndpoint(service="sim.lidck8s.svc.cluster.local",
+                           app="sim", executor=executor)
+
+
+@pytest.fixture()
+def system():
+    sys_ = LidcSystem()
+    cluster = ComputeCluster(sys_.net, "pod0", chips=4, lake=sys_.lake,
+                             max_queue_depth=4)
+    cluster.add_endpoint(sim_endpoint(fail_uids=("boom",)))
+    sys_.overlay.add_cluster(cluster, validators=sim_validators())
+    sys_.net.run(until=0.2)             # advertisements gossip in
+    return sys_
+
+
+def nack_reason(box):
+    assert "error" in box, box
+    assert box["error"].startswith(reasons.NACK_PREFIX)
+    return box["error"][len(reasons.NACK_PREFIX):]
+
+
+# ---------------------------------------------------------------------------
+# rejection taxonomy
+# ---------------------------------------------------------------------------
+
+def test_malformed_job_name_is_rejected(system):
+    # /lidc/compute/<app>/<junk>/<junk>/<junk>/... over-deep positional
+    # fields cannot be parsed back into a job description
+    box = system.client.consumer.get(
+        Name.parse("/lidc/compute/sim/a/b/c/d"), retries=0)
+    assert nack_reason(box) == reasons.MALFORMED_JOB_NAME
+    assert system.overlay.gateways["pod0"].rejections[
+        reasons.MALFORMED_JOB_NAME] == 1
+
+
+def test_validation_failure_travels_back_in_the_nack(system):
+    box = system.client.consumer.get(
+        Name.parse("/lidc/compute/sim/poison=1"), retries=0)
+    reason = nack_reason(box)
+    assert reasons.kind_of(reason) == reasons.VALIDATION
+    assert "poisoned" in reason
+    assert system.overlay.gateways["pod0"].rejections[reasons.VALIDATION] == 1
+
+
+def test_unknown_application_is_a_validation_reject(system):
+    # an unknown app has no advertised route, so ask the gateway directly
+    # (a consumer at the cluster node reaches its /lidc/compute producer)
+    from repro.core.forwarder import Consumer
+    local = Consumer(system.net, system.overlay.clusters["pod0"].node)
+    box = local.get(Name.parse("/lidc/compute/unknownapp/x=1"), retries=0)
+    reason = nack_reason(box)
+    assert reasons.kind_of(reason) == reasons.VALIDATION
+    assert "unknown application" in reason
+
+
+def test_status_needs_job_id(system):
+    box = system.client.consumer.get(
+        Name.parse("/lidc/status/pod0"), retries=0)
+    assert nack_reason(box) == reasons.STATUS_NEEDS_JOB_ID
+
+
+def test_unknown_job_status(system):
+    box = system.client.consumer.get(
+        Name.parse("/lidc/status/pod0/no-such-job"), retries=0)
+    assert nack_reason(box) == reasons.UNKNOWN_JOB
+    assert system.overlay.gateways["pod0"].rejections[reasons.UNKNOWN_JOB] == 1
+
+
+# ---------------------------------------------------------------------------
+# receipt freshness semantics
+# ---------------------------------------------------------------------------
+
+def test_running_receipt_is_fast_stale_completed_receipt_durable(system):
+    box = {}
+    system.client.consumer.express(
+        Interest(name=Name.parse("/lidc/compute/sim/chips=1&d=5&u=r1"),
+                 must_be_fresh=True, lifetime=4.0),
+        on_data=lambda d: box.__setitem__("first", d), retries=0)
+    system.net.run(until=0.5)
+    first = box["first"]
+    assert first.json()["state"] in ("Running", "Pending")
+    assert first.freshness == 1.0       # fast-stale: a retransmission after
+    #                                     a crash must not see a dead
+    #                                     cluster's receipt as live
+    assert verify_data(first, b"lidc-gateway-key")
+    system.net.run()                    # job completes, result in the lake
+    # the same canonical request now shortcuts via the result cache, and
+    # the Completed receipt is a durable pointer
+    h = system.client.submit({"app": "sim", "chips": 1, "d": 5, "u": "r1"})
+    assert h.receipt["state"] == "Completed"
+    box2 = system.client.consumer.get(
+        Name.parse(h.receipt["status_name"]), retries=0, must_be_fresh=True)
+    assert box2["data"].json()["state"] == "Completed"
+    assert box2["data"].freshness == 0.25     # status answers stay fresh-only
+
+
+def test_status_answers_carry_eta_while_pending_or_running(system):
+    box = {}
+    system.client.consumer.express(
+        Interest(name=Name.parse("/lidc/compute/sim/chips=1&d=5&u=eta1"),
+                 must_be_fresh=True, lifetime=4.0),
+        on_data=lambda d: box.__setitem__("receipt", d), retries=0)
+    system.net.run(until=0.5)
+    status_name = Name.parse(box["receipt"].json()["status_name"])
+    sbox = system.client.consumer.get(status_name, retries=0,
+                                      must_be_fresh=True)
+    payload = sbox["data"].json()
+    assert payload["state"] == "Running"
+    assert 0 < payload["eta"] <= 5.1
+
+
+# ---------------------------------------------------------------------------
+# the dedupe map: bounded, evicted on completion AND failure
+# ---------------------------------------------------------------------------
+
+def test_jobs_by_sig_evicted_on_completion(system):
+    gw = system.overlay.gateways["pod0"]
+    for i in range(5):
+        h = system.client.run_job({"app": "sim", "chips": 1, "d": 0.1,
+                                   "u": f"ok{i}"})
+        assert h.state == "Completed"
+    # every signature was evicted when its job finished — the map does
+    # not grow with completed work (regression: it used to keep every
+    # signature forever)
+    assert gw._jobs_by_sig == {}
+
+
+def test_jobs_by_sig_evicted_on_failure_and_resubmission_works(system):
+    gw = system.overlay.gateways["pod0"]
+    cluster = system.overlay.clusters["pod0"]
+    h = system.client.run_job({"app": "sim", "chips": 1, "d": 0.1,
+                               "u": "boom"})
+    assert h.state == "Failed"
+    assert gw._jobs_by_sig == {}        # the failed signature is gone
+    jobs_before = len(cluster.jobs)
+    # a resubmission of the failed signature spawns a fresh job instead
+    # of being shadowed by the stale bookkeeping
+    h2 = system.client.run_job({"app": "sim", "chips": 1, "d": 0.1,
+                                "u": "boom"})
+    assert h2.state == "Failed"
+    assert len(cluster.jobs) == jobs_before + 1
+
+
+def test_inflight_dedupe_still_returns_one_receipt(system):
+    """Eviction must not break the live-dedupe path: two expresses of the
+    same canonical name while the job runs share one job."""
+    boxes = []
+    cluster = system.overlay.clusters["pod0"]
+    for t in (0.3, 0.6):
+        def go(t=t):
+            system.client.consumer.express(
+                Interest(name=Name.parse(
+                    "/lidc/compute/sim/chips=1&d=5&u=dd"),
+                    must_be_fresh=True, lifetime=4.0),
+                on_data=lambda d: boxes.append(d.json()), retries=0)
+        system.net.schedule(t, go)
+    system.net.run()
+    dd_jobs = [j for j in cluster.jobs.values()
+               if j.spec.fields.get("u") == "dd"]
+    assert len(dd_jobs) == 1            # the second express deduped
+    assert len(boxes) == 2
+    assert boxes[0]["job_id"] == boxes[1]["job_id"]

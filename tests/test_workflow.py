@@ -203,3 +203,54 @@ def test_shared_subworkflow_dedups_across_workflows():
     # only the new merge executed; shard+aligns were cache hits
     assert log.total == 7
     assert run2.cache_hits == 5
+
+
+# ---------------------------------------------------------------------------
+# compute-plane integration: priorities + busy receipts
+# ---------------------------------------------------------------------------
+
+def test_workflow_priority_is_inherited_by_stages():
+    wf = (WorkflowSpec("urgent", priority=3)
+          .stage("shard", "wf-shard", inputs=[DATASET], parts=2, tag="p")
+          .stage("align", "wf-align", inputs=["@shard"], fanout=2, tag="p",
+                 prio=7))                      # per-stage override wins
+    compiled = wf.compile()
+    shard = compiled.instances["shard"]
+    assert shard.fields["prio"] == 3
+    assert "prio=3" in str(shard.request_name)
+    for i in range(2):
+        assert compiled.instances[f"align.{i}"].fields["prio"] == 7
+    # priority is part of the canonical name: the same work at another
+    # priority is a different request (and a different cache entry)
+    other = (WorkflowSpec("calm")
+             .stage("shard", "wf-shard", inputs=[DATASET], parts=2, tag="p")
+             .compile())
+    assert str(other.instances["shard"].request_name) != \
+        str(shard.request_name)
+
+
+def test_engine_backs_off_on_busy_receipts_and_recovers():
+    """With the whole (single-cluster) fleet saturated, submits fail as
+    ``nack:busy``; the engine retries on a backoff without burning its
+    crash-recovery attempts and completes once chips free up."""
+    system, log = fleet(1)
+    cluster = next(iter(system.overlay.clusters.values()))
+    # occupy every chip for 20 virtual seconds
+    from repro.core.cluster import ExecResult
+    from repro.core.jobs import JobSpec
+    from repro.core.matchmaker import ServiceEndpoint
+    cluster.add_endpoint(ServiceEndpoint(
+        service="hog.svc", app="hog",
+        executor=lambda job, cl: ExecResult(payload={}, duration=20.0)))
+    cluster.submit(JobSpec(app="hog", fields={"chips": cluster.chips}),
+                   now=0.0)
+    assert cluster.free_chips == 0
+    eng = WorkflowEngine(system.net, system.overlay.edge)
+    run = eng.run(blast_spec(parts=2, tag="busy").compile())
+    assert run.complete, run.stage_report()
+    busy_failures = [e for e in run.trace
+                     if e[1] == "submit-fail" and "busy" in e[3]]
+    assert busy_failures, "saturation never surfaced as a busy receipt"
+    shard = run.stages["shard"]
+    assert shard.busy_retries >= 1
+    assert run.finished_at > 20.0          # completed after the hog drained
