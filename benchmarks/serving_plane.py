@@ -1,0 +1,340 @@
+"""Serving-plane scenarios: named inference sessions across a fleet.
+
+The serving plane (``repro.serve.plane``) expresses inference sessions
+as named compute Interests placed by ETA, streams tokens as named chunk
+Data, and publishes KV/prefix state as named Data in the lake.  This
+suite measures the three claims that make it LIDC-native:
+
+1. **open-loop** — open-loop session arrivals across a 20+ cluster
+   fleet on the virtual clock; prompts share a system-prefix pool, so
+   prefix KV published by early sessions is a named cache hit for later
+   ones *wherever they land*.  Gates: delivery 1.0, prefix hit rate > 0,
+   p50/p99 TTFT and tokens/s reported (p99 TTFT gated via its inverse —
+   the regression checker is higher-is-better).
+2. **cross-cluster-prefix** — two clusters, sessions pinned to each via
+   local consumers; the second cluster's session hits the prefix blocks
+   the first cluster published.  Gate: remote prefix hit happens.
+3. **failover** — mid-load kill of the busiest cluster while sessions
+   are mid-decode.  Clients stall, re-express, and decode resumes on a
+   peer from the named KV checkpoint.  Gates: delivery 1.0, >= 1 resume,
+   >= 1 named-KV fetch, and every resumed stream token-identical to the
+   deterministic oracle.
+
+``--smoke`` runs a CI-sized configuration, writes
+``BENCH_serving_plane.json`` and exits nonzero if any gate regresses.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import random
+import sys
+import time
+from typing import Dict, List, Optional, Tuple
+
+sys.path.insert(0, "src")  # allow running as a script from the repo root
+
+from _bench_io import write_bench_json  # noqa: E402
+from repro.core.cluster import ComputeCluster  # noqa: E402
+from repro.core.compute_plane import SchedulerConfig  # noqa: E402
+from repro.core.overlay import LidcSystem  # noqa: E402
+from repro.core.strategy import AdaptiveStrategy  # noqa: E402
+from repro.core.validation import default_registry  # noqa: E402
+from repro.datalake.kv import prompt_digest  # noqa: E402
+from repro.serve.plane import (ServeModelSpec, ServingPlane,  # noqa: E402
+                               SessionClient, token_at)
+
+MODEL = "qwen3-1.7b"
+
+
+# ---------------------------------------------------------------------------
+# fleet + workload
+# ---------------------------------------------------------------------------
+
+def build_fleet(n: int, *, seed: int, chips: int = 4,
+                decode_step_s: float = 0.02,
+                spill_queue_depth: Optional[int] = 2
+                ) -> Tuple[LidcSystem, Dict[str, ServingPlane]]:
+    """``n`` serving clusters, every one advertising ``/lidc/serve/<model>``
+    with the ETA-aware strategy at the edge."""
+    rng = random.Random(seed)
+    sys_ = LidcSystem(strategy=AdaptiveStrategy(
+        probe_fanout=1, rotate_cold_probes=True,
+        cost_bias=1.0, eta_weight=1.0))
+    planes: Dict[str, ServingPlane] = {}
+    for i in range(n):
+        cfg = SchedulerConfig(spill_queue_depth=spill_queue_depth)
+        cluster = ComputeCluster(sys_.net, f"pod{i}", chips=chips,
+                                 lake=sys_.lake, max_queue_depth=8,
+                                 scheduler_config=cfg)
+        planes[cluster.name] = ServingPlane(
+            cluster, ServeModelSpec(model=MODEL,
+                                    decode_step_s=decode_step_s))
+        sys_.overlay.add_cluster(cluster, validators=default_registry(),
+                                 latency=0.001 + 0.002 * rng.random())
+    sys_.net.run(until=0.25)            # advertisements gossip in
+    return sys_, planes
+
+
+def make_prompts(rng: random.Random, n: int, *,
+                 system_tokens: int = 96, user_tokens: int = 24
+                 ) -> List[List[int]]:
+    """A chat-like prompt pool: a handful of shared system prefixes (the
+    realistic source of prefix-cache hits) + per-session user tails."""
+    systems = [[rng.randrange(32000) for _ in range(system_tokens)]
+               for _ in range(3)]
+    return [rng.choice(systems)
+            + [rng.randrange(32000) for _ in range(user_tokens)]
+            for _ in range(n)]
+
+
+def fleet_stats(planes: Dict[str, ServingPlane]) -> Dict[str, float]:
+    agg: Dict[str, float] = {}
+    for p in planes.values():
+        for k, v in p.stats.items():
+            agg[k] = agg.get(k, 0) + v
+    return agg
+
+
+def session_metrics(results, max_new: int) -> Dict[str, float]:
+    ttfts = sorted(r.ttft for r in results if r.ttft is not None)
+    finished = [r for r in results if r.finished]
+    delivery = len(finished) / max(len(results), 1)
+    span = (max(r.finished_at for r in finished)
+            - min(r.submitted_at for r in results)) if finished else 0.0
+    toks = sum(len(r.stream()) for r in finished)
+    pct = (lambda q: ttfts[min(len(ttfts) - 1, int(q * len(ttfts)))]
+           if ttfts else float("inf"))
+    return {
+        "delivery": round(delivery, 4),
+        "ttft_p50_s": round(pct(0.50), 4),
+        "ttft_p99_s": round(pct(0.99), 4),
+        "tokens_per_s": round(toks / span, 2) if span > 0 else 0.0,
+    }
+
+
+# ---------------------------------------------------------------------------
+# scenarios
+# ---------------------------------------------------------------------------
+
+def scenario_open_loop(n_clusters: int, n_sessions: int, seed: int
+                       ) -> Dict[str, object]:
+    t0 = time.perf_counter()
+    rng = random.Random(seed)
+    sys_, planes = build_fleet(n_clusters, seed=seed)
+    client = SessionClient(sys_.net, sys_.overlay.edge, sys_.lake)
+    prompts = make_prompts(rng, n_sessions)
+    max_new = 24
+    results = []
+    t = 0.3
+    for i, prompt in enumerate(prompts):
+        t += rng.uniform(0.005, 0.04)   # open loop: arrivals don't wait
+
+        def start(i=i, prompt=prompt):
+            results.append(client.start(f"ol-{seed}-{i}", MODEL, prompt,
+                                        max_new=max_new))
+        sys_.net.schedule(t, start)
+    sys_.net.run(until=t + 60.0)
+    sys_.net.run()
+    stats = fleet_stats(planes)
+    m = session_metrics(results, max_new)
+    served_on = {r.receipt_cluster for r in results if r.receipt_cluster}
+    return {
+        "scenario": "open-loop",
+        "clusters": n_clusters, "sessions": len(results),
+        **m,
+        "prefix_hit_rate": round(stats["prefix_hits"]
+                                 / max(stats["sessions"], 1), 4),
+        "prefix_blocks_hit": int(stats["prefix_blocks_hit"]),
+        "clusters_used": len(served_on),
+        "tokens_out": int(stats["tokens_out"]),
+        "wall_s": round(time.perf_counter() - t0, 3),
+    }
+
+
+def scenario_cross_cluster_prefix(seed: int) -> Dict[str, object]:
+    """Same system prefix, sessions pinned to *different* clusters via
+    consumers local to each gateway: the second cluster never computed
+    the prefix, yet hits the named KV blocks the first published."""
+    t0 = time.perf_counter()
+    rng = random.Random(seed)
+    sys_, planes = build_fleet(2, seed=seed, spill_queue_depth=None)
+    clusters = list(sys_.overlay.clusters.values())
+    prompt_a = make_prompts(rng, 1)[0]
+    prompt_b = prompt_a[:96] + [rng.randrange(32000) for _ in range(24)]
+    results = []
+    for i, (cluster, prompt) in enumerate(zip(clusters,
+                                              [prompt_a, prompt_b])):
+        local = SessionClient(sys_.net, cluster.node, sys_.lake,
+                              name=f"local-{cluster.name}")
+
+        def start(local=local, i=i, prompt=prompt):
+            results.append(local.start(f"xc-{seed}-{i}", MODEL, prompt,
+                                       max_new=12))
+        # strictly sequential: B starts after A finished publishing
+        sys_.net.schedule(0.3 + 3.0 * i, start)
+    sys_.net.run(until=10.0)
+    sys_.net.run()
+    per = {name: dict(p.stats) for name, p in planes.items()}
+    first = results[0].receipt_cluster if results else None
+    remote_hits = sum(p["prefix_hits"] for name, p in per.items()
+                      if name != first)
+    return {
+        "scenario": "cross-cluster-prefix",
+        "sessions": len(results),
+        "finished": sum(1 for r in results if r.finished),
+        "served_on": sorted({r.receipt_cluster for r in results
+                             if r.receipt_cluster}),
+        "remote_prefix_hits": remote_hits,
+        "remote_blocks_hit": sum(p["prefix_blocks_hit"]
+                                 for name, p in per.items() if name != first),
+        "wall_s": round(time.perf_counter() - t0, 3),
+    }
+
+
+def scenario_failover(n_clusters: int, n_sessions: int, seed: int
+                      ) -> Dict[str, object]:
+    t0 = time.perf_counter()
+    rng = random.Random(seed)
+    # slow decode so sessions are genuinely mid-stream at the kill
+    sys_, planes = build_fleet(n_clusters, seed=seed, decode_step_s=0.05)
+    client = SessionClient(sys_.net, sys_.overlay.edge, sys_.lake,
+                           stall_timeout=1.5)
+    prompts = make_prompts(rng, n_sessions)
+    max_new = 80                       # 4 s of decode per session
+    results = []
+    digests = []
+    t = 0.3
+    for i, prompt in enumerate(prompts):
+        t += rng.uniform(0.01, 0.05)
+        digests.append(prompt_digest(prompt))
+
+        def start(i=i, prompt=prompt):
+            results.append(client.start(f"fo-{seed}-{i}", MODEL, prompt,
+                                        max_new=max_new))
+        sys_.net.schedule(t, start)
+    killed: Dict[str, object] = {}
+
+    def kill():
+        busiest = max(planes, key=lambda n: planes[n].stats["sessions"])
+        if planes[busiest].stats["sessions"] > 0:
+            killed["cluster"] = busiest
+            killed["t"] = sys_.net.now
+            killed["mid_stream"] = int(
+                planes[busiest].stats["sessions"])
+            sys_.overlay.fail_cluster(busiest)
+    sys_.net.schedule(t + 1.0, kill)   # mid-load, decode still running
+    sys_.net.run(until=t + 120.0)
+    sys_.net.run()
+    stats = fleet_stats(planes)
+    m = session_metrics(results, max_new)
+    exact = sum(
+        1 for r, d in zip(results, digests)
+        if r.finished and r.stream() == [token_at(d, j)
+                                         for j in range(max_new)])
+    return {
+        "scenario": "failover",
+        "clusters": n_clusters, "sessions": len(results),
+        "killed": killed.get("cluster"),
+        "killed_at_s": round(float(killed.get("t", 0.0)), 3),
+        "sessions_mid_stream_at_kill": killed.get("mid_stream", 0),
+        "delivery": m["delivery"],
+        "resumes": int(stats["resumes"]),
+        "kv_fetches": int(stats["kv_fetches"]),
+        "resubmits": sum(r.resubmits for r in results),
+        "streams_exact": exact,
+        "wall_s": round(time.perf_counter() - t0, 3),
+    }
+
+
+# ---------------------------------------------------------------------------
+# entry point
+# ---------------------------------------------------------------------------
+
+def main(argv: Optional[list] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run; exit nonzero if gates regress")
+    ap.add_argument("--clusters", type=int, default=None)
+    ap.add_argument("--sessions", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--json", action="store_true", help="JSON-lines output")
+    args = ap.parse_args(argv)
+
+    n = args.clusters or (8 if args.smoke else 20)
+    n_sessions = args.sessions or (40 if args.smoke else 150)
+
+    results = [
+        scenario_open_loop(max(n, 20) if not args.smoke else n,
+                           n_sessions, args.seed),
+        scenario_cross_cluster_prefix(args.seed),
+        scenario_failover(max(4, n // 2), max(6, n_sessions // 5),
+                          args.seed),
+    ]
+    for r in results:
+        if args.json:
+            print(json.dumps(r))
+        else:
+            head = r.pop("scenario")
+            print(f"[{head}] " + " ".join(f"{k}={v}" for k, v in r.items()))
+            r["scenario"] = head
+
+    by = {r["scenario"]: r for r in results}
+    ol, xc, fo = (by["open-loop"], by["cross-cluster-prefix"],
+                  by["failover"])
+    if args.smoke:
+        write_bench_json(
+            "serving_plane",
+            ["delivery", "prefix_hit_rate", "tokens_per_s",
+             "ttft_p99_inv", "failover_delivery"],
+            {"delivery": float(ol["delivery"]),
+             "prefix_hit_rate": float(ol["prefix_hit_rate"]),
+             "tokens_per_s": float(ol["tokens_per_s"]),
+             "ttft_p50_s": float(ol["ttft_p50_s"]),
+             "ttft_p99_s": float(ol["ttft_p99_s"]),
+             # the regression gate is higher-is-better; gate TTFT via its
+             # inverse so a latency increase trips the gate
+             "ttft_p99_inv": round(1.0 / max(float(ol["ttft_p99_s"]),
+                                             1e-9), 6),
+             "failover_delivery": float(fo["delivery"]),
+             "failover_resumes": float(fo["resumes"]),
+             "remote_prefix_hits": float(xc["remote_prefix_hits"])},
+            "BENCH_serving_plane.json")
+
+    failures = []
+    if ol["delivery"] < 1.0:
+        failures.append(f"open-loop: delivery {ol['delivery']} < 1.0")
+    if ol["prefix_hit_rate"] <= 0.0:
+        failures.append("open-loop: no session hit the named prefix cache")
+    if ol["ttft_p99_s"] > 2.0:
+        failures.append(f"open-loop: p99 TTFT {ol['ttft_p99_s']}s > 2.0s")
+    if ol["clusters_used"] < 2:
+        failures.append("open-loop: sessions all landed on one cluster")
+    if xc["remote_prefix_hits"] < 1:
+        failures.append("cross-cluster-prefix: the second cluster did not "
+                        "hit the first cluster's named KV blocks")
+    if fo["delivery"] < 1.0:
+        failures.append(f"failover: delivery {fo['delivery']} < 1.0 "
+                        f"through the cluster kill")
+    if fo["resumes"] < 1 or fo["kv_fetches"] < 1:
+        failures.append("failover: no decode resumed from a named KV "
+                        "checkpoint")
+    if fo["streams_exact"] != fo["sessions"]:
+        failures.append(f"failover: only {fo['streams_exact']}/"
+                        f"{fo['sessions']} streams token-identical to the "
+                        f"oracle")
+
+    if failures:
+        print("\nGATE FAILURES:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print(f"\nall serving-plane gates hold "
+          f"({'smoke' if args.smoke else 'full'} config: "
+          f"{n} clusters, {n_sessions} sessions, seed {args.seed})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -23,7 +23,8 @@ from .compute_plane import ClusterScheduler, SchedulerConfig
 from .forwarder import Forwarder, Network
 from .jobs import Job, JobSpec
 from .matchmaker import Matchmaker, ServiceEndpoint
-from .names import COMPUTE_PREFIX, DATA_PREFIX, STATUS_PREFIX, Name
+from .names import (COMPUTE_PREFIX, DATA_PREFIX, SERVE_PREFIX, STATUS_PREFIX,
+                    Name)
 
 __all__ = ["ComputeCluster", "ExecResult", "ExecPlan"]
 
@@ -103,14 +104,18 @@ class ComputeCluster:
         archs: set = set()
         shapes: set = set()
         apps: set = set()
+        serve_families: set = set()
         for e in self.endpoints:
             apps.add(e.app)
             archs.update(e.archs)
             shapes.update(e.shapes)
+            if e.app == "serve":
+                serve_families.update(e.families)
         return {
             "apps": tuple(sorted(apps)),
             "archs": tuple(sorted(archs)),
             "shapes": tuple(sorted(shapes)),
+            "serve_families": tuple(sorted(serve_families)),
             "chips": self.chips,
             "hbm_gb_total": self.chips * self.hbm_gb_per_chip,
             "blast_dbs": ("human", "mouse"),
@@ -182,6 +187,19 @@ class ComputeCluster:
                     if str(refined) not in seen:
                         seen.add(str(refined))
                         prefixes.append(refined)
+                # inference sessions route under the model-rooted serve
+                # namespace; announce it per served model so LPM steers a
+                # session to any cluster holding the weights
+                if e.app == "serve":
+                    base = Name.parse(SERVE_PREFIX)
+                    if str(base) not in seen:
+                        seen.add(str(base))
+                        prefixes.append(base)
+                    for arch in e.archs:
+                        model = base.append(arch)
+                        if str(model) not in seen:
+                            seen.add(str(model))
+                            prefixes.append(model)
         if self.lake is not None:
             prefixes.append(Name.parse(DATA_PREFIX))
         return prefixes

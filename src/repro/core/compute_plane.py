@@ -70,6 +70,12 @@ class SchedulerConfig:
     aging_rate: float = 0.05         # effective-priority points per waited s
     starvation_age: float = 10.0     # head waiting longer blocks backfill
     default_run_estimate: float = 1.0  # ETA prior for never-seen work
+    # structural run-time predictor consulted *before* the learned
+    # CompletionModel: apps whose duration is computable from the job
+    # fields alone (a serving session's prefill + max_new decode steps)
+    # plug one in, so ETAs are exact from the very first request instead
+    # of converging after observations.  Return None to fall through.
+    run_estimator: Optional[Callable[[JobSpec], Optional[float]]] = None
     # -- decentralized spill (work shedding via the gateway) ----------------
     spill_queue_depth: Optional[int] = None   # queue deeper than this spills
     spill_eta: Optional[float] = None         # predicted wait above this spills
@@ -158,6 +164,10 @@ class ClusterScheduler:
         prediction is per-spec — the requested chips are part of the job
         key, and observations are made under the grants those requests
         actually received."""
+        if self.cfg.run_estimator is not None:
+            est = self.cfg.run_estimator(spec)
+            if est is not None and est > 0:
+                return float(est)
         pred = self.model.predict({"app": spec.app, **spec.fields},
                                   face_id=LOCAL_FACE)
         if pred is not None and pred > 0:

@@ -44,8 +44,8 @@ from .forwarder import Consumer, Nack
 from .jobs import (SPILL_FIELD, Job, JobSpec, JobState, decode_spill_path,
                    encode_spill_path, result_name_for)
 from .matchmaker import CapacityError, MatchError
-from .names import (COMPUTE_PREFIX, STATUS_PREFIX, Name, canonical_job_name,
-                    job_fields_of)
+from .names import (COMPUTE_PREFIX, SERVE_PREFIX, STATUS_PREFIX, Name,
+                    canonical_job_name, job_fields_of, serve_fields_of)
 from .packets import Data, Interest, sign_data
 from .validation import ValidationError, ValidatorRegistry, default_registry
 
@@ -71,6 +71,9 @@ class Gateway:
         self._spill_consumer: Optional[Consumer] = None
         node = cluster.node
         node.attach_producer(Name.parse(COMPUTE_PREFIX), self._on_compute)
+        # inference sessions are ordinary compute Interests under the
+        # model-rooted serve namespace; same parse→validate→admit pipeline
+        node.attach_producer(Name.parse(SERVE_PREFIX), self._on_compute)
         node.attach_producer(Name.parse(STATUS_PREFIX), self._on_status)
         if cluster.lake is not None:
             cluster.lake.attach(node)
@@ -83,6 +86,8 @@ class Gateway:
     def _on_compute(self, interest: Interest, publish: Callable[[Data], None],
                     now: float):
         fields = job_fields_of(interest.name)
+        if fields is None:
+            fields = serve_fields_of(interest.name)
         if fields is None:
             return self._reject(interest, reasons.MALFORMED_JOB_NAME)
         app = fields.pop("app")

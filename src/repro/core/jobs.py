@@ -19,6 +19,7 @@ from .names import DATA_PREFIX, Name, canonical_job_name
 
 __all__ = ["JobState", "JobSpec", "Job", "result_name_for",
            "INPUTS_FIELD", "PRIORITY_FIELD", "SPILL_FIELD",
+           "SESSION_FIELD", "PROMPT_FIELD",
            "encode_input_names", "decode_input_names",
            "encode_spill_path", "decode_spill_path"]
 
@@ -32,6 +33,15 @@ INPUTS_FIELD = "in"
 # different *request*, but the compute-plane scheduler is what interprets
 # it (see repro.core.compute_plane).
 PRIORITY_FIELD = "prio"
+
+# Serving-plane session fields.  A session Interest carries its id and a
+# *named* prompt — the digest under which the client published the prompt
+# tokens to the lake (plus ptoks=, the prompt length, so gateways can
+# estimate prefill cost without fetching the prompt).  Both are part of
+# the canonical name: distinct sessions are distinct requests, while a
+# retransmitted session Interest dedupes onto the running session.
+SESSION_FIELD = "sid"
+PROMPT_FIELD = "p"
 
 # Hop-carried spill path: when a saturated gateway sheds a compute
 # Interest upstream it appends its own cluster name to this field

@@ -42,6 +42,12 @@ class ServiceEndpoint:
     app: str                          # "train" | "serve" | "blast" | ...
     archs: Tuple[str, ...] = ()      # empty = any
     shapes: Tuple[str, ...] = ()     # empty = any
+    # model families this endpoint's runtime actually decodes ("dense",
+    # "vlm", ...).  Serving endpoints set this from their engine's
+    # supported set; the cluster aggregates it into the advertised
+    # capability record, so a family the engine would die on is rejected
+    # at validation — not at runtime (see repro.serve.engine).
+    families: Tuple[str, ...] = ()   # empty = any
     min_chips: int = 1
     max_chips: int = 1 << 20
     executor: Optional[Callable] = None  # (job, cluster) -> (result, duration)

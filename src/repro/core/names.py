@@ -30,10 +30,13 @@ __all__ = [
     "encode_job",
     "parse_job",
     "canonical_job_name",
+    "serve_session_name",
+    "serve_fields_of",
     "COMPUTE_PREFIX",
     "DATA_PREFIX",
     "STATUS_PREFIX",
     "CAPABILITY_PREFIX",
+    "SERVE_PREFIX",
 ]
 
 # Well-known prefixes, mirroring the paper's /ndn/k8s/{compute,data,status}.
@@ -43,6 +46,10 @@ STATUS_PREFIX = "/lidc/status"
 # Capability announcements (cluster -> overlay); the analog of a cluster
 # exposing a named K8s service endpoint to the NDN network.
 CAPABILITY_PREFIX = "/lidc/cap"
+# Inference sessions: /lidc/serve/<model>/<k=v&...> — a serving-plane
+# request is an ordinary compute Interest under a model-rooted prefix, so
+# LPM places a session on *any* cluster advertising that model.
+SERVE_PREFIX = "/lidc/serve"
 
 _COMPONENT_RE = re.compile(r"^[A-Za-z0-9_.,=&\-+%:]+$")
 
@@ -207,6 +214,46 @@ def canonical_job_name(fields: Mapping[str, Any], prefix: str = COMPUTE_PREFIX) 
     if f:
         name = name.append(encode_job(f, canonical=True))
     return name
+
+
+def serve_session_name(model: str, fields: Mapping[str, Any]) -> Name:
+    """Build the canonical session name for an inference request::
+
+        /lidc/serve/<model>/<canonical k=v tail>
+
+    e.g. ``/lidc/serve/qwen3-1.7b/max_new=32&p=ab12&ptoks=160&sid=s-7``.
+    The model is the routing unit: clusters advertise
+    ``/lidc/serve/<model>`` per served model, so the session lands on any
+    cluster with the weights — location independence for inference.  The
+    key-value tail (session id, named prompt, decode budget, priority) is
+    canonically ordered like every other job name.
+    """
+    f = {k: v for k, v in fields.items() if k not in ("app", "arch")}
+    name = Name.parse(SERVE_PREFIX).append(str(model))
+    if f:
+        name = name.append(encode_job(f, canonical=True))
+    return name
+
+
+def serve_fields_of(name: Name) -> Optional[Dict[str, str]]:
+    """Invert :func:`serve_session_name` into gateway job fields
+    (``app="serve"``, ``arch=<model>`` + the k=v tail); None if the name
+    is not a serve-session name."""
+    base = Name.parse(SERVE_PREFIX)
+    if not base.is_prefix_of(name) or len(name) <= len(base):
+        return None
+    rest = list(name.components[len(base):])
+    fields: Dict[str, str] = {}
+    if rest and "=" in rest[-1]:
+        try:
+            fields.update(parse_job(rest.pop()))
+        except ValueError:
+            return None         # malformed tail -> gateway rejects, not crashes
+    if len(rest) != 1:
+        return None
+    fields["app"] = "serve"
+    fields["arch"] = rest[0]
+    return fields
 
 
 def job_fields_of(name: Name) -> Optional[Dict[str, str]]:

@@ -91,6 +91,17 @@ def validate_train(fields, caps) -> None:
 
 def validate_serve(fields, caps) -> None:
     _validate_model_job(fields, caps, kind="serve")
+    # serving endpoints advertise the model families their engines decode;
+    # an unsupported family is rejected here with a NACK reason instead of
+    # dying inside the engine (UnsupportedFamilyError) after placement
+    family = fields.get("family")
+    known = caps.get("serve_families", ())
+    if family is not None and known and family not in known:
+        raise ValidationError(
+            f"cluster serves families {tuple(known)}, not {family!r}")
+    max_new = fields.get("max_new")
+    if max_new is not None and int(max_new) < 0:
+        raise ValidationError(f"max_new must be >= 0, got {max_new}")
 
 
 def validate_compress(fields, caps) -> None:

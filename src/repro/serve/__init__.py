@@ -1,0 +1,12 @@
+"""LIDC inference serving.
+
+``repro.serve.plane`` (the network-facing serving plane) is importable
+without JAX — benchmarks run it on the virtual clock.  The JAX
+continuous-batching engine lives in ``repro.serve.engine`` and is
+imported lazily by its users; importing this package must not pull it
+in.
+"""
+
+from .plane import ServeModelSpec, ServingPlane, SessionClient, token_at
+
+__all__ = ["ServeModelSpec", "ServingPlane", "SessionClient", "token_at"]

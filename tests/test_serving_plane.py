@@ -1,0 +1,230 @@
+"""The named inference serving plane: naming, gateway, KV cache, failover."""
+
+import pytest
+
+from repro.core.cluster import ComputeCluster
+from repro.core.compute_plane import SchedulerConfig
+from repro.core.jobs import JobSpec
+from repro.core.names import (SERVE_PREFIX, Name, serve_fields_of,
+                              serve_session_name)
+from repro.core.overlay import LidcSystem
+from repro.core.strategy import AdaptiveStrategy
+from repro.core.validation import ValidationError, default_registry
+from repro.datalake import DataLake
+from repro.datalake.kv import (block_digests, chunk_name, kv_block_name,
+                               longest_cached_prefix, prompt_digest,
+                               publish_prefix_blocks, publish_prompt,
+                               session_ckpt_name)
+from repro.serve.plane import (ServeModelSpec, ServingPlane, SessionClient,
+                               token_at)
+
+MODEL = "qwen3-1.7b"
+
+
+def build(n=3, *, decode_step_s=0.02, spill_queue_depth=2, chips=4):
+    sys_ = LidcSystem(strategy=AdaptiveStrategy(
+        probe_fanout=1, rotate_cold_probes=True, cost_bias=1.0,
+        eta_weight=1.0))
+    planes = {}
+    for i in range(n):
+        cfg = SchedulerConfig(spill_queue_depth=spill_queue_depth)
+        cl = ComputeCluster(sys_.net, f"pod{i}", chips=chips,
+                            lake=sys_.lake, max_queue_depth=8,
+                            scheduler_config=cfg)
+        planes[cl.name] = ServingPlane(
+            cl, ServeModelSpec(model=MODEL, decode_step_s=decode_step_s))
+        sys_.overlay.add_cluster(cl, validators=default_registry(),
+                                 latency=0.002)
+    sys_.net.run(until=0.25)
+    return sys_, planes
+
+
+# ---------------------------------------------------------------- naming
+def test_serve_session_name_roundtrip():
+    fields = {"sid": "s-1", "p": "ab12cd34", "ptoks": 100, "max_new": 16,
+              "family": "dense"}
+    name = serve_session_name(MODEL, fields)
+    assert str(name).startswith(f"{SERVE_PREFIX}/{MODEL}/")
+    back = serve_fields_of(name)
+    assert back is not None
+    assert back["app"] == "serve"
+    assert back["arch"] == MODEL
+    assert back["sid"] == "s-1" and back["p"] == "ab12cd34"
+    assert back["ptoks"] == "100" and back["max_new"] == "16"
+
+
+def test_serve_fields_of_rejects_malformed():
+    assert serve_fields_of(Name.parse("/lidc/compute/train/m")) is None
+    assert serve_fields_of(Name.parse(SERVE_PREFIX)) is None
+    # a malformed k=v tail must reject, not raise (the gateway answers a
+    # Nack on None)
+    bad = Name.parse(SERVE_PREFIX).append(MODEL, "sid=s-1&broken")
+    assert serve_fields_of(bad) is None
+    # extra positional components are not a session name
+    assert serve_fields_of(
+        Name.parse(SERVE_PREFIX).append(MODEL, "x", "sid=1")) is None
+
+
+def test_canonical_ordering_dedupes_sessions():
+    a = serve_session_name(MODEL, {"sid": "s", "p": "d", "ptoks": 2})
+    b = serve_session_name(MODEL, {"ptoks": 2, "p": "d", "sid": "s"})
+    assert a == b
+
+
+# ------------------------------------------------------------- kv naming
+def test_block_digests_chain_commits_to_left_context():
+    toks = list(range(128))
+    d = block_digests(MODEL, toks, 32)
+    assert len(d) == 4
+    # shared prefix -> shared leading digests, divergence kills the rest
+    other = toks[:64] + [9999] + toks[65:]
+    d2 = block_digests(MODEL, other, 32)
+    assert d2[:2] == d[:2] and d2[2:] != d[2:]
+    # a different model shares nothing
+    assert block_digests("other-model", toks, 32)[0] != d[0]
+    # partial trailing block gets no digest
+    assert len(block_digests(MODEL, toks[:100], 32)) == 3
+
+
+def test_longest_cached_prefix_walks_longest_first():
+    lake = DataLake()
+    toks = list(range(128))
+    publish_prefix_blocks(lake, MODEL, toks[:64], block_tokens=32,
+                          kv_bytes_per_token=10.0)
+    cached_toks, blocks = longest_cached_prefix(lake, MODEL, toks,
+                                               block_tokens=32)
+    assert (cached_toks, blocks) == (64, 2)
+    assert longest_cached_prefix(lake, MODEL, [5, 6, 7],
+                                 block_tokens=32) == (0, 0)
+    # republish dedupes: nothing new for an already-named prefix
+    assert publish_prefix_blocks(lake, MODEL, toks[:64],
+                                 block_tokens=32) == 0
+    assert lake.has(kv_block_name(MODEL, block_digests(MODEL, toks, 32)[0]))
+
+
+def test_prompt_publication_dedupes():
+    lake = DataLake()
+    d1 = publish_prompt(lake, [1, 2, 3])
+    puts = lake.puts
+    d2 = publish_prompt(lake, [1, 2, 3])
+    assert d1 == d2 and lake.puts == puts
+
+
+# ----------------------------------------------------- capability gossip
+def test_cluster_advertises_serve_families_and_prefixes():
+    sys_, planes = build(1)
+    cl = next(iter(sys_.overlay.clusters.values()))
+    caps = cl.capabilities()
+    assert caps["serve_families"] == ("dense",)
+    prefixes = {str(p) for p in cl.advertised_prefixes()}
+    assert SERVE_PREFIX in prefixes
+    assert f"{SERVE_PREFIX}/{MODEL}" in prefixes
+    # draining withdraws the serve prefixes with the compute ones
+    cl.advertise(chips=0)
+    prefixes = {str(p) for p in cl.advertised_prefixes()}
+    assert SERVE_PREFIX not in prefixes
+
+
+def test_validate_serve_rejects_unsupported_family():
+    reg = default_registry()
+    caps = {"archs": (MODEL,), "shapes": (), "chips": 4,
+            "serve_families": ("dense",)}
+    reg.validate("serve", {"arch": MODEL, "family": "dense"}, caps)
+    with pytest.raises(ValidationError, match="families"):
+        reg.validate("serve", {"arch": MODEL, "family": "moe"}, caps)
+    with pytest.raises(ValidationError, match="max_new"):
+        reg.validate("serve", {"arch": MODEL, "max_new": -1}, caps)
+
+
+# ------------------------------------------------------------- sessions
+def test_session_streams_deterministic_tokens():
+    sys_, planes = build(3)
+    client = SessionClient(sys_.net, sys_.overlay.edge, sys_.lake)
+    prompt = list(range(70))
+    r = client.start("t-1", MODEL, prompt, max_new=20)
+    sys_.net.run()
+    assert r.finished and r.ttft is not None and r.ttft > 0
+    pd = prompt_digest(prompt)
+    assert r.stream() == [token_at(pd, i) for i in range(20)]
+    # the chunk stream and the resume checkpoint are named in the lake
+    assert sys_.lake.has(chunk_name("t-1", 0))
+    assert sys_.lake.get_json(session_ckpt_name("t-1"))["tokens_done"] == 20
+
+
+def test_session_eta_is_structural():
+    sys_, planes = build(1)
+    cl = next(iter(sys_.overlay.clusters.values()))
+    spec = JobSpec(app="serve", fields={"arch": MODEL, "ptoks": 8000,
+                                        "max_new": 100})
+    # never-observed work, yet the estimate is exact: prefill + decode
+    est = cl.scheduler.run_estimate(spec)
+    assert est == pytest.approx(8000 / 8000.0 + 100 * 0.02)
+    # non-serve work falls through to the learned model / prior
+    assert cl.scheduler.run_estimate(
+        JobSpec(app="train", fields={})) == cl.scheduler.cfg.default_run_estimate
+
+
+def test_second_session_hits_named_prefix_cache():
+    sys_, planes = build(3)
+    client = SessionClient(sys_.net, sys_.overlay.edge, sys_.lake)
+    system = list(range(96))
+    client.start("p-1", MODEL, system + [1000, 1001], max_new=8)
+    sys_.net.run()
+    r2 = client.start("p-2", MODEL, system + [2000, 2001], max_new=8)
+    sys_.net.run()
+    assert r2.finished
+    stats = {k: sum(p.stats[k] for p in planes.values())
+             for k in ("prefix_hits", "prefix_blocks_hit")}
+    assert stats["prefix_hits"] >= 1
+    assert stats["prefix_blocks_hit"] >= 3        # 96 tokens / 32 per block
+
+
+def test_max_new_zero_session_completes_via_receipt():
+    sys_, planes = build(2)
+    client = SessionClient(sys_.net, sys_.overlay.edge, sys_.lake)
+    r = client.start("z-1", MODEL, list(range(10)), max_new=0)
+    sys_.net.run()
+    assert r.finished and r.stream() == [] and r.ttft is None
+
+
+def test_unsupported_family_session_rejected_in_network():
+    sys_, planes = build(2)
+    client = SessionClient(sys_.net, sys_.overlay.edge, sys_.lake)
+    r = client.start("bad-1", MODEL, list(range(10)), max_new=4,
+                     family="moe")
+    sys_.net.run()
+    assert not r.finished
+    assert r.failed is not None
+
+
+def test_cluster_kill_resumes_from_named_kv_elsewhere():
+    sys_, planes = build(3, decode_step_s=0.05)
+    client = SessionClient(sys_.net, sys_.overlay.edge, sys_.lake,
+                           stall_timeout=1.5)
+    prompt = list(range(64))
+    r = client.start("k-1", MODEL, prompt, max_new=80)   # 4 s decode
+    killed = {}
+
+    def kill():
+        for name, p in planes.items():
+            if p.stats["sessions"] > 0:
+                killed["name"] = name
+                sys_.overlay.fail_cluster(name)
+                return
+    sys_.net.schedule(1.5, kill)
+    sys_.net.run(until=60.0)
+    sys_.net.run()
+    assert killed, "no cluster was serving the session"
+    assert r.finished and r.resubmits >= 1
+    pd = prompt_digest(prompt)
+    assert r.stream() == [token_at(pd, i) for i in range(80)]
+    survivor_stats = [p.stats for n, p in planes.items()
+                      if n != killed["name"]]
+    assert sum(s["resumes"] for s in survivor_stats) >= 1
+    assert sum(s["kv_fetches"] for s in survivor_stats) >= 1
+    # the resuming cluster skipped the already-streamed chunks: total
+    # chunk publications stay close to the unbroken count (overlap of at
+    # most the in-flight chunk, not a from-scratch replay)
+    total_chunks = sum(p.stats["chunks"] for p in planes.values())
+    unbroken = 1 + (80 - 1 + 7) // 8            # chunk0 + ceil(79/8)
+    assert total_chunks <= unbroken + 2
