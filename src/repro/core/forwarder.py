@@ -72,6 +72,121 @@ class Nack:
 # Virtual-clock event network
 # ---------------------------------------------------------------------------
 
+# sentinel: "no argument" for Network.schedule — lets hot callers pass the
+# callback argument through the event tuple instead of closing over it in a
+# fresh lambda per packet
+_NO_ARG = object()
+
+# event tuples are (time, seq, daemon, fn, arg); seq is unique per network,
+# so comparisons never reach fn/arg and global (time, seq) order is total —
+# both engines below pop in exactly this order, which is what the seeded
+# equivalence tests pin down.
+_Event = Tuple[float, int, bool, Callable[..., None], Any]
+
+
+class _HeapQueue:
+    """The original engine: one global binary heap of events."""
+
+    __slots__ = ("_heap",)
+
+    def __init__(self) -> None:
+        self._heap: List[_Event] = []
+
+    def push(self, ev: _Event) -> None:
+        heapq.heappush(self._heap, ev)
+
+    def peek(self) -> Optional[_Event]:
+        return self._heap[0] if self._heap else None
+
+    def pop(self) -> _Event:
+        return heapq.heappop(self._heap)
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+
+class _CalendarQueue:
+    """Bucketed (calendar-queue) event scheduler.
+
+    The simulator's event mix is bimodal: dense sub-millisecond data-plane
+    events (packet deliveries, batch flushes) plus sparse far-future
+    control-plane timers (heartbeats seconds out, PIT/route expiries).  A
+    single global heap pays O(log n) per operation with n inflated by all
+    the far-future timers; the calendar queue keys each event into a
+    fixed-width time bucket (a plain dict of append-only lists), keeps a
+    small heap of occupied bucket indices, and heapifies only the
+    *current* bucket as it comes up — so ordering work is confined to the
+    handful of events that share the active time window, and a far-future
+    timer costs one dict append until its bucket's turn.
+
+    Ordering is identical to the heap engine: buckets are drained in index
+    order and each bucket is a min-heap over the full (time, seq) event
+    tuple, so pops come out in global (time, seq) order.  A push whose
+    bucket index is at or before the current bucket's (possible when a
+    ``run(until=...)`` horizon parked the clock short of the head event)
+    goes straight into the current heap — events are never scheduled in
+    the past, so it belongs in the active window.
+    """
+
+    __slots__ = ("width", "_buckets", "_occupied", "_cur", "_cur_idx",
+                 "_len")
+
+    def __init__(self, width: float = 0.005) -> None:
+        self.width = width
+        self._buckets: Dict[int, List[_Event]] = {}
+        self._occupied: List[int] = []      # min-heap of future bucket indices
+        self._cur: List[_Event] = []        # current bucket, a min-heap
+        self._cur_idx = -1
+        self._len = 0
+
+    def push(self, ev: _Event) -> None:
+        self._len += 1
+        idx = int(ev[0] / self.width)
+        if idx <= self._cur_idx:
+            heapq.heappush(self._cur, ev)
+            return
+        bucket = self._buckets.get(idx)
+        if bucket is None:
+            self._buckets[idx] = [ev]
+            heapq.heappush(self._occupied, idx)
+        else:
+            bucket.append(ev)
+
+    def _advance(self) -> None:
+        """Move to the next occupied bucket; heapified once on entry."""
+        while self._occupied:
+            idx = heapq.heappop(self._occupied)
+            bucket = self._buckets.pop(idx)
+            if bucket:
+                heapq.heapify(bucket)
+                self._cur = bucket
+                self._cur_idx = idx
+                return
+        self._cur = []
+        self._cur_idx = -1
+
+    def peek(self) -> Optional[_Event]:
+        if not self._cur:
+            if not self._occupied:
+                return None
+            self._advance()
+            if not self._cur:
+                return None
+        return self._cur[0]
+
+    def pop(self) -> _Event:
+        if not self._cur and self.peek() is None:
+            raise IndexError("pop from empty calendar queue")
+        self._len -= 1
+        ev = heapq.heappop(self._cur)
+        if not self._cur and not self._occupied:
+            self._cur_idx = -1   # fully drained: reset the active window
+        return ev
+
+    def __len__(self) -> int:
+        return self._len
+
+
 class Network:
     """Deterministic discrete-event scheduler shared by all nodes.
 
@@ -83,21 +198,42 @@ class Network:
     daemon events remain; ``run(until=T)`` drives the clock through
     daemon events up to T, which is how tests and benchmarks let the
     routing protocol converge while the data plane is otherwise idle.
+
+    ``engine`` selects the event queue: ``"calendar"`` (default) is the
+    bucketed scheduler tuned for the bimodal event mix, ``"heap"`` is the
+    original global binary heap.  Both pop events in identical (time, seq)
+    order — seeded scenarios produce bit-identical traces on either
+    (tests/test_engine.py proves it), so the choice is purely about speed.
+
+    Setting ``trace`` to a list makes :meth:`run` append one ``(time,
+    seq)`` pair per executed event — the hook the equivalence tests and
+    ``benchmarks/engine_speed.py`` use to prove identical event order.
     """
 
-    def __init__(self) -> None:
-        self._queue: List[Tuple[float, int, bool, Callable[[], None]]] = []
+    def __init__(self, engine: str = "calendar",
+                 bucket_width: float = 0.005) -> None:
+        if engine == "calendar":
+            self._queue = _CalendarQueue(width=bucket_width)
+        elif engine == "heap":
+            self._queue = _HeapQueue()
+        else:
+            raise ValueError(f"unknown engine {engine!r}; "
+                             "want 'calendar' or 'heap'")
+        self.engine = engine
         self._seq = itertools.count()
         self._live = 0
         self.now = 0.0
         self.events_processed = 0
+        self.trace: Optional[List[Tuple[float, int]]] = None
 
-    def schedule(self, delay: float, fn: Callable[[], None],
-                 daemon: bool = False) -> None:
+    def schedule(self, delay: float, fn: Callable[..., None],
+                 daemon: bool = False, arg: Any = _NO_ARG) -> None:
+        """Schedule ``fn`` after ``delay``; with ``arg``, the event calls
+        ``fn(arg)`` — hot paths use this to avoid a closure per packet."""
         if not daemon:
             self._live += 1
-        heapq.heappush(self._queue,
-                       (self.now + max(delay, 0.0), next(self._seq), daemon, fn))
+        t = self.now + delay if delay > 0.0 else self.now
+        self._queue.push((t, next(self._seq), daemon, fn, arg))
 
     def run(self, until: Optional[float] = None, max_events: int = 1_000_000) -> None:
         """Process events in time order until quiescence (or `until`).
@@ -108,24 +244,40 @@ class Network:
         pull the clock forward.  With ``until``, the clock always ends at
         the horizon so back-to-back windowed runs make steady progress.
         """
+        queue = self._queue
+        trace = self.trace
         n = 0
-        while self._queue and n < max_events:
-            t, _, daemon, fn = self._queue[0]
+        while n < max_events:
+            head = queue.peek()
+            if head is None:
+                break
+            t = head[0]
             if until is not None and t > until:
                 break
             if until is None and self._live == 0:
                 break
-            heapq.heappop(self._queue)
-            if not daemon:
+            queue.pop()
+            if not head[2]:
                 self._live -= 1
-            self.now = max(self.now, t)
-            fn()
+            if t > self.now:
+                self.now = t
+            if trace is not None:
+                trace.append((t, head[1]))
+            fn, arg = head[3], head[4]
+            if arg is _NO_ARG:
+                fn()
+            else:
+                fn(arg)
             n += 1
         self.events_processed += n
-        if until is not None and (not self._queue or self._queue[0][0] > until):
-            # advance to the horizon only when every event inside it ran —
-            # a max_events exhaustion must not warp queued events' clocks
-            self.now = max(self.now, until)
+        if until is not None:
+            head = queue.peek()
+            if head is None or head[0] > until:
+                # advance to the horizon only when every event inside it
+                # ran — a max_events exhaustion must not warp queued
+                # events' clocks
+                if until > self.now:
+                    self.now = until
 
     def idle(self) -> bool:
         return self._live == 0
@@ -139,11 +291,23 @@ _WIRE_HEADER = 48   # nominal per-packet header bytes for the wire model
 
 
 def wire_size(packet: Any) -> int:
-    """Approximate on-the-wire size: header + name + (Data) content."""
+    """Approximate on-the-wire size: header + name + (Data) content.
+
+    Cached on the packet (name and content are immutable, so the size
+    can't change); a multi-hop path otherwise re-stringifies the name at
+    every bandwidth-modelled face it crosses.
+    """
+    size = getattr(packet, "_wire", None)
+    if size is not None:
+        return size
     size = _WIRE_HEADER + len(str(packet.name))
     content = getattr(packet, "content", None)
     if content is not None:
         size += len(content)
+    try:
+        object.__setattr__(packet, "_wire", size)
+    except AttributeError:
+        pass  # __slots__-style packets: just recompute next time
     return size
 
 
@@ -214,8 +378,8 @@ class Face:
             start = max(now, self._busy_until)
             self._busy_until = start + wire_size(packet) / self.bandwidth
             delay = (self._busy_until - now) + self.latency + self.jitter
-        recv = self._peer_recv
-        self._net.schedule(delay, lambda: recv(packet), daemon=daemon)
+        # arg-based delivery: no per-packet closure allocation
+        self._net.schedule(delay, self._peer_recv, daemon=daemon, arg=packet)
 
 
 def link(net: Network, a: "Forwarder", b: "Forwarder", latency: float = 0.001
@@ -263,8 +427,12 @@ class Forwarder:
         self._pit_tick_at: Optional[float] = None
         self.faces: Dict[int, Face] = {}
         self._next_face = itertools.count(1)
-        # local producers: prefix -> handler
+        # local producers: prefix -> handler; _producer_lens caches the
+        # distinct registered prefix lengths (descending) so the per-packet
+        # LPM probes a couple of dict keys instead of materializing every
+        # prefix Name of every Interest
         self._producers: Dict[Tuple[str, ...], ProducerHandler] = {}
+        self._producer_lens: List[int] = []
         self.stats = {"in_interest": 0, "in_data": 0, "in_nack": 0,
                       "cs_hit": 0, "dropped": 0, "agg": 0, "retx": 0}
 
@@ -277,6 +445,10 @@ class Forwarder:
     def attach_producer(self, prefix: Name, handler: ProducerHandler) -> None:
         """Local application serving a prefix (gateway, data lake, ...)."""
         self._producers[prefix.components] = handler
+        n = len(prefix.components)
+        if n not in self._producer_lens:
+            self._producer_lens.append(n)
+            self._producer_lens.sort(reverse=True)
 
     def register_route(self, prefix: Name, face: Face, cost: float = 1.0) -> None:
         self.fib.register(prefix, face.face_id, cost)
@@ -311,6 +483,8 @@ class Forwarder:
         earliest PIT expiry, so a quiescent forwarder still records
         timeout outcomes instead of starving the strategy of loss
         feedback until the next Interest happens by."""
+        if not self.pit.expires_by(now):
+            return  # O(1) heap-top peek; nothing due — the common case
         for dead in self.pit.expire(now):
             for face_id, sent in dead.sent_at.items():
                 if face_id not in dead.resolved:
@@ -352,9 +526,14 @@ class Forwarder:
         #    producers — a saturated gateway spilling work upstream must
         #    not be handed the work right back; forwarding clears the
         #    flag, so the producers of every *other* node still answer.
-        if not interest.skip_local:
-            for prefix in interest.name.prefixes():
-                handler = self._producers.get(prefix.components)
+        if not interest.skip_local and self._producer_lens:
+            comps = interest.name.components
+            n = len(comps)
+            producers = self._producers
+            for plen in self._producer_lens:   # descending => longest match
+                if plen > n:
+                    continue
+                handler = producers.get(comps[:plen])
                 if handler is not None:
                     self._dispatch_producer(handler, in_face, interest)
                     return
@@ -614,8 +793,11 @@ class Consumer:
                               "retries": retries, "interest": interest,
                               "rto": rto, "sent": self.net.now,
                               "noroute_retries": 0}
-        self.net.schedule(0.0, lambda: self.node.receive(self.face.face_id, interest))
+        self.net.schedule(0.0, self._inject, arg=interest)
         self._arm_timeout(interest)
+
+    def _inject(self, interest: Interest) -> None:
+        self.node.receive(self.face.face_id, interest)
 
     def get(self, name: Name, retries: int = 3, **kw) -> Dict[str, Any]:
         """Express and run the network to quiescence; returns a result box."""

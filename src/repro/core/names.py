@@ -22,6 +22,7 @@ This module implements:
 from __future__ import annotations
 
 import re
+import sys
 from dataclasses import dataclass, field
 from typing import Any, Dict, Iterable, Mapping, Optional, Tuple
 
@@ -53,6 +54,14 @@ SERVE_PREFIX = "/lidc/serve"
 
 _COMPONENT_RE = re.compile(r"^[A-Za-z0-9_.,=&\-+%:]+$")
 
+# Parsed-name memo: routing agents, codecs and benchmarks re-parse the same
+# handful of uri strings per packet / per advertisement, so cache the Name
+# (components interned so equal names share component strings process-wide).
+# Bounded clear-on-full keeps pathological unique-uri workloads from growing
+# it without bound; Names are immutable, so sharing instances is safe.
+_PARSE_CACHE: Dict[str, "Name"] = {}
+_PARSE_CACHE_MAX = 65536
+
 
 @dataclass(frozen=True)
 class Name:
@@ -79,14 +88,22 @@ class Name:
     # -- construction ------------------------------------------------------
     @staticmethod
     def parse(uri: str) -> "Name":
+        cached = _PARSE_CACHE.get(uri)
+        if cached is not None:
+            return cached
+        raw = uri
         uri = uri.strip()
         if not uri.startswith("/"):
             raise ValueError(f"name must start with '/': {uri!r}")
-        parts = tuple(p for p in uri.split("/") if p != "")
+        parts = tuple(sys.intern(p) for p in uri.split("/") if p != "")
         for p in parts:
             if not _COMPONENT_RE.match(p):
                 raise ValueError(f"illegal name component {p!r} in {uri!r}")
-        return Name(parts)
+        name = Name(parts)
+        if len(_PARSE_CACHE) >= _PARSE_CACHE_MAX:
+            _PARSE_CACHE.clear()
+        _PARSE_CACHE[raw] = name
+        return name
 
     @staticmethod
     def of(*components: str) -> "Name":
@@ -145,6 +162,15 @@ class Name:
 # Semantic job codec (the `mem=4&cpu=6&app=BLAST` convention, paper §III.C).
 # ---------------------------------------------------------------------------
 
+_JOB_KEY_RE = re.compile(r"^[A-Za-z0-9_.\-]+$")
+
+# component-string -> parsed field dict.  Strategies and gateways invert the
+# same job component on every hop of every packet; parsing it once and
+# handing out shallow copies keeps the codec off the per-hop profile.
+_JOB_CACHE: Dict[str, Dict[str, str]] = {}
+_JOB_CACHE_MAX = 16384
+
+
 def _encode_value(v: Any) -> str:
     if isinstance(v, bool):
         return "1" if v else "0"
@@ -164,7 +190,7 @@ def encode_job(fields: Mapping[str, Any], *, canonical: bool = True) -> str:
         items = sorted(items)
     parts = []
     for k, v in items:
-        if not re.match(r"^[A-Za-z0-9_.\-]+$", k):
+        if not _JOB_KEY_RE.match(k):
             raise ValueError(f"illegal job field key {k!r}")
         parts.append(f"{k}={_encode_value(v)}")
     return "&".join(parts)
@@ -172,6 +198,9 @@ def encode_job(fields: Mapping[str, Any], *, canonical: bool = True) -> str:
 
 def parse_job(component: str) -> Dict[str, str]:
     """Parse ``k=v&k=v`` back into a dict. Raises on malformed input."""
+    cached = _JOB_CACHE.get(component)
+    if cached is not None:
+        return dict(cached)     # callers mutate the result; hand out copies
     out: Dict[str, str] = {}
     if not component:
         return out
@@ -182,7 +211,10 @@ def parse_job(component: str) -> Dict[str, str]:
         if k in out:
             raise ValueError(f"duplicate job field {k!r}")
         out[k] = v
-    return out
+    if len(_JOB_CACHE) >= _JOB_CACHE_MAX:
+        _JOB_CACHE.clear()
+    _JOB_CACHE[component] = out
+    return dict(out)
 
 
 def canonical_job_name(fields: Mapping[str, Any], prefix: str = COMPUTE_PREFIX) -> Name:

@@ -337,33 +337,45 @@ class MeshTopology:
         benchmarks announce bare prefixes), so FIB cost == hop distance.
         """
         announced = self.announced()
+        # oracle maps fetched once per key per call — the check runs every
+        # convergence step over every node, so the inner loops below stay
+        # allocation-free (raw keys, no per-probe Name construction)
+        dist_maps = {key: [self.oracle_distances(o) for o in origins]
+                     for key, origins in announced.items()}
         for u in range(len(self.nodes)):
             if u in self.down:
                 continue
-            fib = self.nodes[u].fib
-            for key, origins in announced.items():
-                dists = [self.oracle_distances(o).get(u) for o in origins]
-                dists = [d for d in dists if d is not None]
-                want = min(dists) if dists else None
-                hops = fib.nexthops(Name(key))
-                have = min((h.cost for h in hops.values()), default=None)
+            node = self.nodes[u]
+            fib = node.fib
+            faces = node.faces
+            for key, maps in dist_maps.items():
+                want = None
+                for m in maps:
+                    d = m.get(u)
+                    if d is not None and (want is None or d < want):
+                        want = d
+                hops = fib.nexthops_by_key(key)
                 if want is None or want == 0:
-                    # unreachable (or the origin itself): no usable route
-                    # may remain — a nexthop through a live face is stale
-                    live = [h for h in hops.values()
-                            if not self.nodes[u].faces[h.face_id].down]
                     if want == 0:
                         continue    # the origin node itself: FIB content free
-                    if live:
+                    # unreachable: no usable route may remain — a nexthop
+                    # through a live face is stale
+                    for h in hops.values():
+                        if not faces[h.face_id].down:
+                            return False
+                else:
+                    have = None
+                    for h in hops.values():
+                        if have is None or h.cost < have:
+                            have = h.cost
+                    if have != float(want):
                         return False
-                elif have != float(want):
-                    return False
             # and nothing *extra*: prefixes nobody announces must be gone
-            for p in list(fib.prefixes()):
-                if p.components not in announced:
-                    if any(not self.nodes[u].faces[h.face_id].down
-                           for h in fib.nexthops(p).values()):
-                        return False
+            for key in fib.keys():
+                if key not in dist_maps:
+                    for h in fib.nexthops_by_key(key).values():
+                        if not faces[h.face_id].down:
+                            return False
         return True
 
     # -- churn ----------------------------------------------------------------

@@ -46,6 +46,7 @@ from __future__ import annotations
 import hashlib
 import hmac
 import itertools
+import zlib
 from dataclasses import dataclass, field
 from typing import Any, Dict, Optional, Set, Tuple
 
@@ -75,6 +76,22 @@ class RoutingConfig:
     max_batch: int = 64              # advertisements per control message
     idle_backoff_cap: float = 2.0    # max heartbeat interval when stable
     sign_key: Optional[bytes] = b"lidc-routing-key"   # None disables signing
+    # steady-state cost controls (all three default on; the engine_speed
+    # benchmark's "legacy" baseline turns them off to reproduce the old
+    # protocol's behavior exactly):
+    keepalive_refresh: bool = True   # refresh soft state via one tiny
+                                     # per-adjacency keepalive per interval
+                                     # ("everything I advertised to you is
+                                     # still good") instead of re-flooding
+                                     # every advertisement; an origin whose
+                                     # capability record changed still falls
+                                     # back to a full re-origination
+    slot_heartbeats: bool = True     # deterministically phase-offset each
+                                     # node's heartbeat + refresh wave so 1000
+                                     # agents don't tick at the same instant
+    hello_suppression: bool = True   # skip a hello when any control message
+                                     # already went to that neighbor within
+                                     # the current heartbeat interval
 
     @property
     def hello_timeout(self) -> float:
@@ -130,22 +147,41 @@ def capability_cost(caps: Optional[Dict[str, Any]]) -> float:
 _seq_highwater = 0
 
 
+# Signature memo: the same advertisement is verified once per receiving
+# node per flood wave — with keepalive refresh the (origin, prefix, seq)
+# tuple stays stable for many waves, so the HMAC for it is computed once
+# process-wide.  Bounded clear-on-full, like the Name parse cache.
+_SIGN_CACHE: Dict[Tuple, str] = {}
+_SIGN_CACHE_MAX = 16384
+
+
 def _sign(key: bytes, origin: str, prefix: str, seq: int, lifetime: float,
           withdraw: bool, caps: Optional[Dict[str, Any]]) -> str:
     # cheap deterministic canonicalization — this runs for every received
     # advertisement over multi-hour virtual runs, so no json round-trips
     caps_canon = repr(sorted(caps.items())) if caps else ""
+    ck = (key, origin, prefix, seq, lifetime, withdraw, caps_canon)
+    sig = _SIGN_CACHE.get(ck)
+    if sig is not None:
+        return sig
     canon = f"{origin}|{prefix}|{seq}|{lifetime}|{int(withdraw)}|{caps_canon}"
-    return hmac.new(key, canon.encode(), hashlib.sha256).hexdigest()[:16]
+    sig = hmac.new(key, canon.encode(), hashlib.sha256).hexdigest()[:16]
+    if len(_SIGN_CACHE) >= _SIGN_CACHE_MAX:
+        _SIGN_CACHE.clear()
+    _SIGN_CACHE[ck] = sig
+    return sig
 
 
 def _adv_wire_size(adv: Dict[str, Any]) -> int:
     """Approximate serialized size without serializing (overhead metric)."""
     size = 24 + len(adv.get("p", "")) + len(adv.get("o", ""))
-    size += sum(len(c) + 1 for c in adv.get("pa", ()))
+    for c in adv.get("pa", ()):
+        size += len(c) + 1
     caps = adv.get("cp")
     if caps:
-        size += sum(len(k) + 8 for k in caps)
+        size += 8 * len(caps)
+        for k in caps:
+            size += len(k)
     return size
 
 
@@ -161,6 +197,19 @@ class _Neighbor:
     # (prefix, origin) -> advertisement queued for the next batch
     pending: Dict[Tuple[str, str], Dict[str, Any]] = field(
         default_factory=dict)
+    # virtual time of the last control message *we* sent this neighbor —
+    # any control traffic proves our liveness, so a hello inside the same
+    # heartbeat interval is redundant (hello suppression)
+    last_tx: float = float("-inf")
+    # adjacency epoch: bumped every time *we* declare this neighbor dead
+    # (i.e. we purged everything we learned from it).  Carried in our
+    # hellos so the peer can tell we reset the adjacency and resync to
+    # us.  The old protocol repaired such asymmetric resets implicitly —
+    # every refresh re-flooded every advertisement; keepalive refresh
+    # removes those floods, so the repair must be explicit.
+    my_epoch: int = 0
+    # the last epoch value heard from the peer (None until first hello)
+    peer_epoch: Optional[int] = None
 
 
 @dataclass
@@ -195,6 +244,11 @@ class RoutingAgent:
         self.caps_provider: Optional[Any] = None
         self._seq = itertools.count(1)
         self._msg_seq = itertools.count(1)
+        # deterministic per-node phase in [0, 1): offsets the heartbeat and
+        # the refresh wave so a large fleet doesn't tick in lockstep.
+        # crc32, not hash() — hash() is salted per process and would break
+        # run-to-run reproducibility of the virtual-clock schedule.
+        self._phase = (zlib.crc32(self.name.encode()) % 997) / 997.0
         # (prefix, origin) -> (withdrawn seq, tombstone expiry)
         self._tombstones: Dict[Tuple[str, str], Tuple[int, float]] = {}
         self._dirty: Set[Key] = set()
@@ -211,7 +265,8 @@ class RoutingAgent:
                       "advs_rcvd": 0, "bytes_sent": 0, "hellos_sent": 0,
                       "withdraws_sent": 0, "retractions_sent": 0,
                       "dropped_loops": 0, "dropped_bad_sig": 0,
-                      "neighbor_deaths": 0, "fib_syncs": 0}
+                      "neighbor_deaths": 0, "fib_syncs": 0,
+                      "keepalives_sent": 0, "keepalives_rcvd": 0}
         node.routing = self
 
     def _next_seq(self) -> int:
@@ -231,7 +286,15 @@ class RoutingAgent:
             return
         self._started = True
         self._last_refresh = self.net.now
-        self.net.schedule(self.cfg.hello_interval, self._tick, daemon=True)
+        first = self.cfg.hello_interval
+        if self.cfg.slot_heartbeats:
+            # slot the first tick inside [0.5, 1.5) intervals and stagger
+            # the refresh wave across the whole refresh_interval — a 1000
+            # agent fleet must not phase-align its heartbeats or re-flood
+            # every prefix at the same virtual instant
+            first *= 0.5 + self._phase
+            self._last_refresh -= self._phase * self.cfg.refresh_interval
+        self.net.schedule(first, self._tick, daemon=True)
 
     def stop(self) -> None:
         """Retire the agent: the heartbeat stops rescheduling itself and
@@ -310,12 +373,15 @@ class RoutingAgent:
                 self._neighbor_down(nb)
         for key in self.rib.expire(now):
             self._mark_dirty(key)
-        if self.neighbors:
-            hello = self._control_interest({"t": "hello", "n": self.name})
-            for nb in self.neighbors.values():
-                if not nb.face.down:
-                    nb.face.send(hello, daemon=True)
-                    self.stats["hellos_sent"] += 1
+        for nb in self.neighbors.values():
+            # unconditional (no suppression): poke() is the heal/resync
+            # path and a healed adjacency needs to hear us *now*
+            if not nb.face.down:
+                nb.face.send(self._control_interest(
+                    {"t": "hello", "n": self.name, "e": nb.my_epoch}),
+                    daemon=True)
+                nb.last_tx = now
+                self.stats["hellos_sent"] += 1
         self._flush()
 
     # ---------------------------------------------------------- link events
@@ -346,6 +412,19 @@ class RoutingAgent:
                 self._active = True
                 nb.advertised.clear()
                 self._full_sync(nb)
+            epoch = payload.get("e")
+            if epoch is not None and epoch != nb.peer_epoch:
+                first_contact = nb.peer_epoch is None
+                nb.peer_epoch = epoch
+                if not first_contact and not was_dead:
+                    # the peer declared *us* dead at some point (it purged
+                    # every route we ever advertised to it) while we never
+                    # noticed the outage — one-sided resets happen when
+                    # only one side's heartbeat fires inside the outage
+                    # window.  Resync our offers to it.
+                    self._active = True
+                    nb.advertised.clear()
+                    self._full_sync(nb)
         advs = payload.get("advs", ())
         if advs:
             self._active = True
@@ -358,6 +437,15 @@ class RoutingAgent:
                 continue
             self.stats["advs_rcvd"] += 1
             self._process_adv(nb, adv, now)
+        if payload.get("kf") and not half_open:
+            # face-scoped keepalive: "every route I ever advertised to you
+            # is still good" — extend everything learned over this face by
+            # its own advertised lifetime, in place.  Hop-by-hop soft state:
+            # nothing is re-flooded, no FIB work (costs and nexthops are
+            # unchanged — that is the whole point), and ``_active`` stays
+            # untouched so the idle heartbeat backoff it protects survives.
+            self.stats["keepalives_rcvd"] += 1
+            self.rib.extend_face(face_id, now)
 
     def _process_adv(self, nb: _Neighbor, adv: Dict[str, Any],
                      now: float) -> None:
@@ -425,26 +513,54 @@ class RoutingAgent:
         for ts_key in [k for k, (_, exp) in self._tombstones.items()
                        if exp <= now]:
             del self._tombstones[ts_key]
-        # 3. origin refresh: new seq => downstream lifetimes are extended,
-        #    and the capability record is re-sampled so load signals
-        #    (free chips, queue depth) gossip live values, not the
-        #    snapshot taken at origination
-        if (self.origins
-                and now - self._last_refresh >= self.cfg.refresh_interval):
+        # 3. soft-state refresh: downstream lifetimes must be extended
+        #    before adv_lifetime runs out.  Steady state sends one tiny
+        #    *face-scoped* keepalive per alive adjacency we have advertised
+        #    routes to ("everything I offered you is still good"); the
+        #    receiver extends every route learned over that face in place.
+        #    No flooding — keepalive cost is per-link, not per-origin×links.
+        #    A *changed* capability record — the live free-chips / queue-
+        #    depth gossip — falls back to a full re-origination with a new
+        #    seq, exactly the old protocol.
+        if now - self._last_refresh >= self.cfg.refresh_interval:
             self._last_refresh = now
             caps = self.caps_provider() if self.caps_provider else None
-            for o in self.origins.values():
-                o.seq = self._next_seq()
-                if caps is not None:
-                    o.caps = caps
-                self._mark_dirty(o.prefix.components)
-        # 4. hellos
+            caps_changed = caps is not None and any(
+                o.caps != caps for o in self.origins.values())
+            if self.origins and (caps_changed
+                                 or not self.cfg.keepalive_refresh):
+                for o in self.origins.values():
+                    o.seq = self._next_seq()
+                    if caps is not None:
+                        o.caps = caps
+                    self._mark_dirty(o.prefix.components)
+            elif self.cfg.keepalive_refresh:
+                ka_payload = {"t": "ka", "n": self.name, "kf": 1}
+                ka_bytes = 24 + len(self.name)
+                for nb in self.neighbors.values():
+                    if nb.face.down or not nb.alive or not nb.advertised:
+                        continue
+                    nb.face.send(self._control_interest(dict(ka_payload)),
+                                 daemon=True)
+                    nb.last_tx = now
+                    self.stats["keepalives_sent"] += 1
+                    self.stats["msgs_sent"] += 1
+                    self.stats["bytes_sent"] += ka_bytes
+        # 4. hellos (suppressed per neighbor when any control message
+        #    already proved our liveness within this heartbeat interval —
+        #    adv/keepalive traffic doubles as the hello)
         if self.neighbors:
-            hello = self._control_interest({"t": "hello", "n": self.name})
+            suppress = self.cfg.hello_suppression
             for nb in self.neighbors.values():
-                if not nb.face.down:
-                    nb.face.send(hello, daemon=True)
-                    self.stats["hellos_sent"] += 1
+                if nb.face.down:
+                    continue
+                if suppress and now - nb.last_tx < self._interval:
+                    continue
+                nb.face.send(self._control_interest(
+                    {"t": "hello", "n": self.name, "e": nb.my_epoch}),
+                    daemon=True)
+                nb.last_tx = now
+                self.stats["hellos_sent"] += 1
         # 5. idle backoff: quiescent protocol -> slower heartbeat
         if self._active:
             self._interval = self.cfg.hello_interval
@@ -453,24 +569,33 @@ class RoutingAgent:
                                  self.cfg.effective_backoff_cap)
         self._active = False
         if not self._stopped:
-            self.net.schedule(self._interval, self._tick, daemon=True)
+            iv = self._interval
+            if self.cfg.slot_heartbeats:
+                # +/-5% deterministic skew keeps a fleet that started in
+                # lockstep from re-aligning after the backoff converges
+                iv *= 0.95 + 0.1 * self._phase
+            self.net.schedule(iv, self._tick, daemon=True)
 
     def _neighbor_down(self, nb: _Neighbor) -> None:
         nb.alive = False
         nb.advertised.clear()
         nb.pending.clear()
+        nb.my_epoch += 1    # we purged this adjacency: signal it in hellos
         self._active = True
         self.stats["neighbor_deaths"] += 1
         for key in self.rib.remove_face(nb.face.face_id):
             self._mark_dirty(key)
 
     # ---------------------------------------------------------- tx pipeline
-    def _mark_dirty(self, key: Key) -> None:
-        self._active = True
-        self._dirty.add(key)
+    def _schedule_flush(self) -> None:
         if not self._flush_scheduled:
             self._flush_scheduled = True
             self.net.schedule(self.cfg.batch_delay, self._flush, daemon=True)
+
+    def _mark_dirty(self, key: Key) -> None:
+        self._active = True
+        self._dirty.add(key)
+        self._schedule_flush()
 
     def _full_sync(self, nb: _Neighbor) -> None:
         """Mark every known prefix dirty; only ``nb`` (whose advertised
@@ -564,11 +689,10 @@ class RoutingAgent:
                 continue
             nb.pending[(adv["p"], adv["o"])] = adv
         # piggyback on the dirty-flush scheduler
-        if not self._flush_scheduled:
-            self._flush_scheduled = True
-            self.net.schedule(self.cfg.batch_delay, self._flush, daemon=True)
+        self._schedule_flush()
 
     def _send_pending(self) -> None:
+        now = self.net.now
         for nb in self.neighbors.values():
             if not nb.pending:
                 continue
@@ -579,6 +703,7 @@ class RoutingAgent:
                 msg = self._control_interest(
                     {"t": "adv", "n": self.name, "advs": batch})
                 nb.face.send(msg, daemon=True)
+                nb.last_tx = now
                 self.stats["msgs_sent"] += 1
                 self.stats["advs_sent"] += len(batch)
                 self.stats["bytes_sent"] += sum(map(_adv_wire_size, batch))

@@ -66,10 +66,20 @@ class BestRouteStrategy(Strategy):
     """Lowest-cost upstream; retransmissions probe the next-best path."""
 
     def choose(self, interest, entry, nexthops, now):
-        ranked = sorted(nexthops, key=lambda h: (h.cost, h.rtt_ewma or 1e9, h.face_id))
-        untried = [h for h in ranked if h.face_id not in entry.out_faces]
-        pool = untried or ranked
-        return [pool[0]]
+        # hot path (default strategy, runs once per Interest per hop): a
+        # single scan for the best untried hop — falling back to the best
+        # tried one — replaces sort + two list builds per decision
+        out_faces = entry.out_faces
+        best = fallback = None
+        best_key = fb_key = None
+        for h in nexthops:
+            k = (h.cost, h.rtt_ewma or 1e9, h.face_id)
+            if h.face_id not in out_faces:
+                if best_key is None or k < best_key:
+                    best, best_key = h, k
+            elif fb_key is None or k < fb_key:
+                fallback, fb_key = h, k
+        return [best if best is not None else fallback]
 
 
 class LoadShareStrategy(Strategy):

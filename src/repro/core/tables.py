@@ -143,6 +143,10 @@ class Fib:
         self._entries: Dict[Key, Dict[int, NextHop]] = {}
         # face -> announced prefixes through it (makes remove_face O(routes))
         self._by_face: Dict[int, Set[Key]] = {}
+        # key -> cost-sorted nexthop list, invalidated on any mutation of the
+        # prefix's hop set; lookup() is per-packet-per-hop and the sort was
+        # its dominant cost once the trie walk got cheap
+        self._sorted: Dict[Key, List[NextHop]] = {}
         self.lookups = 0
 
     # -- trie plumbing -----------------------------------------------------
@@ -218,12 +222,14 @@ class Fib:
         else:
             hops[face_id] = NextHop(face_id=face_id, cost=cost)
         self._by_face.setdefault(face_id, set()).add(key)
+        self._sorted.pop(key, None)
 
     def unregister(self, prefix: Name, face_id: Optional[int] = None) -> None:
         key = prefix.components
         hops = self._entries.get(key)
         if hops is None:
             return
+        self._sorted.pop(key, None)
         if face_id is None:
             for fid in list(hops):
                 self._by_face.get(fid, set()).discard(key)
@@ -248,7 +254,11 @@ class Fib:
         """RIB->FIB derivation entry point: set semantics over the nexthop
         set; see :func:`_sync_nexthops` (shared with :class:`LinearFib` so
         the oracle cannot diverge).  Returns True if anything changed."""
-        return _sync_nexthops(self, prefix, desired)
+        changed = _sync_nexthops(self, prefix, desired)
+        if changed:
+            # in-place cost updates bypass register/unregister
+            self._sorted.pop(prefix.components, None)
+        return changed
 
     def lookup(self, name: Name) -> Tuple[Optional[Name], List[NextHop]]:
         """Longest-prefix match; returns (matched_prefix, nexthops)."""
@@ -281,15 +291,27 @@ class Fib:
             if node.hops:
                 best_depth, best_hops = i, node.hops
         if best_hops:
-            return (Name(comps[:best_depth]),
-                    sorted(best_hops.values(), key=lambda h: h.cost))
+            key = comps[:best_depth]
+            ranked = self._sorted.get(key)
+            if ranked is None:
+                ranked = sorted(best_hops.values(), key=lambda h: h.cost)
+                self._sorted[key] = ranked
+            return Name(key), ranked
         return None, []
 
     def prefixes(self) -> Iterable[Name]:
         return (Name(c) for c in self._entries)
 
+    def keys(self) -> Iterable[Key]:
+        """Announced prefix keys without the per-entry Name construction
+        (convergence checks over 1000-node meshes scan every FIB)."""
+        return self._entries.keys()
+
     def nexthops(self, prefix: Name) -> Dict[int, NextHop]:
         return self._entries.get(prefix.components, {})
+
+    def nexthops_by_key(self, key: Key) -> Dict[int, NextHop]:
+        return self._entries.get(key, {})
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -397,6 +419,11 @@ class Rib:
         self._prefixes: Dict[Key, Dict[Tuple[str, int], RibRoute]] = {}
         # face -> prefixes with at least one route through it
         self._by_face: Dict[int, Set[Key]] = {}
+        # lower bound on the earliest route expiry: expire() is called every
+        # heartbeat on every agent, and almost always has nothing to do —
+        # the bound makes that case O(1) instead of O(routes).  Removals may
+        # leave the bound stale-low, which only costs one wasted scan.
+        self._expiry_bound = float("inf")
 
     # -- mutation ----------------------------------------------------------
     def upsert(self, prefix: Name, route: RibRoute) -> bool:
@@ -409,6 +436,8 @@ class Rib:
         prior = routes.get(slot)
         routes[slot] = route
         self._by_face.setdefault(route.face_id, set()).add(key)
+        if route.expires_at < self._expiry_bound:
+            self._expiry_bound = route.expires_at
         return (prior is None or prior.cost != route.cost
                 or prior.seq != route.seq or prior.path != route.path
                 or prior.caps != route.caps)
@@ -435,7 +464,8 @@ class Rib:
         affected = []
         for key in list(self._by_face.get(face_id, ())):
             routes = self._prefixes.get(key, {})
-            for s in [s for s in routes if s[1] == face_id]:
+            doomed = [s for s in routes if s[1] == face_id]
+            for s in doomed:
                 del routes[s]
             if not routes:
                 self._prefixes.pop(key, None)
@@ -445,21 +475,48 @@ class Rib:
 
     def expire(self, now: float) -> List[Key]:
         """Drop lifetime-expired routes; returns affected prefix keys."""
+        if now < self._expiry_bound:
+            return []            # nothing can be due yet: O(1) fast path
         affected = []
+        soonest = float("inf")
         for key in list(self._prefixes):
             routes = self._prefixes[key]
             dead = [s for s, r in routes.items() if r.expires_at <= now]
             if not dead:
+                for r in routes.values():
+                    if r.expires_at < soonest:
+                        soonest = r.expires_at
                 continue
             faces = set()
             for s in dead:
                 faces.add(s[1])
                 del routes[s]
+            for r in routes.values():
+                if r.expires_at < soonest:
+                    soonest = r.expires_at
             if not routes:
                 del self._prefixes[key]
             self._reindex_faces(key, faces)
             affected.append(key)
+        self._expiry_bound = soonest
         return affected
+
+    def extend_face(self, face_id: int, now: float) -> int:
+        """Face-scoped keepalive refresh: the neighbor behind ``face_id``
+        says every route it advertised to us is still good, so push each
+        such route's expiry out by its own lifetime.  Hop-by-hop soft
+        state: a route survives exactly as long as every hop of its
+        advertiser chain keeps refreshing its downstream — no flooding.
+        Returns the number of routes extended."""
+        n = 0
+        for key in self._by_face.get(face_id, ()):
+            for (_, fid), r in self._prefixes.get(key, {}).items():
+                if fid == face_id:
+                    fresh = now + r.lifetime
+                    if fresh > r.expires_at:
+                        r.expires_at = fresh
+                        n += 1
+        return n
 
     def _reindex_faces(self, key: Key, candidate_faces: Set[int]) -> None:
         still = {s[1] for s in self._prefixes.get(key, {})}
@@ -547,10 +604,28 @@ class Pit:
     forwarder ticking the PIT per packet pays O(expired) not O(pending).
     """
 
+    # compact the expiry heap when it holds > _COMPACT_FACTOR x more
+    # records than live entries (and is big enough to matter): satisfied /
+    # retransmission-extended entries leave stale tombstones behind, and a
+    # long-lived forwarder under churn would otherwise grow the heap
+    # without bound even though its PIT stays small.
+    _COMPACT_MIN = 64
+    _COMPACT_FACTOR = 4
+
     def __init__(self) -> None:
         self._table: Dict[Key, PitEntry] = {}
         self._expiry_heap: List[Tuple[float, int, Key]] = []
         self._seq = itertools.count()
+        self.compactions = 0
+
+    def _maybe_compact(self) -> None:
+        heap = self._expiry_heap
+        if (len(heap) > self._COMPACT_MIN
+                and len(heap) > self._COMPACT_FACTOR * (len(self._table) + 1)):
+            self._expiry_heap = [(e.expiry, next(self._seq), k)
+                                 for k, e in self._table.items()]
+            heapq.heapify(self._expiry_heap)
+            self.compactions += 1
 
     def insert(self, interest: Interest, in_face: int, now: float
                ) -> Tuple[PitEntry, bool, bool]:
@@ -577,6 +652,7 @@ class Pit:
         if extended > entry.expiry:
             entry.expiry = extended
             heapq.heappush(self._expiry_heap, (extended, next(self._seq), key))
+            self._maybe_compact()
         return entry, False, False
 
     def satisfy(self, name: Name) -> List[PitEntry]:
@@ -588,6 +664,8 @@ class Pit:
             entry = self._table.pop(comps[:i], None)
             if entry is not None:
                 out.append(entry)
+        if out:
+            self._maybe_compact()
         return out
 
     def get(self, name: Name) -> Optional[PitEntry]:
@@ -605,6 +683,12 @@ class Pit:
                 continue
             return t
         return None
+
+    def expires_by(self, now: float) -> bool:
+        """Cheap guard: could anything be expired at ``now``?  Lets the
+        per-packet expiry hook skip the call-and-allocate path entirely."""
+        heap = self._expiry_heap
+        return bool(heap) and heap[0][0] <= now
 
     def expire(self, now: float) -> List[PitEntry]:
         """Pop expired entries (drives retransmission / failover upstream)."""
@@ -652,16 +736,28 @@ class ContentStore:
         self.bytes_stored = 0
         self._store: "OrderedDict[Key, Data]" = OrderedDict()
         self._prefix_index: Dict[Key, Set[Key]] = {}
+        # keys inserted but not yet folded into the prefix index.  Building
+        # the len+1 prefix slices costs ~40µs per insert and most traffic
+        # (exact-match compute results, routing scenarios) never issues a
+        # prefix query — so indexing is deferred until the first
+        # ``can_be_prefix`` miss or prefix eviction actually needs it.
+        self._unindexed: Dict[Key, None] = {}
         self.hits = 0
         self.misses = 0
         self.evictions = 0
 
     # -- index plumbing ----------------------------------------------------
-    def _index(self, key: Key) -> None:
-        for i in range(len(key) + 1):
-            self._prefix_index.setdefault(key[:i], set()).add(key)
+    def _index_pending(self) -> None:
+        index = self._prefix_index
+        for key in self._unindexed:
+            for i in range(len(key) + 1):
+                index.setdefault(key[:i], set()).add(key)
+        self._unindexed.clear()
 
     def _unindex(self, key: Key) -> None:
+        if key in self._unindexed:
+            del self._unindexed[key]
+            return
         for i in range(len(key) + 1):
             bucket = self._prefix_index.get(key[:i])
             if bucket is not None:
@@ -690,7 +786,7 @@ class ContentStore:
             self.bytes_stored -= len(prior.content)
             self._store.move_to_end(key)
         else:
-            self._index(key)
+            self._unindexed[key] = None
         self._store[key] = data
         self.bytes_stored += size
         while len(self._store) > self.capacity or (
@@ -710,6 +806,8 @@ class ContentStore:
                                       and not exact.is_fresh(now)):
             hit = exact
         elif interest.can_be_prefix:
+            if self._unindexed:
+                self._index_pending()
             for k in sorted(self._prefix_index.get(key, ())):
                 d = self._store[k]
                 if interest.must_be_fresh and not d.is_fresh(now):
@@ -725,6 +823,8 @@ class ContentStore:
 
     def evict_prefix(self, prefix: Name) -> int:
         """Invalidate everything under a prefix (e.g. checkpoint superseded)."""
+        if self._unindexed:
+            self._index_pending()
         doomed = list(self._prefix_index.get(prefix.components, ()))
         for k in doomed:
             self._remove(k)

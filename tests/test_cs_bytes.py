@@ -24,6 +24,8 @@ def match_name(cs: ContentStore, name: Name):
 
 def assert_consistent(cs: ContentStore) -> None:
     """Store <-> prefix-index <-> byte-count coherence."""
+    if cs._unindexed:
+        cs._index_pending()     # indexing is lazy: materialize, then check
     for key in cs._store:
         for i in range(len(key) + 1):
             assert key in cs._prefix_index.get(key[:i], set()), \

@@ -1,0 +1,216 @@
+"""Event-engine equivalence: the calendar queue is a pure speedup.
+
+The calendar-queue engine must be *behaviorally invisible*: any seeded
+scenario produces the identical ``(time, seq)`` event trace, final
+virtual clock and delivery outcome as the original global-heap engine —
+and windowed execution (``run(until=...)`` / ``run(max_events=...)``
+chunking, which tests and long-lived drivers use) must be invisible on
+both engines.  Plus the PIT expiry-heap compaction regression: the lazy
+min-heap must stay bounded under retransmission churn.
+"""
+
+import random
+
+import pytest
+
+from repro.core.forwarder import Network
+from repro.core.names import Name
+from repro.core.overlay import MeshTopology
+from repro.core.packets import Data, Interest
+from repro.core.tables import Pit
+
+# ---------------------------------------------------------------------------
+# raw queue-order equivalence
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", [0, 1, 7])
+def test_random_schedule_identical_order(seed):
+    """Randomized delays, nested re-scheduling: both engines execute the
+    exact same (time, seq) sequence."""
+    traces = {}
+    for engine in ("heap", "calendar"):
+        rng = random.Random(seed)
+        net = Network(engine=engine)
+        net.trace = []
+        executed = []
+
+        def fire(depth=0):
+            executed.append(net.now)
+            if depth < 3 and rng.random() < 0.5:
+                # bimodal: packet-scale or heartbeat-scale
+                delay = (rng.uniform(0, 0.004) if rng.random() < 0.8
+                         else rng.uniform(0.5, 3.0))
+                net.schedule(delay, lambda d=depth: fire(d + 1))
+
+        for _ in range(200):
+            net.schedule(rng.uniform(0, 5.0), fire)
+        net.run()
+        traces[engine] = (net.trace, executed, net.now)
+    assert traces["heap"] == traces["calendar"]
+
+
+def test_calendar_push_into_parked_window():
+    """A run(until=...) horizon can park the clock before the head event's
+    bucket; a later near-term push must still pop in time order."""
+    net = Network(engine="calendar", bucket_width=0.005)
+    order = []
+    net.schedule(0.012, lambda: order.append("far"))
+    net.run(until=0.001)           # horizon short of the head event
+    assert net.now == 0.001
+    net.schedule(0.002, lambda: order.append("near"))   # t=0.003 < 0.012
+    net.run()
+    assert order == ["near", "far"]
+
+
+# ---------------------------------------------------------------------------
+# whole-system seeded equivalence
+# ---------------------------------------------------------------------------
+
+def _run_mesh_scenario(engine, kind, seed, *, chunker=None):
+    """A small mesh + producers + consumer scenario; returns the full
+    behavior capture.  ``chunker`` (if given) replaces each ``run`` call
+    with an equivalent sequence of windowed runs."""
+    net = Network(engine=engine)
+    net.trace = []
+    mesh = MeshTopology(net, 9, kind, seed=seed)
+    prefixes = []
+    for i in range(6):
+        prefix = Name.parse("/svc").append(f"p{i}")
+        mesh.attach_producer(
+            i, prefix,
+            lambda interest, publish, now: Data(
+                name=interest.name, content=b"x", created_at=now,
+                freshness=30.0))
+        prefixes.append(prefix)
+
+    def run(until=None):
+        if chunker is not None:
+            chunker(net, until)
+        elif until is not None:
+            net.run(until=until)
+        else:
+            net.run()
+
+    run(until=2.0)                 # converge on the virtual clock
+    rng = random.Random(seed + 1)
+    consumer = mesh.consumer_at(8)
+    delivered = []
+    for i in range(40):
+        p = prefixes[rng.randrange(len(prefixes))]
+
+        def express(name=p.append(f"j{i}")):
+            consumer.express(
+                Interest(name=name, lifetime=1.0, hop_limit=32),
+                on_data=lambda d: delivered.append(str(d.name)),
+                retries=2)
+
+        net.schedule(i * 0.03, express)
+    run()                          # drain to quiescence
+    return net.trace, net.now, delivered, net.events_processed
+
+
+@pytest.mark.parametrize("kind", ["ring", "tree", "random"])
+def test_engines_identical_system_traces(kind):
+    heap_cap = _run_mesh_scenario("heap", kind, seed=3)
+    cal_cap = _run_mesh_scenario("calendar", kind, seed=3)
+    assert heap_cap == cal_cap
+    assert len(heap_cap[2]) == 40      # everything delivered, both engines
+
+
+# ---------------------------------------------------------------------------
+# run() chunking is invisible (both engines)
+# ---------------------------------------------------------------------------
+
+def _chunker(seed):
+    """Replays a run() as randomized (until, max_events) windows."""
+    rng = random.Random(seed)
+
+    def chunk(net, until):
+        if until is not None:
+            while net.now < until:
+                net.run(until=min(net.now + rng.uniform(0.01, 0.4), until),
+                        max_events=rng.choice([1, 3, 17, 1000]))
+            net.run(until=until)   # drain events at exactly the horizon
+        else:
+            while not net.idle():
+                net.run(max_events=rng.choice([1, 2, 29, 500]))
+    return chunk
+
+
+@pytest.mark.parametrize("engine", ["heap", "calendar"])
+@pytest.mark.parametrize("seed", [11, 23])
+def test_chunked_run_invisible(engine, seed):
+    """Interrupting run() at arbitrary (until, max_events) boundaries must
+    not change the event order, the final clock, or what got delivered."""
+    whole = _run_mesh_scenario(engine, "ring", seed=seed)
+    chunked = _run_mesh_scenario(engine, "ring", seed=seed,
+                                 chunker=_chunker(seed))
+    assert whole == chunked
+
+
+def test_chunked_run_identical_across_engines():
+    """Chunking AND engine choice together: all four executions agree."""
+    caps = [_run_mesh_scenario(engine, "tree", seed=5, chunker=ch)
+            for engine in ("heap", "calendar")
+            for ch in (None, _chunker(5))]
+    assert all(c == caps[0] for c in caps[1:])
+
+
+# ---------------------------------------------------------------------------
+# PIT expiry-heap compaction under retransmission churn
+# ---------------------------------------------------------------------------
+
+def _heap_bound(pit):
+    return max(pit._COMPACT_MIN,
+               pit._COMPACT_FACTOR * (len(pit) + 1)) + 1
+
+
+def test_pit_heap_bounded_under_retransmission_churn():
+    """A few hot names retransmitted thousands of times: every extension
+    pushes a stale heap record, and without compaction the heap grows
+    without bound while the PIT itself holds 4 entries."""
+    pit = Pit()
+    names = [Name.parse(f"/job/hot{i}") for i in range(4)]
+    now = 0.0
+    for round_ in range(2000):
+        now += 0.01
+        for name in names:
+            # fresh nonce every time -> aggregation path, expiry extended
+            pit.insert(Interest(name=name, lifetime=4.0), in_face=1, now=now)
+    assert len(pit) == 4
+    assert pit.compactions > 0
+    assert len(pit._expiry_heap) <= _heap_bound(pit)
+
+
+def test_pit_heap_bounded_under_satisfy_churn():
+    """Insert-then-satisfy churn: satisfied entries leave tombstones that
+    compaction (not just lazy pops at expiry time) must reclaim."""
+    pit = Pit()
+    now = 0.0
+    for i in range(5000):
+        now += 0.001
+        name = Name.parse("/flow").append(f"s{i}")
+        pit.insert(Interest(name=name, lifetime=60.0), in_face=1, now=now)
+        if i % 8:                  # satisfy most, keep a slowly-growing tail
+            pit.satisfy(name)
+    assert len(pit._expiry_heap) <= _heap_bound(pit)
+    # lazy expiry still works after compactions
+    assert pit.next_expiry() is not None
+    assert pit.expire(now + 120.0)
+    assert len(pit) == 0
+
+
+def test_pit_expiry_order_survives_compaction():
+    """Compaction must not change what expires when."""
+    pit = Pit()
+    n0 = Name.parse("/a")
+    pit.insert(Interest(name=n0, lifetime=1.0), in_face=1, now=0.0)
+    for i in range(500):
+        pit.insert(Interest(name=Name.parse(f"/b/{i}"), lifetime=5.0),
+                   in_face=1, now=0.0)
+        pit.satisfy(Name.parse(f"/b/{i}"))
+    assert pit.compactions > 0
+    assert pit.next_expiry() == 1.0
+    dead = pit.expire(1.0)
+    assert [e.name for e in dead] == [n0]

@@ -12,6 +12,7 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 OLD_JAX = not hasattr(jax, "shard_map")   # jax<0.5: experimental shard_map
 
 
+@pytest.mark.slow
 @pytest.mark.xfail(OLD_JAX, strict=False,
                    reason="jax<0.5 experimental shard_map raises _SpecError "
                           "when transposing the pipeline stage function")

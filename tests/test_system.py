@@ -1,5 +1,7 @@
 """End-to-end behaviour of the LIDC system (the paper's workflow, Fig. 5)."""
 
+import pytest
+
 from repro.ckpt.checkpoint import latest_step
 from repro.core.jobs import JobSpec
 from repro.core.strategy import CompletionTimeStrategy
@@ -61,6 +63,7 @@ def test_status_protocol_states():
     assert h.result["output_bytes"] > 0
 
 
+@pytest.mark.slow
 def test_failover_resumes_from_named_checkpoint():
     sys_ = small_fleet()
     fields = {"app": "train", "arch": "lidc-demo", "shape": "custom",

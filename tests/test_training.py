@@ -19,6 +19,7 @@ from repro.train.trainer import run_training
 KEY = jax.random.PRNGKey(0)
 
 
+@pytest.mark.slow
 def test_training_loss_decreases():
     cfg = get_config("lidc-demo")
     res = run_training(cfg, steps=30, batch=8, seq=32, lr=3e-3, seed=1)
@@ -47,6 +48,7 @@ def test_warmup_cosine_schedule():
     assert float(lr(jnp.asarray(100))) == pytest.approx(0.1, abs=0.01)
 
 
+@pytest.mark.slow
 def test_microbatch_grad_accumulation_equivalent():
     cfg = smoke_of("qwen2-0.5b")
     opt = AdamW(lr=constant(1e-3))
@@ -77,6 +79,7 @@ def test_checkpoint_roundtrip_exact():
                                       np.asarray(b, np.float32))
 
 
+@pytest.mark.slow
 def test_checkpoint_resume_continues_run():
     lake = DataLake()
     cfg = get_config("lidc-demo")
