@@ -1,0 +1,378 @@
+"""Cross-plane chaos soak: every traffic plane through a gray-fault storm.
+
+One LIDC overlay carries **four concurrent traffic planes** — a
+scatter-gather workflow, a windowed bulk-data fetch, a stream of compute
+jobs (with hedged Interests), and token-streaming inference sessions —
+while a staged, seeded fault campaign runs underneath: a flapping link,
+an asymmetric one-way partition, a gray-slow cluster, payload
+corruption, duplication, reordering and loss.  All faults heal by
+``HEAL_T``; the run then must reconverge.
+
+Invariant gates (any failure exits nonzero and prints the seed so the
+exact run replays deterministically):
+
+* **delivery == 1.0** — the workflow completes, every compute job is
+  receipted, the bulk fetch is byte-identical to the lake oracle, and
+  every serving session finishes;
+* **exactly-once** — no workflow stage executes twice
+  (``ExecutionLog.reexecuted()`` stays empty: retries are absorbed by
+  the digest-named result cache, not re-run);
+* **bit-exact streams** — each session's token stream equals the
+  ``token_at`` oracle;
+* **bounded amplification** — total Interests expressed / satisfied
+  across every consumer stays <= 3x;
+* **post-heal reconvergence** — the edge FIB regains a route to every
+  cluster and a fresh post-heal probe workflow completes promptly.
+
+``--smoke`` runs the CI-sized configuration and writes the
+``BENCH_chaos_soak.json`` perf-trajectory artifact; ``--seed`` replays a
+failed campaign; ``--trace-dir`` dumps the injector + event traces (CI
+uploads them as artifacts when a scheduled long soak fails).
+"""
+
+from __future__ import annotations
+
+import argparse
+import itertools
+import json
+import os
+import random
+import sys
+import time
+from typing import Dict, List, Optional
+
+sys.path.insert(0, "src")  # allow running as a script from the repo root
+
+from _bench_io import write_bench_json  # noqa: E402
+from repro.core import jobs as jobs_mod  # noqa: E402
+from repro.core.cluster import ComputeCluster, ExecResult  # noqa: E402
+from repro.core.compute_plane import SchedulerConfig  # noqa: E402
+from repro.core.matchmaker import ServiceEndpoint  # noqa: E402
+from repro.core.names import Name, canonical_job_name  # noqa: E402
+from repro.core.overlay import LidcSystem  # noqa: E402
+from repro.core.packets import Interest  # noqa: E402
+from repro.core.resilience import CircuitBreaker  # noqa: E402
+from repro.core.strategy import AdaptiveStrategy  # noqa: E402
+from repro.datalake.fetch import SegmentFetcher  # noqa: E402
+from repro.datalake.kv import prompt_digest  # noqa: E402
+from repro.serve.plane import (ServeModelSpec, ServingPlane,  # noqa: E402
+                               SessionClient, token_at)
+from repro.workflow import (FaultInjector, WorkflowEngine,  # noqa: E402
+                            WorkflowSpec)
+from repro.workflow.apps import (ExecutionLog, workflow_endpoints,  # noqa: E402
+                                 workflow_registry)
+
+MODEL = "qwen3-1.7b"
+DATASET = "/lidc/data/reads/soak"
+BULK_OBJ = "/lidc/data/blob/soak"
+HEAL_T = 4.5        # every fault is healed/disarmed by here
+
+
+# ---------------------------------------------------------------------------
+# fleet
+# ---------------------------------------------------------------------------
+
+def build(n_clusters: int):
+    jobs_mod._job_seq = itertools.count(1000)   # replayable job ids
+    strategy = AdaptiveStrategy(
+        probe_fanout=1, rotate_cold_probes=True,
+        breaker=CircuitBreaker(fail_threshold=4, cooloff=0.5))
+    sys_ = LidcSystem(strategy=strategy)
+    log = ExecutionLog()
+    reg = workflow_registry()
+    reg.register("sim", lambda fields, caps: None)
+    planes = {}
+    for i in range(n_clusters):
+        cfg = SchedulerConfig(brownout_queue_depth=6)
+        cl = ComputeCluster(sys_.net, f"pod{i}", chips=4, lake=sys_.lake,
+                            max_queue_depth=8, scheduler_config=cfg)
+        for ep in workflow_endpoints(log):
+            cl.add_endpoint(ep)
+        cl.add_endpoint(ServiceEndpoint(
+            service="sim.lidck8s.svc.cluster.local", app="sim",
+            max_chips=4,
+            executor=lambda job, c: ExecResult(
+                payload={"u": job.spec.fields.get("u")},
+                duration=float(job.spec.fields.get("d", 0.3)))))
+        planes[cl.name] = ServingPlane(
+            cl, ServeModelSpec(model=MODEL, decode_step_s=0.02))
+        sys_.overlay.add_cluster(cl, validators=reg,
+                                 latency=0.002 + 0.0005 * i)
+    sys_.net.run(until=0.25)    # gossip settles before traffic starts
+    return sys_, log, planes
+
+
+# ---------------------------------------------------------------------------
+# the staged fault campaign
+# ---------------------------------------------------------------------------
+
+def arm_campaign(sys_, inj: FaultInjector, n_clusters: int, seed: int
+                 ) -> Dict[str, str]:
+    """Victim selection is drawn from its own seeded RNG (separate from
+    the injector's per-packet RNG) so the campaign *shape* is a pure
+    function of the seed."""
+    pick = random.Random(seed)
+    names = [f"pod{i}" for i in range(n_clusters)]
+    flap_v, oneway_v, slow_v = pick.sample(names, 3)
+    faces = [f for pair in sys_.overlay.links.values() for f in pair]
+    gray = pick.sample(faces, max(2, len(faces) // 3))
+    lossy = pick.sample(faces, max(2, len(faces) // 4))
+
+    inj.flap_link(list(sys_.overlay.links[flap_v]),
+                  period=0.4, start=0.5, stop=2.5)
+    inj.one_way_partition(sys_.overlay, oneway_v, at=0.8, heal_at=2.2,
+                          direction="egress")
+    inj.slow_node(sys_.overlay.clusters[slow_v], 3.0, start=1.0, stop=4.0)
+    inj.corrupt_link(faces, 0.08, start=1.0, stop=3.2)
+    inj.duplicate_link(gray, 0.15, start=1.5, stop=HEAL_T)
+    inj.reorder_link(gray, 0.20, start=1.5, stop=HEAL_T)
+    inj.lossy_link(lossy, 0.15, start=2.0, stop=3.0)
+    return {"flap": flap_v, "oneway": oneway_v, "slow": slow_v}
+
+
+# ---------------------------------------------------------------------------
+# the soak
+# ---------------------------------------------------------------------------
+
+def soak(*, n_clusters: int, data_mib: int, n_jobs: int, n_sessions: int,
+         max_new: int, seed: int) -> Dict[str, object]:
+    t0 = time.perf_counter()
+    sys_, log, planes = build(n_clusters)
+    net = sys_.net
+    inj = FaultInjector(net, seed=seed)
+    victims = arm_campaign(sys_, inj, n_clusters, seed)
+
+    # -- plane 1: workflow ------------------------------------------------
+    sys_.lake.put_bytes(Name.parse(DATASET),
+                        bytes(range(256)) * (data_mib * 2 ** 20 // 256))
+    wf = (WorkflowSpec("soak")
+          .stage("shard", "wf-shard", inputs=[DATASET], parts=n_clusters,
+                 tag="soak")
+          .stage("align", "wf-align", inputs=["@shard"], fanout=n_clusters,
+                 tag="soak")
+          .stage("merge", "wf-merge", inputs=["@align"], tag="soak")
+          .compile())
+    eng = WorkflowEngine(net, sys_.overlay.edge)
+    run_box: Dict[str, object] = {}
+    net.schedule(0.30, lambda: run_box.__setitem__("run", eng.start(wf)))
+
+    # -- plane 2: bulk data ----------------------------------------------
+    blob = bytes((7 * i) % 256 for i in range(data_mib * 2 ** 20))
+    sys_.lake.put_bytes(Name.parse(BULK_OBJ), blob)
+    bulk_box: Dict[str, object] = {}
+    fetcher = SegmentFetcher(
+        net, sys_.overlay.edge, Name.parse(BULK_OBJ),
+        verify_key=sys_.lake.key,   # corrupted chunks re-fetched, not kept
+        on_complete=lambda b: bulk_box.__setitem__("bytes", b),
+        on_error=lambda r: bulk_box.__setitem__("error", r))
+    net.schedule(0.40, fetcher.start)
+
+    # -- plane 3: compute jobs with hedged Interests ----------------------
+    job_out: Dict[str, object] = {}
+    consumer = sys_.client.consumer
+
+    def submit_job(uid: str, fields: Dict[str, object]) -> None:
+        consumer.express(
+            Interest(name=canonical_job_name(fields), lifetime=2.0,
+                     must_be_fresh=True),
+            on_data=lambda d, u=uid: job_out.__setitem__(u, "receipt"),
+            on_fail=lambda r, u=uid: job_out.__setitem__(u, f"fail:{r}"),
+            retries=5, hedge_delay=0.5)
+
+    for j in range(n_jobs):
+        uid = f"job{j}"
+        fields = {"app": "sim", "chips": 1 + (j % 2), "d": 0.2 + 0.05 * j,
+                  "u": uid}
+        net.schedule(0.35 + j * (HEAL_T / max(1, n_jobs)),
+                     lambda u=uid, f=fields: submit_job(u, f))
+
+    # -- plane 4: serving sessions ---------------------------------------
+    client = SessionClient(net, sys_.overlay.edge, sys_.lake,
+                           stall_timeout=1.5)
+    sessions: List[object] = []
+    prompts: List[List[int]] = []
+
+    def start_session(i: int) -> None:
+        prompt = list(range(40 + i))
+        prompts.append(prompt)
+        sessions.append(client.start(f"soak-{i}", MODEL, prompt,
+                                     max_new=max_new))
+
+    for i in range(n_sessions):
+        net.schedule(0.6 + i * (3.5 / max(1, n_sessions)),
+                     lambda i=i: start_session(i))
+
+    # drive the storm + recovery to quiescence
+    net.run(until=HEAL_T + 1.0)
+    net.run()
+
+    # -- post-heal reconvergence probe ------------------------------------
+    heal_now = net.now
+    probe_wf = (WorkflowSpec("postheal")
+                .stage("shard", "wf-shard", inputs=[DATASET], parts=2,
+                       tag="postheal")
+                .stage("merge", "wf-merge", inputs=["@shard"],
+                       tag="postheal")
+                .compile())
+    probe = eng.run(probe_wf)
+    # the soft-state repair cycle (keepalive count digests -> epoch resync)
+    # runs at refresh_interval cadence: give reconvergence one full cycle
+    # plus slack after the last heal before judging the FIB
+    net.run(until=max(net.now, heal_now + 12.0))
+    align_hops = sys_.overlay.edge.fib.nexthops(
+        Name.parse("/lidc/compute/wf-align"))
+
+    # -- invariants -------------------------------------------------------
+    run = run_box.get("run")
+    failures: List[str] = []
+    delivered = 0
+    total = 4
+    if run is not None and run.complete:
+        delivered += 1
+    else:
+        failures.append(f"workflow did not complete: "
+                        f"{run.stage_report() if run else 'never started'}")
+    if bulk_box.get("bytes") == blob:
+        delivered += 1
+    else:
+        failures.append(f"bulk fetch mismatch: "
+                        f"{bulk_box.get('error', 'byte diff')}")
+    if len(job_out) == n_jobs and all(v == "receipt"
+                                      for v in job_out.values()):
+        delivered += 1
+    else:
+        bad = {k: v for k, v in job_out.items() if v != "receipt"}
+        failures.append(f"compute jobs not all receipted: "
+                        f"{bad or 'missing submissions'}")
+    streams_ok = (len(sessions) == n_sessions
+                  and all(r.finished for r in sessions)
+                  and all(r.stream() == [token_at(prompt_digest(p), i)
+                                         for i in range(max_new)]
+                          for r, p in zip(sessions, prompts)))
+    if streams_ok:
+        delivered += 1
+    else:
+        failures.append("serving streams not bit-exact vs oracle")
+
+    reexec = log.reexecuted()
+    if reexec:
+        failures.append(f"duplicate stage executions: {reexec}")
+
+    consumers = [eng.consumer, consumer, fetcher.consumer, client.consumer]
+    expressed = sum(c.expressed for c in consumers)
+    satisfied = sum(c.satisfied for c in consumers)
+    amplification = expressed / max(1, satisfied)
+    if amplification > 3.0:
+        failures.append(f"retry amplification {amplification:.2f} > 3x")
+
+    if not probe.complete:
+        failures.append("post-heal probe workflow did not complete")
+    if len(align_hops) != n_clusters:
+        failures.append(f"edge FIB reconverged to {len(align_hops)}/"
+                        f"{n_clusters} clusters")
+
+    forwarders = [sys_.overlay.edge] + [c.node
+                                        for c in sys_.overlay.clusters.values()]
+    poison_rejected = sum(f.stats["cs_poison_rejected"] for f in forwarders)
+    corruptions = sum(f.corruptions
+                      for pair in sys_.overlay.links.values() for f in pair)
+    if corruptions > 0 and poison_rejected == 0:
+        failures.append("corruption occurred but no CS admission rejection "
+                        "was recorded")
+
+    return {
+        "seed": seed,
+        "victims": victims,
+        "failures": failures,
+        "delivery": delivered / total,
+        "retry_efficiency": round(satisfied / max(1, expressed), 6),
+        "amplification": round(amplification, 4),
+        "duplicate_execs": len(reexec),
+        "makespan_s": round(run.makespan, 4)
+                      if run is not None and run.complete else -1.0,
+        "reconverge_probe_s": round(net.now - heal_now, 4),
+        "hedges": sum(c.hedges for c in consumers),
+        "breaker_opens": sys_.overlay.edge.strategy.breaker.opened,
+        "quarantine_skips": sys_.overlay.edge.strategy.quarantine_skips,
+        "brownouts": sum(g.brownouts for g in sys_.overlay.gateways.values()),
+        "cs_poison_rejected": poison_rejected,
+        "corruptions": corruptions,
+        "injector_trace": inj.trace,
+        "wall_s": round(time.perf_counter() - t0, 3),
+    }
+
+
+# ---------------------------------------------------------------------------
+# entry point
+# ---------------------------------------------------------------------------
+
+def main(argv: Optional[list] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run; writes BENCH_chaos_soak.json")
+    ap.add_argument("--seed", type=int, default=1163,
+                    help="campaign seed (printed on failure for replay)")
+    ap.add_argument("--clusters", type=int, default=None)
+    ap.add_argument("--data-mib", type=int, default=None)
+    ap.add_argument("--jobs", type=int, default=None)
+    ap.add_argument("--sessions", type=int, default=None)
+    ap.add_argument("--trace-dir", default=None,
+                    help="dump injector + campaign traces here on failure")
+    ap.add_argument("--json", action="store_true", help="JSON output")
+    args = ap.parse_args(argv)
+
+    n = args.clusters or (4 if args.smoke else 8)
+    data_mib = args.data_mib or (2 if args.smoke else 8)
+    n_jobs = args.jobs or (6 if args.smoke else 12)
+    n_sessions = args.sessions or (2 if args.smoke else 4)
+
+    r = soak(n_clusters=n, data_mib=data_mib, n_jobs=n_jobs,
+             n_sessions=n_sessions, max_new=12, seed=args.seed)
+
+    trace = r.pop("injector_trace")
+    failures = r.pop("failures")
+    if args.json:
+        print(json.dumps(r))
+    else:
+        print("[chaos-soak] " + " ".join(f"{k}={v}" for k, v in r.items()
+                                         if k != "victims"))
+        print(f"  victims: {r['victims']}  faults injected: {len(trace)}")
+
+    if args.smoke:
+        write_bench_json(
+            "chaos_soak", ["delivery", "retry_efficiency"],
+            {"delivery": float(r["delivery"]),
+             "retry_efficiency": float(r["retry_efficiency"]),
+             "duplicate_execs": float(r["duplicate_execs"]),
+             "makespan_s": float(r["makespan_s"]),
+             "hedges": float(r["hedges"]),
+             "cs_poison_rejected": float(r["cs_poison_rejected"])},
+            "BENCH_chaos_soak.json")
+
+    if failures:
+        print("\nINVARIANT FAILURES:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        replay = (f"PYTHONPATH=src python benchmarks/chaos_soak.py "
+                  f"--seed {args.seed}"
+                  + (" --smoke" if args.smoke else ""))
+        print(f"\nreplay deterministically with:\n  {replay}",
+              file=sys.stderr)
+        if args.trace_dir:
+            os.makedirs(args.trace_dir, exist_ok=True)
+            path = os.path.join(args.trace_dir,
+                                f"chaos_soak_seed{args.seed}.json")
+            with open(path, "w") as fh:
+                json.dump({"seed": args.seed, "failures": failures,
+                           "metrics": r, "injector_trace": trace}, fh,
+                          indent=2)
+            print(f"trace written to {path}", file=sys.stderr)
+        return 1
+    print(f"\nall chaos-soak invariants hold "
+          f"(seed {args.seed}: {n} clusters, {data_mib} MiB bulk, "
+          f"{n_jobs} jobs, {n_sessions} sessions)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -79,6 +79,11 @@ class ComputeCluster:
         self.jobs: Dict[str, Job] = {}
         self.free_chips = chips
         self.alive = True
+        # slow-node gray fault (workflow/faults.py FaultInjector.slow_node):
+        # real execution stretches by this factor while the scheduler's
+        # *predictions* stay optimistic — ETAs only catch up as the
+        # completion model observes the dilated run times.  1.0 = healthy.
+        self.time_dilation = 1.0
         self.completed_jobs = 0
         self.failed_jobs = 0
         self.scheduler = ClusterScheduler(self, config=scheduler_config,

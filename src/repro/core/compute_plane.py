@@ -84,6 +84,18 @@ class SchedulerConfig:
     # -- load-triggered re-advertisement damping (used by ComputeCluster) ---
     readvertise_factor: float = 2.0      # re-advertise on >= this load swing
     readvertise_min_interval: float = 0.5  # but never more often than this
+    # -- brownout: graceful degradation under sustained overload ------------
+    # When the admission queue reaches brownout_queue_depth, the gateway
+    # stops admitting the *lowest* waiting priority classes (one more class
+    # per additional multiple of the depth) and answers them with busy
+    # receipts whose quoted ETA grows with the overload level — callers
+    # back off proportionally instead of every class timing out equally.
+    brownout_queue_depth: Optional[int] = None
+    brownout_eta_growth: float = 0.5     # ETA stretch per overload level
+
+    @property
+    def brownout_enabled(self) -> bool:
+        return self.brownout_queue_depth is not None
 
     @property
     def spill_enabled(self) -> bool:
@@ -253,6 +265,27 @@ class ClusterScheduler:
                   if q.job.job_id in etas]
         return float(statistics.median(queued)) if queued else 0.0
 
+    # ----------------------------------------------------------- brownout
+    def brownout_level(self) -> int:
+        """Overload depth in units of the brownout threshold (0 = none)."""
+        cfg = self.cfg
+        if not cfg.brownout_enabled or cfg.brownout_queue_depth <= 0:
+            return 0
+        return self.queue_depth // cfg.brownout_queue_depth
+
+    def brownout_sheds(self, priority: int) -> bool:
+        """Would an arrival of this priority class be shed right now?
+
+        Under level-L brownout the L lowest priority classes (among what
+        is queued plus the arrival itself) are refused with busy receipts;
+        higher classes keep being admitted — load-shedding by class, not
+        uniform timeout."""
+        level = self.brownout_level()
+        if level <= 0:
+            return False
+        classes = sorted({q.priority for q in self._queue} | {priority})
+        return priority in classes[:level]
+
     # -------------------------------------------------------------- spill
     def should_spill(self, spec: JobSpec, want: int) -> bool:
         """Past the spill threshold? (Feasible-but-saturated only: work
@@ -396,9 +429,14 @@ class ClusterScheduler:
             rec.plan = res
             self._run_phase(rec)
             return
-        # completion lands after the job's *virtual* duration
+        # completion lands after the job's *virtual* duration.  A slow
+        # node (time_dilation > 1) takes longer than it *predicts* —
+        # expected_release stays optimistic, which is the gray-failure
+        # signature; the completion model observes the real duration in
+        # _finish and drags future ETAs toward the truth.
         rec.expected_release = self.net.now + res.duration
-        self.net.schedule(res.duration, lambda: self._finish(rec, res=res))
+        self.net.schedule(res.duration * cluster.time_dilation,
+                          lambda: self._finish(rec, res=res))
 
     def _run_phase(self, rec: _Running) -> None:
         plan = rec.plan
@@ -432,7 +470,9 @@ class ClusterScheduler:
                 return
             self._run_phase(rec)
 
-        self.net.schedule(duration, complete_phase)
+        # slow-node dilation stretches the real phase, not the prediction
+        self.net.schedule(duration * self.cluster.time_dilation,
+                          complete_phase)
 
     def _release_preempted(self, rec: _Running) -> None:
         self._running.pop(rec.job.job_id, None)

@@ -41,7 +41,9 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from . import reasons
 from .names import Name
-from .packets import Data, Interest
+from .packets import Data, Interest, verify_trusted
+from .resilience import NOROUTE_FAST_RETRY, CONSUMER_EXPRESS, RetryBudget, \
+    RetryPolicy
 from .tables import ContentStore, Fib, Pit
 
 __all__ = ["Nack", "Network", "Face", "Forwarder", "Consumer", "wire_size",
@@ -339,6 +341,19 @@ class Face:
     jitter: float = 0.0
     drops: int = 0
     loss_rng: Optional[Any] = None     # random.Random owned by the injector
+    # gray faults (same injector-owned RNG discipline as loss_rng): per-
+    # packet payload byte-flip probability (Data only — the HMAC must
+    # catch it), duplicate-delivery probability, and reorder probability
+    # (an extra hold-back of ``reorder_delay`` seconds, enough to land a
+    # packet behind its successors)
+    corrupt: float = 0.0
+    duplicate: float = 0.0
+    reorder: float = 0.0
+    reorder_delay: float = 0.005
+    fault_rng: Optional[Any] = None
+    corruptions: int = 0
+    duplicates: int = 0
+    reorders: int = 0
     # link capacity model (benchmarks/data_plane.py sets this)
     bandwidth: Optional[float] = None  # bytes/sec; None = zero-width packets
     _busy_until: float = 0.0           # FIFO serialization horizon
@@ -365,6 +380,25 @@ class Face:
                 and self.loss_rng.random() < self.loss):
             self.drops += 1
             return  # injected loss: the packet vanishes on the wire
+        # gray faults: each draw happens only when that fault is armed, so
+        # fault-free runs consume zero RNG and traces stay unchanged.  The
+        # draw order (corrupt -> duplicate -> reorder) is fixed — part of
+        # the replay-determinism contract.
+        duplicate = False
+        reorder_extra = 0.0
+        rng = self.fault_rng
+        if rng is not None:
+            if (self.corrupt > 0.0 and isinstance(packet, Data)
+                    and len(packet.content) > 0
+                    and rng.random() < self.corrupt):
+                packet = _flip_byte(packet, rng)
+                self.corruptions += 1
+            if self.duplicate > 0.0 and rng.random() < self.duplicate:
+                duplicate = True
+                self.duplicates += 1
+            if self.reorder > 0.0 and rng.random() < self.reorder:
+                reorder_extra = self.reorder_delay
+                self.reorders += 1
         if isinstance(packet, Interest):
             self.tx_interests += 1
         elif isinstance(packet, Data):
@@ -378,8 +412,27 @@ class Face:
             start = max(now, self._busy_until)
             self._busy_until = start + wire_size(packet) / self.bandwidth
             delay = (self._busy_until - now) + self.latency + self.jitter
+        delay += reorder_extra
         # arg-based delivery: no per-packet closure allocation
         self._net.schedule(delay, self._peer_recv, daemon=daemon, arg=packet)
+        if duplicate:
+            # the twin rides one reorder-window behind the original —
+            # deterministic, and late enough to exercise dedup paths
+            self._net.schedule(delay + self.reorder_delay, self._peer_recv,
+                               daemon=daemon, arg=packet)
+
+
+def _flip_byte(data: Data, rng: Any) -> Data:
+    """Corrupt one payload byte; a fresh clone so CS copies elsewhere (and
+    the producer's own object) keep the true bytes."""
+    clone = object.__new__(Data)
+    clone.__dict__.update(data.__dict__)
+    raw = bytearray(bytes(data.content))
+    raw[rng.randrange(len(raw))] ^= rng.randrange(1, 256)
+    clone.__dict__["content"] = bytes(raw)
+    clone.__dict__.pop("_wire", None)    # stale caches must not survive
+    clone.__dict__.pop("_sigok", None)
+    return clone
 
 
 def link(net: Network, a: "Forwarder", b: "Forwarder", latency: float = 0.001
@@ -434,7 +487,8 @@ class Forwarder:
         self._producers: Dict[Tuple[str, ...], ProducerHandler] = {}
         self._producer_lens: List[int] = []
         self.stats = {"in_interest": 0, "in_data": 0, "in_nack": 0,
-                      "cs_hit": 0, "dropped": 0, "agg": 0, "retx": 0}
+                      "cs_hit": 0, "dropped": 0, "agg": 0, "retx": 0,
+                      "cs_poison_rejected": 0}
 
     # -- wiring -------------------------------------------------------------
     def add_face(self, latency: float = 0.001) -> Face:
@@ -635,7 +689,16 @@ class Forwarder:
         if not entries:
             self.stats["dropped"] += 1   # unsolicited data
             return
-        self.cs.insert(data)
+        # Content-Store admission gate: a signed Data whose HMAC fails
+        # verification must never poison the cache (later consumers would
+        # be served garbage straight from the CS, past every end-to-end
+        # check).  It is still forwarded downstream — consumers verify
+        # end-to-end and drive their own retries; the cache just refuses
+        # to amplify the corruption.
+        if self._cacheable(data):
+            self.cs.insert(data)
+        else:
+            self.stats["cs_poison_rejected"] += 1
         for entry in entries:
             # measurement feedback for strategies (rtt per upstream face)
             if face_id in entry.sent_at and face_id not in entry.resolved:
@@ -719,6 +782,18 @@ class Forwarder:
                     self._send(down, nack)
 
     # -- helpers -----------------------------------------------------------
+    @staticmethod
+    def _cacheable(data: Data) -> bool:
+        """Signed Data must verify against its signer's registered key to
+        enter the CS; unsigned Data (or an unknown signer) has no verdict
+        and stays cacheable.  The verdict is memoized on the packet object
+        — one HMAC per Data per network, not per hop."""
+        ok = data.__dict__.get("_sigok")
+        if ok is None:
+            ok = verify_trusted(data) is not False
+            object.__setattr__(data, "_sigok", ok)
+        return ok
+
     def _hop_for(self, name: Name, face_id: int):
         matched, _ = self.fib.lookup(name)
         if matched is None:
@@ -763,7 +838,10 @@ class Consumer:
     another announcing cluster.
     """
 
-    def __init__(self, net: Network, node: Forwarder, name: str = "consumer"):
+    def __init__(self, net: Network, node: Forwarder, name: str = "consumer",
+                 noroute_policy: RetryPolicy = NOROUTE_FAST_RETRY,
+                 express_policy: RetryPolicy = CONSUMER_EXPRESS,
+                 retry_budget: Optional[RetryBudget] = None):
         self.net = net
         self.node = node
         self.name = name
@@ -773,15 +851,34 @@ class Consumer:
         self._pending: Dict[Tuple[str, ...], Dict[str, Any]] = {}
         self.face.connect(net, self._receive)
         self.nacks: List[Nack] = []
+        self.noroute_policy = noroute_policy
+        self.express_policy = express_policy
+        # optional shared token bucket bounding timeout-retransmit storms
+        # per prefix root; None (default) keeps legacy unbounded behavior
+        self.retry_budget = retry_budget
+        # retry-amplification accounting: interests injected vs. names
+        # answered — the soak gates expressed/satisfied <= 3x
+        self.expressed = 0
+        self.satisfied = 0
+        self.hedges = 0
 
     def express(self, interest: Interest,
                 on_data: Callable[[Data], None],
                 on_fail: Optional[Callable[[str], None]] = None,
-                retries: int = 3, rto: Optional[float] = None) -> None:
+                retries: Optional[int] = None, rto: Optional[float] = None,
+                hedge_delay: Optional[float] = None) -> None:
         """Express an Interest; ``rto`` overrides the retransmission timer
         (default: 0.9 × interest lifetime).  Window-based transports (the
         segment fetcher) pass their own adaptive RTO and ``retries=0`` so
-        loss surfaces as ``on_fail('timeout')`` instead of blind retries."""
+        loss surfaces as ``on_fail('timeout')`` instead of blind retries.
+
+        ``hedge_delay`` arms tail-tolerance hedging: if no answer arrived
+        after that many seconds, a second Interest (fresh nonce) races the
+        first — the live PIT entry routes it to an *untried* upstream and
+        dedupes whichever answer loses.  Hedges consume no ``retries``.
+        """
+        if retries is None:
+            retries = self.express_policy.max_retries
         key = interest.name.components
         st = self._pending.get(key)
         if st is not None:
@@ -795,8 +892,13 @@ class Consumer:
                               "noroute_retries": 0}
         self.net.schedule(0.0, self._inject, arg=interest)
         self._arm_timeout(interest)
+        if hedge_delay is not None:
+            nonce = interest.nonce
+            self.net.schedule(hedge_delay,
+                              lambda: self._hedge(key, nonce))
 
     def _inject(self, interest: Interest) -> None:
+        self.expressed += 1
         self.node.receive(self.face.face_id, interest)
 
     def get(self, name: Name, retries: int = 3, **kw) -> Dict[str, Any]:
@@ -816,10 +918,14 @@ class Consumer:
             st = self._pending.get(key)
             if st is None or st["interest"].nonce != interest.nonce:
                 return  # answered, or superseded by a retransmission
-            if st["retries"] > 0:
+            budget = self.retry_budget
+            if st["retries"] > 0 and (
+                    budget is None
+                    or budget.try_spend(key[:2], self.net.now)):
                 st["retries"] -= 1
                 fresh = interest.refresh()
                 st["interest"] = fresh
+                self.expressed += 1
                 self.node.receive(self.face.face_id, fresh)
                 self._arm_timeout(fresh)
             else:
@@ -848,6 +954,7 @@ class Consumer:
             for i in range(len(comps) + 1):
                 st = self._pending.pop(comps[:i], None)
                 if st is not None:
+                    self.satisfied += 1
                     for on_data, _ in st["waiters"]:
                         on_data(packet)
         elif isinstance(packet, Nack):
@@ -860,14 +967,15 @@ class Consumer:
             if st["retries"] == 0:
                 self._pending.pop(packet.name.components)
                 self._fail_waiters(st, reasons.nack_failure(packet.reason))
-            elif packet.reason == reasons.NO_ROUTE and st["noroute_retries"] < 6:
+            elif (packet.reason == reasons.NO_ROUTE
+                  and self.noroute_policy.allows(st["noroute_retries"] + 1)):
                 # a no-route NACK during route convergence is transient:
                 # the decentralized control plane is still gossiping this
-                # prefix hop-by-hop.  Retry on a short exponential backoff
+                # prefix hop-by-hop.  Retry on the named backoff schedule
                 # (bounded, deterministic, does not consume `retries`)
                 # instead of burning most of an interest lifetime.
                 st["noroute_retries"] += 1
-                backoff = 0.02 * (2 ** (st["noroute_retries"] - 1))
+                backoff = self.noroute_policy.delay(st["noroute_retries"])
                 nonce = st["interest"].nonce
                 self.net.schedule(backoff,
                                   lambda: self._fast_retransmit(
@@ -879,5 +987,15 @@ class Consumer:
             return  # answered, failed, or superseded meanwhile
         fresh = st["interest"].refresh()
         st["interest"] = fresh
+        self.expressed += 1
         self.node.receive(self.face.face_id, fresh)
         self._arm_timeout(fresh)
+
+    def _hedge(self, key: Tuple[str, ...], nonce: int) -> None:
+        """Fire the hedged second Interest iff the original is still the
+        one in flight (no answer, no retransmission happened first)."""
+        st = self._pending.get(key)
+        if st is None or st["interest"].nonce != nonce:
+            return
+        self.hedges += 1
+        self._fast_retransmit(key, nonce)

@@ -47,6 +47,7 @@ from .matchmaker import CapacityError, MatchError
 from .names import (COMPUTE_PREFIX, SERVE_PREFIX, STATUS_PREFIX, Name,
                     canonical_job_name, job_fields_of, serve_fields_of)
 from .packets import Data, Interest, sign_data
+from .resilience import SPILL_RETRY
 from .validation import ValidationError, ValidatorRegistry, default_registry
 
 __all__ = ["Gateway"]
@@ -66,6 +67,7 @@ class Gateway:
         self.busy_receipts = 0
         self.spills = 0
         self.spill_failures = 0
+        self.brownouts = 0
         self.rejections: Dict[str, int] = {}
         self._jobs_by_sig: Dict[str, str] = {}
         self._spill_consumer: Optional[Consumer] = None
@@ -130,15 +132,27 @@ class Gateway:
             return self._busy(interest, spec, reason_detail="spill-loop")
         if not self.cluster.alive:
             return self._reject(interest, reasons.CLUSTER_DOWN)
-        # 5. decentralized work shedding: past the spill threshold, hand
-        #    the Interest to a peer cluster through our own forwarder
+        # 5. brownout: under sustained overload the gateway degrades
+        #    gracefully — the lowest waiting priority classes are shed
+        #    with busy receipts whose quoted ETA grows with the overload
+        #    level, so low-priority callers back way off while urgent
+        #    classes keep being admitted (nobody times out uniformly)
         scheduler = self.cluster.scheduler
+        if (scheduler.cfg.brownout_enabled
+                and scheduler.brownout_sheds(spec.priority)):
+            self.brownouts += 1
+            scale = (1.0 + scheduler.cfg.brownout_eta_growth
+                     * scheduler.brownout_level())
+            return self._busy(interest, spec, reason_detail="brownout",
+                              eta_scale=scale)
+        # 6. decentralized work shedding: past the spill threshold, hand
+        #    the Interest to a peer cluster through our own forwarder
         if (scheduler.cfg.spill_enabled
                 and len(spill_path) < scheduler.cfg.max_spill_hops
                 and scheduler.should_spill(spec,
                                            spec.chips(default=1))):
             return self._spill(interest, spec, spill_path, publish)
-        # 6. matchmake + admit (the K8s-job spawn)
+        # 7. matchmake + admit (the K8s-job spawn)
         try:
             job = self.cluster.submit(spec, now)
         except CapacityError as e:
@@ -222,7 +236,8 @@ class Gateway:
                                reason_detail=f"spill-failed:{reason}"))
 
         self._spill_consumer.express(upstream, on_data=on_receipt,
-                                     on_fail=on_fail, retries=1)
+                                     on_fail=on_fail,
+                                     retries=SPILL_RETRY.max_retries)
         return None  # receipt (or busy) is published asynchronously
 
     # ------------------------------------------------------------- status
@@ -278,17 +293,20 @@ class Gateway:
         return 300.0 if state == "Completed" else 1.0
 
     def _busy(self, interest: Interest, spec: JobSpec,
-              reason_detail: Optional[str] = None) -> Nack:
+              reason_detail: Optional[str] = None,
+              eta_scale: float = 1.0) -> Nack:
         """The busy receipt: a structured Nack quoting this cluster's
         predicted completion time and live load, so upstream strategies
-        rank us by transfer cost + predicted completion."""
+        rank us by transfer cost + predicted completion.  ``eta_scale``
+        stretches the quoted ETA — brownout uses it to push shed classes
+        progressively further away as overload deepens."""
         self.busy_receipts += 1
         self.rejections[reasons.BUSY] = self.rejections.get(reasons.BUSY, 0) + 1
         scheduler = self.cluster.scheduler
         reason = reasons.BUSY if reason_detail is None \
             else f"{reasons.BUSY}:{reason_detail}"
         return Nack(interest, reason, info={
-            "eta": round(scheduler.eta(spec), 6),
+            "eta": round(scheduler.eta(spec) * eta_scale, 6),
             "free_chips": self.cluster.free_chips,
             "queue_depth": scheduler.queue_depth,
         })

@@ -544,9 +544,10 @@ class LidcSystem:
     """
 
     def __init__(self, strategy: Optional[Strategy] = None,
-                 routing: Optional[RoutingConfig] = None):
+                 routing: Optional[RoutingConfig] = None,
+                 engine: str = "calendar"):
         from ..datalake.lake import DataLake
-        self.net = Network()
+        self.net = Network(engine=engine)
         self.overlay = Overlay(self.net, strategy=strategy, routing=routing)
         self.lake = DataLake()
         self.client = LidcClient(self.net, self.overlay.edge)

@@ -22,7 +22,8 @@ from typing import Any, Dict, Optional
 
 from .names import Name
 
-__all__ = ["Interest", "Data", "sign_data", "verify_data"]
+__all__ = ["Interest", "Data", "sign_data", "verify_data",
+           "trusted_key_for", "verify_trusted"]
 
 _nonce_counter = itertools.count(1)
 
@@ -119,11 +120,42 @@ def _mac(key: bytes, data: Data) -> bytes:
     return h.digest()
 
 
+# signer name -> HMAC key, auto-populated by sign_data.  In-process trust
+# anchor registry: the simulation signs and verifies inside one process,
+# so "key distribution" is the act of signing — any node may then verify
+# any signed Data it forwards (the Content-Store admission gate uses
+# this to refuse poisoned cache entries).
+_TRUSTED_KEYS: Dict[str, bytes] = {}
+
+
 def sign_data(data: Data, key: bytes, signer: str) -> Data:
     unsigned = replace(data, signature=b"", signer=signer)
+    if _TRUSTED_KEYS.get(signer) is not key:
+        _TRUSTED_KEYS[signer] = key
     return replace(unsigned, signature=_mac(key, unsigned), signer=signer)
 
 
 def verify_data(data: Data, key: bytes) -> bool:
     unsigned = replace(data, signature=b"")
     return hmac.compare_digest(_mac(key, unsigned), data.signature)
+
+
+def trusted_key_for(signer: str) -> Optional[bytes]:
+    """The registered key for ``signer``, or None if never seen."""
+    return _TRUSTED_KEYS.get(signer)
+
+
+def verify_trusted(data: Data) -> Optional[bool]:
+    """Verify against the signer's registered key.
+
+    Returns ``True``/``False`` for a verdict, or ``None`` when no verdict
+    is possible (unsigned Data, or a signer this process never saw sign)
+    — callers treat ``None`` as "cannot check", not as failure, so
+    unsigned control payloads keep working.
+    """
+    if not data.signature or not data.signer:
+        return None
+    key = _TRUSTED_KEYS.get(data.signer)
+    if key is None:
+        return None
+    return verify_data(data, key)

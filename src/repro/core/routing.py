@@ -202,11 +202,14 @@ class _Neighbor:
     # heartbeat interval is redundant (hello suppression)
     last_tx: float = float("-inf")
     # adjacency epoch: bumped every time *we* declare this neighbor dead
-    # (i.e. we purged everything we learned from it).  Carried in our
-    # hellos so the peer can tell we reset the adjacency and resync to
-    # us.  The old protocol repaired such asymmetric resets implicitly —
-    # every refresh re-flooded every advertisement; keepalive refresh
-    # removes those floods, so the repair must be explicit.
+    # (i.e. we purged everything we learned from it) — and every time a
+    # keepalive count digest reveals the peer believes it delivered
+    # adverts we never received (lost on a lossy or flapping link).
+    # Carried in our hellos so the peer can tell we reset the adjacency
+    # and resync to us.  The old protocol repaired such asymmetric
+    # resets implicitly — every refresh re-flooded every advertisement;
+    # keepalive refresh removes those floods, so the repair must be
+    # explicit.
     my_epoch: int = 0
     # the last epoch value heard from the peer (None until first hello)
     peer_epoch: Optional[int] = None
@@ -266,7 +269,8 @@ class RoutingAgent:
                       "withdraws_sent": 0, "retractions_sent": 0,
                       "dropped_loops": 0, "dropped_bad_sig": 0,
                       "neighbor_deaths": 0, "fib_syncs": 0,
-                      "keepalives_sent": 0, "keepalives_rcvd": 0}
+                      "keepalives_sent": 0, "keepalives_rcvd": 0,
+                      "resyncs_requested": 0, "sends_deferred": 0}
         node.routing = self
 
     def _next_seq(self) -> int:
@@ -446,6 +450,23 @@ class RoutingAgent:
             # untouched so the idle heartbeat backoff it protects survives.
             self.stats["keepalives_rcvd"] += 1
             self.rib.extend_face(face_id, now)
+            kc = payload.get("kc")
+            if kc is not None and kc != self.rib.count_face(face_id):
+                # count digest mismatch: the peer believes it delivered
+                # adverts we never received (eaten by a lossy or flapping
+                # link — keepalives extend soft state but cannot resurrect
+                # a route that never arrived).  Bump our adjacency epoch:
+                # the hello makes the peer clear its delivery record and
+                # full-resync to us.  Gray-failure repair without
+                # reintroducing the per-refresh re-flood.
+                self._active = True
+                nb.my_epoch += 1
+                nb.face.send(self._control_interest(
+                    {"t": "hello", "n": self.name, "e": nb.my_epoch}),
+                    daemon=True)
+                nb.last_tx = now
+                self.stats["hellos_sent"] += 1
+                self.stats["resyncs_requested"] += 1
 
     def _process_adv(self, nb: _Neighbor, adv: Dict[str, Any],
                      now: float) -> None:
@@ -535,13 +556,17 @@ class RoutingAgent:
                         o.caps = caps
                     self._mark_dirty(o.prefix.components)
             elif self.cfg.keepalive_refresh:
-                ka_payload = {"t": "ka", "n": self.name, "kf": 1}
-                ka_bytes = 24 + len(self.name)
+                ka_bytes = 24 + len(self.name) + 4
                 for nb in self.neighbors.values():
                     if nb.face.down or not nb.alive or not nb.advertised:
                         continue
-                    nb.face.send(self._control_interest(dict(ka_payload)),
-                                 daemon=True)
+                    # the count digest lets the receiver detect adverts
+                    # that never arrived (lossy/flapping link) and request
+                    # a resync — see the ``kc`` check in handle_control
+                    kc = sum(len(d) for d in nb.advertised.values())
+                    nb.face.send(self._control_interest(
+                        {"t": "ka", "n": self.name, "kf": 1, "kc": kc}),
+                        daemon=True)
                     nb.last_tx = now
                     self.stats["keepalives_sent"] += 1
                     self.stats["msgs_sent"] += 1
@@ -561,6 +586,8 @@ class RoutingAgent:
                     daemon=True)
                 nb.last_tx = now
                 self.stats["hellos_sent"] += 1
+        # 4b. drain adverts deferred while a flapping face was down
+        self._send_pending()
         # 5. idle backoff: quiescent protocol -> slower heartbeat
         if self._active:
             self._interval = self.cfg.hello_interval
@@ -695,6 +722,14 @@ class RoutingAgent:
         now = self.net.now
         for nb in self.neighbors.values():
             if not nb.pending:
+                continue
+            if nb.face.down:
+                # a down face would eat the batch while ``advertised``
+                # records it as delivered — a flap shorter than one
+                # heartbeat would then leave the peer permanently missing
+                # the route.  Hold pending; the heartbeat drains it once
+                # the carrier is back (or _neighbor_down clears it).
+                self.stats["sends_deferred"] += 1
                 continue
             advs = list(nb.pending.values())
             nb.pending.clear()

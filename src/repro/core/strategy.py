@@ -36,6 +36,7 @@ from typing import Dict, List, Optional, Tuple
 
 from .names import Name, job_fields_of
 from .packets import Interest
+from .resilience import CircuitBreaker
 from .tables import NextHop, PitEntry
 
 __all__ = [
@@ -182,7 +183,8 @@ class AdaptiveStrategy(Strategy):
                  rotate_cold_probes: bool = False,
                  split_segments: bool = True,
                  cost_bias: float = 0.0,
-                 eta_weight: float = 0.0) -> None:
+                 eta_weight: float = 0.0,
+                 breaker: Optional[CircuitBreaker] = None) -> None:
         self.probe_fanout = max(1, probe_fanout)
         self.explore_every = max(2, explore_every)
         self.loss_weight = loss_weight
@@ -190,10 +192,33 @@ class AdaptiveStrategy(Strategy):
         self.split_segments = split_segments
         self.cost_bias = cost_bias
         self.eta_weight = eta_weight
+        # optional per-upstream circuit breaker (core/resilience.py): a
+        # face that fails `fail_threshold` times in a row is quarantined —
+        # filtered out of every choice — until its cooloff admits one
+        # half-open probe; a success closes the circuit.  None (default)
+        # keeps the historical EWMA-only behavior.
+        self.breaker = breaker
         self._decisions = 0
         self.probes = 0
         self.explorations = 0
         self.segment_splits = 0
+        self.quarantine_skips = 0
+        self.breaker_probes = 0
+
+    def feedback(self, name, face_id, ok, rtt, now):
+        if self.breaker is not None:
+            self.breaker.record(face_id, ok, now)
+
+    def _admit(self, nexthops: List[NextHop], now: float) -> List[NextHop]:
+        """Drop quarantined upstreams — unless that would leave nothing,
+        in which case all hops stay eligible (an open circuit must never
+        black-hole the only route)."""
+        if self.breaker is None:
+            return nexthops
+        allowed = [h for h in nexthops if self.breaker.allow(h.face_id, now)]
+        if allowed and len(allowed) < len(nexthops):
+            self.quarantine_skips += len(nexthops) - len(allowed)
+        return allowed or nexthops
 
     def _rank(self, nexthops: List[NextHop]) -> List[NextHop]:
         return sorted(
@@ -205,6 +230,22 @@ class AdaptiveStrategy(Strategy):
 
     def choose(self, interest, entry, nexthops, now):
         self._decisions += 1
+        nexthops = self._admit(nexthops, now)
+        if self.breaker is not None:
+            # a half-open circuit means _admit just granted that upstream
+            # its probe window: route this interest through it *alone* so
+            # the probe gets an unambiguous verdict (a piggy-backed probe
+            # that loses a same-round race resolves with no verdict and
+            # the circuit never closes).  If the probe fails, NACK
+            # failover / retransmission recovers the request on the
+            # remaining upstreams.
+            probe = min((h for h in nexthops
+                         if h.face_id not in entry.out_faces
+                         and self.breaker.state(h.face_id) == "half-open"),
+                        key=lambda h: (h.cost, h.face_id), default=None)
+            if probe is not None:
+                self.breaker_probes += 1
+                return [probe]
         comps = interest.name.components
         if (self.split_segments and comps and comps[-1].startswith("seg=")
                 and len(nexthops) > 1):

@@ -518,6 +518,17 @@ class Rib:
                         n += 1
         return n
 
+    def count_face(self, face_id: int) -> int:
+        """Number of (prefix, origin) routes learned over ``face_id`` —
+        compared against the advertiser's keepalive count digest to detect
+        advertisements a lossy or flapping link silently ate."""
+        n = 0
+        for key in self._by_face.get(face_id, ()):
+            for (_, fid) in self._prefixes.get(key, {}):
+                if fid == face_id:
+                    n += 1
+        return n
+
     def _reindex_faces(self, key: Key, candidate_faces: Set[int]) -> None:
         still = {s[1] for s in self._prefixes.get(key, {})}
         for fid in candidate_faces:

@@ -45,6 +45,7 @@ from ..core import reasons
 from ..core.forwarder import Consumer, Forwarder, Network
 from ..core.names import Name
 from ..core.packets import Data, Interest, verify_data
+from ..core.resilience import FETCH_BACKOFF, RetryPolicy
 
 __all__ = ["SegmentFetcher", "fetch"]
 
@@ -57,7 +58,9 @@ class SegmentFetcher:
                  on_complete: Optional[Callable[[bytes], None]] = None,
                  on_error: Optional[Callable[[str], None]] = None,
                  init_cwnd: float = 2.0, init_ssthresh: float = 64.0,
-                 md_factor: float = 0.5, max_retries: int = 10,
+                 md_factor: float = 0.5,
+                 max_retries: int = FETCH_BACKOFF.max_retries,
+                 backoff_policy: RetryPolicy = FETCH_BACKOFF,
                  min_rto: float = 0.05, max_rto: float = 2.0,
                  default_rto: float = 0.2, lifetime_factor: float = 4.0,
                  delay_factor: float = 1.8, rto_headroom: float = 1.5,
@@ -90,10 +93,16 @@ class SegmentFetcher:
         self.verify_key = verify_key
         self.record_trace = record_trace
 
-        # rto estimator (RFC 6298), seeded from forwarder telemetry
+        # rto estimator (RFC 6298), seeded from forwarder telemetry.  The
+        # timeout backoff multiplier follows the named FETCH_BACKOFF
+        # schedule (x2 per consecutive timeout, capped — identical to the
+        # historical inline doubling) and resets on a fresh RTT sample.
+        self.backoff_policy = backoff_policy
         self._srtt: Optional[float] = None
         self._rttvar: float = 0.0
-        self._backoff = 1.0
+        self._backoff_n = 0
+        self._backoff = backoff_policy.delay(1)
+        self._single_tries = 0
         self._base_rtt: Optional[float] = None   # min observed (delay gate)
         self._base_rtt_age = 0                   # acks since the min was set
         self._seed_rto_from_telemetry()
@@ -140,7 +149,12 @@ class SegmentFetcher:
         else:
             self._rttvar = 0.75 * self._rttvar + 0.25 * abs(self._srtt - sample)
             self._srtt = 0.875 * self._srtt + 0.125 * sample
-        self._backoff = 1.0
+        self._backoff_n = 0
+        self._backoff = self.backoff_policy.delay(1)
+
+    def _bump_backoff(self) -> None:
+        self._backoff_n += 1
+        self._backoff = self.backoff_policy.delay(self._backoff_n + 1)
 
     def _rto(self) -> float:
         # headroom over the textbook srtt+4·rttvar: on a loss-free path the
@@ -211,7 +225,9 @@ class SegmentFetcher:
         if self.state != "manifest":
             return
         if self.verify_key is not None and not verify_data(d, self.verify_key):
-            self._fail("manifest-signature")
+            # a corrupted manifest is a transient wire fault, not a verdict
+            # on the object: retry (bounded by the manifest try budget)
+            self._on_manifest_fail("bad-signature")
             return
         try:
             self.manifest = json.loads(bytes(d.content).decode())
@@ -244,13 +260,7 @@ class SegmentFetcher:
             # monolithic fetch for good.
             self.state = "single"
             self._trace("fallback-single")
-            lifetime = (self.single_lifetime if self.single_lifetime
-                        is not None else self._rto() * self.lifetime_factor * 2)
-            self.consumer.express(
-                Interest(name=self.name, lifetime=lifetime),
-                on_data=self._on_single,
-                on_fail=lambda r: self._fail(f"single:{r}"),
-                retries=self.single_retries)
+            self._express_single()
             return
         if self._manifest_tries > self.max_retries:
             self._fail(f"manifest:{reason}")
@@ -262,14 +272,31 @@ class SegmentFetcher:
             self.net.schedule(self._rto(), self._express_manifest)
         else:
             self.stats["timeouts"] += 1
-            self._backoff = min(self._backoff * 2, 64.0)
+            self._bump_backoff()
             self._express_manifest()
+
+    def _express_single(self) -> None:
+        self._single_tries += 1
+        lifetime = (self.single_lifetime if self.single_lifetime
+                    is not None else self._rto() * self.lifetime_factor * 2)
+        self.consumer.express(
+            Interest(name=self.name, lifetime=lifetime),
+            on_data=self._on_single,
+            on_fail=lambda r: self._fail(f"single:{r}"),
+            retries=self.single_retries)
 
     def _on_single(self, d: Data) -> None:
         if self.state != "single":
             return
         if self.verify_key is not None and not verify_data(d, self.verify_key):
-            self._fail("single-signature")
+            # corrupted in flight: re-fetch (must_be_fresh-less name may be
+            # served verified from an uncorrupted path or the origin)
+            if self._single_tries <= self.max_retries:
+                self._trace("single-bad-signature")
+                self._bump_backoff()
+                self.net.schedule(self._rto(), self._express_single)
+            else:
+                self._fail("single-signature")
             return
         self._finish(bytes(d.content))
 
@@ -337,7 +364,7 @@ class SegmentFetcher:
             self.stats["nacks"] += 1
         else:
             self.stats["timeouts"] += 1
-            self._backoff = min(self._backoff * 2, 64.0)
+            self._bump_backoff()
         if n > self.max_retries:
             self._fail(f"seg={i}:{reason}")
             return

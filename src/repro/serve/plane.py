@@ -49,7 +49,8 @@ from ..core.forwarder import Consumer, Forwarder, Network
 from ..core.jobs import PROMPT_FIELD, SESSION_FIELD
 from ..core.matchmaker import ServiceEndpoint
 from ..core.names import serve_session_name
-from ..core.packets import Interest
+from ..core.packets import Interest, verify_trusted
+from ..core.resilience import SESSION_EXPRESS, SESSION_RESUBMIT, RetryPolicy
 from ..datalake.fetch import SegmentFetcher
 from ..datalake.kv import (chunk_name, longest_cached_prefix, prompt_name,
                            publish_prefix_blocks, publish_prompt,
@@ -272,7 +273,8 @@ class SessionClient:
     def __init__(self, net: Network, node: Forwarder, lake, *,
                  name: str = "serve-client", lifetime: float = 2.0,
                  poll_interval: float = 0.05, stall_timeout: float = 3.0,
-                 max_resubmits: int = 8):
+                 max_resubmits: int = SESSION_RESUBMIT.max_retries,
+                 express_policy: RetryPolicy = SESSION_EXPRESS):
         self.net = net
         self.node = node
         self.lake = lake
@@ -281,6 +283,7 @@ class SessionClient:
         self.poll_interval = poll_interval
         self.stall_timeout = stall_timeout
         self.max_resubmits = max_resubmits
+        self.express_policy = express_policy
         self.sessions: Dict[str, SessionResult] = {}
 
     # ----------------------------------------------------------------- api
@@ -307,6 +310,17 @@ class SessionClient:
     def _express(self, name, res: SessionResult,
                  receipt_only: bool = False) -> None:
         def on_receipt(d) -> None:
+            if verify_trusted(d) is False:
+                # corrupted receipt caught by the HMAC: a streaming
+                # session recovers via the chunk poll/stall loop; a
+                # receipt-only session must re-express itself
+                if (receipt_only and not res.finished
+                        and res.resubmits < self.max_resubmits):
+                    res.resubmits += 1
+                    self.net.schedule(1.1,
+                                      lambda: self._express(name, res,
+                                                            receipt_only=True))
+                return
             payload = d.json()
             res.receipt_cluster = payload.get("cluster")
             if not receipt_only or res.finished:
@@ -330,7 +344,8 @@ class SessionClient:
 
         self.consumer.express(
             Interest(name=name, lifetime=self.lifetime, must_be_fresh=True),
-            on_data=on_receipt, on_fail=on_fail, retries=8)
+            on_data=on_receipt, on_fail=on_fail,
+            retries=self.express_policy.max_retries)
 
     def _poll(self, name, res: SessionResult, max_new: int, *,
               idx: int, last_progress: float) -> None:
@@ -340,6 +355,13 @@ class SessionClient:
 
         def on_chunk(d) -> None:
             if res.finished:
+                return
+            if verify_trusted(d) is False:
+                # a byte-flipped chunk must never enter the stream; treat
+                # it as a miss so the poll loop re-expresses this index
+                # (the CS admission gate keeps the garbage uncached, so
+                # the retry reaches verified bytes)
+                on_miss("corrupt-chunk")
                 return
             payload = d.json()
             if idx not in res.tokens:

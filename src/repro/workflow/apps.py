@@ -235,7 +235,8 @@ def workflow_endpoints(log: Optional[ExecutionLog] = None
 def build_workflow_fleet(n_clusters: int = 3, *, chips: int = 4,
                          strategy: Optional[Strategy] = None,
                          latencies: Optional[Sequence[float]] = None,
-                         segment_size: Optional[int] = None
+                         segment_size: Optional[int] = None,
+                         engine: str = "calendar"
                          ) -> Tuple[LidcSystem, ExecutionLog]:
     """A LIDC overlay whose clusters serve the workflow apps.
 
@@ -243,7 +244,7 @@ def build_workflow_fleet(n_clusters: int = 3, *, chips: int = 4,
     executor-invocation ground truth tests assert exactly-once and
     cache-hit behaviour against.
     """
-    system = LidcSystem(strategy=strategy)
+    system = LidcSystem(strategy=strategy, engine=engine)
     if segment_size is not None:
         system.lake.segment_size = max(1, int(segment_size))
     log = ExecutionLog()

@@ -29,7 +29,8 @@ from typing import Any, Dict, List, Optional, Tuple
 from ..core import reasons
 from ..core.forwarder import Consumer, Forwarder, Network
 from ..core.names import Name
-from ..core.packets import Data, Interest
+from ..core.packets import Data, Interest, verify_trusted
+from ..core.resilience import ENGINE_BUSY, ENGINE_NOROUTE, RetryPolicy
 from ..datalake.fetch import SegmentFetcher
 from .dag import StageInstance, Workflow
 
@@ -108,7 +109,9 @@ class WorkflowEngine:
                  express_retries: int = 3,
                  max_stage_attempts: int = 4,
                  fetch_sink_results: bool = True,
-                 completion_model=None):
+                 completion_model=None,
+                 noroute_policy: RetryPolicy = ENGINE_NOROUTE,
+                 busy_policy: RetryPolicy = ENGINE_BUSY):
         self.net = net
         self.consumer = Consumer(net, node, name=name)
         self.poll_interval = poll_interval
@@ -116,6 +119,13 @@ class WorkflowEngine:
         self.express_retries = express_retries
         self.max_stage_attempts = max_stage_attempts
         self.fetch_sink_results = fetch_sink_results
+        # named retry schedules (core/resilience.py): free no-route
+        # retries while routes gossip, and busy backoff whose delays are
+        # in units of the poll interval — the defaults reproduce the old
+        # hard-coded 3 / 4-with-linear-backoff behavior exactly
+        self.noroute_policy = noroute_policy
+        self.busy_policy = busy_policy
+        self._busy_delays = busy_policy.scaled(poll_interval)
         # optional repro.core.scheduler.CompletionModel: observed stage
         # durations feed the paper's §VII completion-time intelligence
         self.completion_model = completion_model
@@ -165,7 +175,15 @@ class WorkflowEngine:
     def _on_receipt(self, run: WorkflowRun, sr: _StageRun, d: Data) -> None:
         if sr.status not in (StageStatus.SUBMITTED,):
             return  # late duplicate (e.g. multicast twin) — already handled
-        receipt = d.json()
+        if verify_trusted(d) is False:
+            # corrupted receipt (wire byte-flip caught by the HMAC): the
+            # pending state is already consumed, so silently ignoring
+            # would hang the stage — treat it as a failed submit attempt
+            return self._on_submit_fail(run, sr, "corrupt-receipt")
+        try:
+            receipt = d.json()
+        except (ValueError, UnicodeDecodeError):
+            return self._on_submit_fail(run, sr, "corrupt-receipt")
         sr.receipt = receipt
         sr.cluster = receipt.get("cluster")
         self._trace(run, "receipt", sr.inst.id,
@@ -184,7 +202,8 @@ class WorkflowEngine:
         if sr.status != StageStatus.SUBMITTED:
             return
         self._trace(run, "submit-fail", sr.inst.id, reason)
-        if reasons.is_no_route_failure(reason) and sr.noroute_retries < 3:
+        if (reasons.is_no_route_failure(reason)
+                and self.noroute_policy.allows(sr.noroute_retries + 1)):
             # the overlay hasn't converged on this prefix yet (clusters
             # join by advertising — zero pre-configuration means a stage
             # can race the gossip): re-express without burning one of the
@@ -192,16 +211,17 @@ class WorkflowEngine:
             # a status loss mid-run is a real recovery attempt.
             sr.noroute_retries += 1
             sr.attempts -= 1
-        elif reasons.is_busy_failure(reason) and sr.busy_retries < 4:
+        elif (reasons.is_busy_failure(reason)
+                and self.busy_policy.allows(sr.busy_retries + 1)):
             # every reachable cluster quoted a busy receipt: the fleet is
-            # saturated, not broken.  Back off one poll interval and
+            # saturated, not broken.  Back off on the busy schedule and
             # re-express without burning a crash-recovery attempt — the
             # re-expressed Interest re-ranks by the quoted ETAs (and by
             # then some cluster's queue has drained or spilled).
             sr.busy_retries += 1
             sr.attempts -= 1
             self._retry_or_fail(run, sr, f"submit:{reason}",
-                                delay=self.poll_interval * sr.busy_retries)
+                                delay=self._busy_delays.delay(sr.busy_retries))
             return
         self._retry_or_fail(run, sr, f"submit:{reason}")
 
@@ -250,7 +270,16 @@ class WorkflowEngine:
                    d: Data) -> None:
         if sr.status != StageStatus.RUNNING or sr.attempts != attempt:
             return
-        payload = d.json()
+        if verify_trusted(d) is False:
+            # corrupted status payload: poll again rather than acting on
+            # garbage (the CS admission gate keeps it out of caches)
+            self._schedule_poll(run, sr, delay=self.poll_interval)
+            return
+        try:
+            payload = d.json()
+        except (ValueError, UnicodeDecodeError):
+            self._schedule_poll(run, sr, delay=self.poll_interval)
+            return
         state = payload.get("state")
         if state == "Completed":
             self._complete(run, sr)

@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import random
 from dataclasses import dataclass, field
-from typing import List, Optional, Sequence, Tuple
+from typing import Any, List, Optional, Sequence, Tuple
 
 from ..core.forwarder import Face, Network
 from ..core.overlay import Overlay
@@ -106,3 +106,108 @@ class FaultInjector:
                     f.jitter = 0.0
 
             self._at(stop, "delay-stop", label, end)
+
+    # ---------------------------------------------------------- gray faults
+    def flap_link(self, faces: Sequence[Face], period: float, *,
+                  start: float, stop: float, duty: float = 0.5) -> None:
+        """Square-wave the faces up/down: down for ``duty * period``, up
+        for the rest, phase anchored at ``start`` — fully deterministic
+        (no RNG), so two runs flap at identical virtual instants.  The
+        link always ends *up* at ``stop``."""
+        faces = tuple(faces)
+        label = f"period={period}"
+
+        def set_down(flag: bool) -> None:
+            for f in faces:
+                f.down = flag
+
+        t = start
+        while t < stop:
+            self._at(t, "flap-down", label, lambda: set_down(True))
+            up_at = min(t + duty * period, stop)
+            self._at(up_at, "flap-up", label, lambda: set_down(False))
+            t += period
+        self._at(stop, "flap-end", label, lambda: set_down(False))
+
+    def one_way_partition(self, overlay: Overlay, name: str, *,
+                          at: float, heal_at: Optional[float] = None,
+                          direction: str = "egress") -> None:
+        """Asymmetric partition of a cluster's overlay link: only one
+        direction goes dark.  ``egress`` kills the gateway->edge side (the
+        cluster can hear but not answer); ``ingress`` kills edge->gateway
+        (it answers questions it never receives — i.e. none)."""
+        if direction not in ("egress", "ingress"):
+            raise ValueError(f"direction must be egress|ingress, "
+                             f"got {direction!r}")
+
+        def pick() -> Face:
+            edge_face, gw_face = overlay.links[name]
+            return gw_face if direction == "egress" else edge_face
+
+        label = f"{name}:{direction}"
+        self._at(at, "oneway-partition", label,
+                 lambda: setattr(pick(), "down", True))
+        if heal_at is not None:
+            self._at(heal_at, "oneway-heal", label,
+                     lambda: setattr(pick(), "down", False))
+
+    def slow_node(self, cluster: Any, factor: float, *,
+                  start: float, stop: Optional[float] = None) -> None:
+        """Gray slow node: every ExecPlan phase / job on the cluster takes
+        ``factor``x its nominal duration, while the scheduler's ETAs stay
+        optimistic until its completion model observes the stretch."""
+        label = f"{cluster.name}:x{factor}"
+        self._at(start, "slow-node", label,
+                 lambda: setattr(cluster, "time_dilation", factor))
+        if stop is not None:
+            self._at(stop, "slow-node-heal", label,
+                     lambda: setattr(cluster, "time_dilation", 1.0))
+
+    def corrupt_link(self, faces: Sequence[Face], rate: float, *,
+                     start: float, stop: Optional[float] = None) -> None:
+        """Flip one payload byte of Data packets with probability ``rate``
+        — the corruption MUST be caught by HMAC verification downstream
+        (CS admission gate + consumer checks), never silently served."""
+        self._gray_rate(faces, "corrupt", rate, start, stop)
+
+    def duplicate_link(self, faces: Sequence[Face], rate: float, *,
+                       start: float, stop: Optional[float] = None) -> None:
+        """Deliver packets twice with probability ``rate`` (the twin rides
+        one reorder-window behind) — PIT nonce dedup and idempotent
+        consumers must absorb it."""
+        self._gray_rate(faces, "duplicate", rate, start, stop)
+
+    def reorder_link(self, faces: Sequence[Face], rate: float, *,
+                     delay: float = 0.005, start: float,
+                     stop: Optional[float] = None) -> None:
+        """Hold back packets ``delay`` seconds with probability ``rate``
+        so they land behind their successors."""
+        faces = tuple(faces)
+
+        def begin() -> None:
+            for f in faces:
+                f.reorder_delay = delay
+
+        self._at(start, "reorder-delay", f"delay={delay}", begin)
+        self._gray_rate(faces, "reorder", rate, start, stop)
+
+    def _gray_rate(self, faces: Sequence[Face], attr: str, rate: float,
+                   start: float, stop: Optional[float]) -> None:
+        """Shared arm/disarm plumbing for the per-packet gray faults; the
+        per-packet decisions draw from the injector's seeded RNG in event
+        order, same contract as :meth:`lossy_link`."""
+        faces = tuple(faces)
+        label = f"rate={rate}"
+
+        def begin() -> None:
+            for f in faces:
+                setattr(f, attr, rate)
+                f.fault_rng = self.rng
+
+        self._at(start, f"{attr}-start", label, begin)
+        if stop is not None:
+            def end() -> None:
+                for f in faces:
+                    setattr(f, attr, 0.0)
+
+            self._at(stop, f"{attr}-stop", label, end)

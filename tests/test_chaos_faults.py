@@ -1,0 +1,420 @@
+"""Gray-failure chaos plane: flapping, asymmetry, slowness, corruption.
+
+Every fault class added by this PR keeps the two contracts the original
+injector established:
+
+* **replay determinism** — a fixed seed yields an identical injector
+  trace and an identical ``(t, seq)`` network event trace, run twice on
+  the calendar engine and once more on the heap engine;
+* **invariants under fire** — workflows complete, the Content Store
+  never serves corrupted bytes (the CS admission gate), flap storms
+  leave no stale FIB state behind, and brownout sheds exactly the lowest
+  priority classes.
+"""
+
+import itertools
+
+import pytest
+
+from repro.core.cluster import ComputeCluster, ExecResult
+from repro.core.compute_plane import SchedulerConfig
+from repro.core.forwarder import Consumer, Forwarder, Network, link
+from repro.core.jobs import JobSpec
+from repro.core.matchmaker import ServiceEndpoint
+from repro.core.names import Name, canonical_job_name
+from repro.core.overlay import LidcSystem, MeshTopology
+from repro.core.packets import Data, Interest, sign_data, verify_trusted
+from repro.core.strategy import AdaptiveStrategy
+from repro.core.validation import ValidatorRegistry
+from repro.workflow import FaultInjector, WorkflowEngine, WorkflowSpec
+from repro.workflow.apps import build_workflow_fleet
+
+DATASET = "/lidc/data/reads/chaos"
+
+
+# ---------------------------------------------------------------------------
+# replay determinism for every new fault class, on both engines
+# ---------------------------------------------------------------------------
+
+FAULT_KINDS = ["flap", "oneway", "slow", "corrupt", "duplicate", "reorder"]
+
+
+def _chaos_scenario(kind, engine="calendar", seed=11):
+    from repro.core import jobs
+    jobs._job_seq = itertools.count(500)   # pin ids: payloads embed them
+    system, log = build_workflow_fleet(
+        4, chips=4, engine=engine,
+        strategy=AdaptiveStrategy(probe_fanout=1, rotate_cold_probes=True))
+    system.lake.put_bytes(Name.parse(DATASET), bytes(range(256)) * 4096)
+    wf = (WorkflowSpec(f"chaos-{kind}")
+          .stage("shard", "wf-shard", inputs=[DATASET], parts=4, tag=kind)
+          .stage("align", "wf-align", inputs=["@shard"], fanout=4, tag=kind)
+          .stage("merge", "wf-merge", inputs=["@align"], tag=kind)
+          .compile())
+    eng = WorkflowEngine(system.net, system.overlay.edge)
+    inj = FaultInjector(system.net, seed=seed)
+    faces = [f for pair in system.overlay.links.values() for f in pair]
+    if kind == "flap":
+        inj.flap_link(faces[:2], period=0.2, start=0.1, stop=1.3)
+    elif kind == "oneway":
+        inj.one_way_partition(system.overlay, "wfpod0", at=0.3, heal_at=2.0)
+    elif kind == "slow":
+        inj.slow_node(system.overlay.clusters["wfpod0"], 4.0,
+                      start=0.0, stop=8.0)
+    elif kind == "corrupt":
+        inj.corrupt_link(faces, 0.15, start=0.0, stop=3.0)
+    elif kind == "duplicate":
+        inj.duplicate_link(faces, 0.25, start=0.0)
+    elif kind == "reorder":
+        inj.reorder_link(faces, 0.25, start=0.0)
+    system.net.trace = []
+    run = eng.start(wf)
+    system.net.run()
+    return run, log, inj, system.net.trace
+
+
+@pytest.mark.parametrize("kind", FAULT_KINDS)
+def test_fault_replay_is_deterministic_on_both_engines(kind):
+    run_a, log_a, inj_a, tr_a = _chaos_scenario(kind)
+    assert run_a.complete, (kind, run_a.stage_report())
+    run_b, log_b, inj_b, tr_b = _chaos_scenario(kind)
+    assert inj_a.trace == inj_b.trace
+    assert tr_a == tr_b
+    assert log_a.events == log_b.events
+    assert run_a.trace == run_b.trace
+    # the heap engine pops events in the same (time, seq) order
+    run_h, log_h, inj_h, tr_h = _chaos_scenario(kind, engine="heap")
+    assert inj_h.trace == inj_a.trace
+    assert tr_h == tr_a
+    assert log_h.events == log_a.events
+
+
+def test_different_seed_changes_the_gray_trace():
+    _, _, inj_a, tr_a = _chaos_scenario("corrupt", seed=11)
+    _, _, inj_b, tr_b = _chaos_scenario("corrupt", seed=12)
+    assert inj_a.trace == inj_b.trace      # arming schedule is seed-free
+    assert tr_a != tr_b                    # per-packet decisions are not
+
+
+# ---------------------------------------------------------------------------
+# CS poisoning: corrupted Data must never enter (or be served from) a CS
+# ---------------------------------------------------------------------------
+
+def _signed_producer(node, prefix, *, key=b"origin-key", signer="origin"):
+    calls = {"n": 0}
+
+    def handler(interest, publish, now):
+        calls["n"] += 1
+        d = Data(name=interest.name, content=b"precious-bytes",
+                 created_at=now, freshness=30.0)
+        return sign_data(d, key, signer)
+
+    node.attach_producer(Name.parse(prefix), handler)
+    return calls
+
+
+def test_corrupted_data_never_poisons_the_content_store():
+    net = Network()
+    hub = Forwarder(net, "hub")
+    leaf = Forwarder(net, "leaf")
+    hub_face, leaf_face = link(net, hub, leaf, latency=0.001)
+    calls = _signed_producer(leaf, "/lake")
+    hub.register_route(Name.parse("/lake"), hub_face)
+    inj = FaultInjector(net, seed=3)
+    # every Data leaf->hub is corrupted during the window
+    inj.corrupt_link([leaf_face], 1.0, start=0.0, stop=0.5)
+    c1 = Consumer(net, hub)
+    box1 = c1.get(Name.parse("/lake/obj"), retries=0, lifetime=0.3)
+    # the first consumer got garbage (it verifies end-to-end and would
+    # retry in real flows) — and the hub's CS refused the poisoned copy
+    assert verify_trusted(box1["data"]) is False
+    assert hub.stats["cs_poison_rejected"] >= 1
+    assert leaf_face.corruptions >= 1
+    net.run(until=1.0)                     # corruption window over
+    c2 = Consumer(net, hub)
+    box2 = c2.get(Name.parse("/lake/obj"))
+    # without the admission gate the CS would serve the cached garbage;
+    # with it, the second fetch goes back upstream and verifies
+    assert verify_trusted(box2["data"]) is True
+    assert box2["data"].content == b"precious-bytes"
+    assert leaf_face.tx_data == 2          # re-fetched upstream, not hub-CS
+    # ...and the clean copy was admitted this time
+    assert hub.cs.match(Interest(name=Name.parse("/lake/obj")),
+                        now=net.now) is not None
+
+
+def test_clean_data_still_caches_through_the_gate():
+    net = Network()
+    hub = Forwarder(net, "hub")
+    leaf = Forwarder(net, "leaf")
+    hub_face, _ = link(net, hub, leaf, latency=0.001)
+    calls = _signed_producer(leaf, "/lake")
+    hub.register_route(Name.parse("/lake"), hub_face)
+    c = Consumer(net, hub)
+    c.get(Name.parse("/lake/obj"))
+    c.get(Name.parse("/lake/obj"))
+    assert calls["n"] == 1                 # second hit served from CS
+    assert hub.stats["cs_poison_rejected"] == 0
+
+
+# ---------------------------------------------------------------------------
+# flap storm: routing settles with no stale nexthops, tombstones hold
+# ---------------------------------------------------------------------------
+
+def _mesh_serve(mesh, origin, prefix):
+    def handler(interest, publish, now):
+        return Data(name=interest.name, content=b"v", created_at=now,
+                    freshness=30.0)
+    mesh.attach_producer(origin, Name.parse(prefix), handler)
+
+
+def test_flap_storm_settles_to_bfs_oracle_and_tombstones_hold():
+    net = Network()
+    mesh = MeshTopology(net, 8, "random", seed=5)
+    _mesh_serve(mesh, 0, "/svc/gone")
+    _mesh_serve(mesh, 3, "/svc/keep")
+    mesh.converge(timeout=20.0)
+    assert mesh.is_converged()
+    inj = FaultInjector(net, seed=9)
+    # storm: three links square-wave through the withdrawal window
+    edges = [k for k in mesh.faces if k[0] < k[1]][:3]
+    for a, b in edges:
+        inj.flap_link([mesh.faces[(a, b)], mesh.faces[(b, a)]],
+                      period=0.3, start=0.0, stop=4.0)
+    net.schedule(1.5, lambda: mesh.withdraw(0, Name.parse("/svc/gone")))
+    net.run(until=4.5)
+    mesh.converge(timeout=30.0)
+    # the oracle check: reachability + min costs match global BFS, and the
+    # withdrawn prefix resurrects nowhere (flap-replayed adverts are
+    # sequence-gated by the tombstones)
+    assert mesh.is_converged()
+    for idx, node in enumerate(mesh.nodes):
+        assert not node.fib.nexthops(Name.parse("/svc/gone")), node.name
+    assert any(kind == "flap-down" for _, kind, _ in inj.trace)
+    assert inj.trace[-1][1] == "flap-end"
+
+
+# ---------------------------------------------------------------------------
+# slow node: dilated execution, optimistic ETA, organic recovery
+# ---------------------------------------------------------------------------
+
+def _sim_cluster(net, *, chips=4, config=None, log=None):
+    log = log if log is not None else []
+    cluster = ComputeCluster(net, "c0", chips=chips, max_queue_depth=8,
+                             scheduler_config=config)
+
+    def executor(job, cl):
+        log.append((job.spec.fields.get("u"), cl.name))
+        return ExecResult(payload={"ok": 1},
+                          duration=float(job.spec.fields.get("d", 1)))
+
+    cluster.add_endpoint(ServiceEndpoint(
+        service="sim.lidck8s.svc.cluster.local", app="sim",
+        max_chips=1 << 20, executor=executor))
+    return cluster, log
+
+
+def test_slow_node_stretches_execution_but_not_the_quote():
+    net = Network()
+    cluster, log = _sim_cluster(net)
+    inj = FaultInjector(net, seed=1)
+    inj.slow_node(cluster, 3.0, start=0.0, stop=10.0)
+    net.run(until=0.1)
+    job = cluster.submit(JobSpec(app="sim", fields={"chips": 4, "d": 2.0,
+                                                    "u": "slowed"}),
+                         now=net.now)
+    # the gray signature: the scheduler's release estimate stays nominal
+    rec = cluster.scheduler._running[job.job_id]
+    assert rec.expected_release == pytest.approx(net.now + 2.0)
+    net.run()
+    assert job.state.value == "Completed"
+    assert job.finished_at == pytest.approx(0.1 + 3.0 * 2.0)   # dilated
+    # healed: the next job runs at nominal speed again
+    net.run(until=10.5)
+    j2 = cluster.submit(JobSpec(app="sim", fields={"chips": 4, "d": 2.0,
+                                                   "u": "healed"}),
+                        now=net.now)
+    net.run()
+    assert j2.finished_at - j2.started_at == pytest.approx(2.0)
+    assert [u for u, _ in log] == ["slowed", "healed"]
+
+
+# ---------------------------------------------------------------------------
+# brownout: shed lowest class first, quote growing ETAs
+# ---------------------------------------------------------------------------
+
+def _brownout_system(threshold=2):
+    sys_ = LidcSystem()
+    cfg = SchedulerConfig(brownout_queue_depth=threshold)
+    cluster = ComputeCluster(sys_.net, "pod0", chips=4, lake=sys_.lake,
+                             max_queue_depth=16, scheduler_config=cfg)
+
+    def executor(job, cl):
+        return ExecResult(payload={"ok": 1},
+                          duration=float(job.spec.fields.get("d", 1)))
+
+    cluster.add_endpoint(ServiceEndpoint(
+        service="sim.lidck8s.svc.cluster.local", app="sim",
+        max_chips=1 << 20, executor=executor))
+    reg = ValidatorRegistry()
+    reg.register("sim", lambda fields, caps: None)
+    sys_.overlay.add_cluster(cluster, validators=reg)
+    sys_.net.run(until=0.2)
+    return sys_, cluster
+
+
+def _express(sys_, t, fields, outcomes, uid):
+    def submit():
+        sys_.client.consumer.express(
+            Interest(name=canonical_job_name(fields), lifetime=2.0,
+                     must_be_fresh=True),
+            on_data=lambda d: outcomes.__setitem__(uid, ("receipt", d)),
+            on_fail=lambda r: outcomes.__setitem__(uid, ("fail", r)),
+            retries=0)
+    sys_.net.schedule(max(0.0, t - sys_.net.now), submit)
+
+
+def test_brownout_sheds_lowest_class_and_admits_higher():
+    sys_, cluster = _brownout_system(threshold=2)
+    out = {}
+    # occupy the chips, then queue two background jobs -> depth 2 = level 1
+    _express(sys_, 0.30, {"app": "sim", "chips": 4, "d": 60, "u": "hog"},
+             out, "hog")
+    _express(sys_, 0.40, {"app": "sim", "chips": 4, "d": 1, "u": "q1"},
+             out, "q1")
+    _express(sys_, 0.50, {"app": "sim", "chips": 4, "d": 1, "u": "q2"},
+             out, "q2")
+    # under level-1 brownout a background arrival is shed outright...
+    _express(sys_, 0.60, {"app": "sim", "chips": 4, "d": 1, "u": "shed"},
+             out, "shed")
+    # ...while a higher class is still admitted to the queue
+    _express(sys_, 0.70, {"app": "sim", "chips": 4, "d": 1, "prio": 5,
+                          "u": "vip"}, out, "vip")
+    sys_.net.run(until=2.0)
+    assert out["hog"][0] == "receipt"
+    assert out["q1"][0] == "receipt" and out["q2"][0] == "receipt"
+    assert out["shed"][0] == "fail"
+    assert out["vip"][0] == "receipt"
+    gw = sys_.overlay.gateways["pod0"]
+    assert gw.brownouts == 1
+    shed_nack = next(n for n in sys_.client.consumer.nacks
+                     if "brownout" in n.reason)
+    assert shed_nack.info is not None
+    level = cluster.scheduler.brownout_level()
+    assert level >= 1
+    # the quoted ETA is stretched by the brownout level (busy receipts
+    # quote scheduler.eta * (1 + growth * level))
+    base_eta = cluster.scheduler.eta(
+        JobSpec(app="sim", fields={"chips": 4, "d": 1}))
+    growth = cluster.scheduler.cfg.brownout_eta_growth
+    assert shed_nack.info["eta"] == pytest.approx(
+        round(base_eta * (1 + growth * level), 6), rel=0.5)
+
+
+def test_brownout_deepens_to_higher_classes_with_queue_depth():
+    sys_, cluster = _brownout_system(threshold=1)
+    out = {}
+    _express(sys_, 0.30, {"app": "sim", "chips": 4, "d": 60, "u": "hog"},
+             out, "hog")
+    # one queued background + one queued prio-3 -> depth 2, threshold 1
+    # -> level 2: both classes {0, 3} are shed for new arrivals
+    _express(sys_, 0.40, {"app": "sim", "chips": 4, "d": 1, "u": "q0"},
+             out, "q0")
+    _express(sys_, 0.45, {"app": "sim", "chips": 4, "d": 1, "prio": 3,
+                          "u": "q3"}, out, "q3")
+    _express(sys_, 0.60, {"app": "sim", "chips": 4, "d": 1, "prio": 3,
+                          "u": "shed3"}, out, "shed3")
+    _express(sys_, 0.70, {"app": "sim", "chips": 4, "d": 1, "prio": 9,
+                          "u": "vip"}, out, "vip")
+    sys_.net.run(until=2.0)
+    assert out["shed3"][0] == "fail"
+    assert out["vip"][0] == "receipt"
+    assert sys_.overlay.gateways["pod0"].brownouts == 1
+
+
+def test_brownout_disabled_by_default_preserves_legacy_path():
+    sys_, cluster = _brownout_system(threshold=2)
+    assert SchedulerConfig().brownout_enabled is False
+    # queue admission without brownout config never sheds
+    sys2 = LidcSystem()
+    cl2 = ComputeCluster(sys2.net, "pod0", chips=4, lake=sys2.lake,
+                         max_queue_depth=16)
+    cl2.add_endpoint(ServiceEndpoint(
+        service="sim.lidck8s.svc.cluster.local", app="sim",
+        max_chips=1 << 20,
+        executor=lambda job, cl: ExecResult(payload={}, duration=1.0)))
+    reg = ValidatorRegistry()
+    reg.register("sim", lambda fields, caps: None)
+    sys2.overlay.add_cluster(cl2, validators=reg)
+    sys2.net.run(until=0.2)
+    out = {}
+    for i, t in enumerate((0.3, 0.4, 0.5, 0.6, 0.7)):
+        _express(sys2, t, {"app": "sim", "chips": 4, "d": 60, "u": f"j{i}"},
+                 out, f"j{i}")
+    sys2.net.run(until=2.0)
+    assert all(v[0] == "receipt" for v in out.values())
+    assert sys2.overlay.gateways["pod0"].brownouts == 0
+
+
+# ---------------------------------------------------------------------------
+# soft-state repair: adverts lost in-flight must heal without re-flooding
+# ---------------------------------------------------------------------------
+
+
+def _announce(mesh, origin, prefix):
+    mesh.attach_producer(origin, Name.parse(prefix),
+                         lambda interest, publish, now: Data(
+                             name=interest.name, content=b"v",
+                             created_at=now, freshness=30.0))
+
+
+def test_keepalive_digest_repairs_an_advert_eaten_by_a_lossy_link():
+    """An advertisement dropped on an *up* face (gray loss, no carrier
+    event, no hello silence) leaves the receiver permanently routeless
+    under pure keepalive refresh — keepalives extend soft state but can't
+    resurrect a route that never arrived.  The keepalive count digest
+    must detect the hole and trigger an epoch resync within one refresh
+    interval."""
+    net = Network()
+    mesh = MeshTopology(net, 2, "ring")
+    _announce(mesh, 0, "/svc/early")
+    assert mesh.converge(timeout=30)
+    inj = FaultInjector(net, seed=3)
+    t0 = net.now
+    # total loss window around the new announcement: the advert (and its
+    # retries-by-flush, if any) dies on the wire, both faces stay up
+    inj.lossy_link([mesh.faces[(0, 1)], mesh.faces[(1, 0)]], 1.0,
+                   start=t0 + 0.01, stop=t0 + 0.5)
+    net.schedule(0.05, lambda: _announce(mesh, 0, "/svc/late"))
+    net.run(until=t0 + 0.6)
+    # the blackout was shorter than any failure detector bound: node 1
+    # never declared node 0 dead, so no death-resync fixes this
+    assert not mesh.nodes[1].fib.nexthops(Name.parse("/svc/late"))
+    assert all(nb.alive for nb in mesh.agents[1].neighbors.values())
+    # one keepalive refresh cycle later the digest mismatch must have
+    # forced a resync
+    net.run(until=t0 + mesh.routing_cfg.refresh_interval + 3.0)
+    assert mesh.nodes[1].fib.nexthops(Name.parse("/svc/late"))
+    assert mesh.agents[1].stats["resyncs_requested"] >= 1
+
+
+def test_adverts_are_deferred_not_eaten_while_a_face_flaps_down():
+    """A flap window shorter than one heartbeat is invisible to the
+    carrier check: sending into the down face would record the advert as
+    delivered while the wire ate it.  The agent must hold the batch and
+    drain it once the carrier is back."""
+    net = Network()
+    mesh = MeshTopology(net, 2, "ring")
+    _announce(mesh, 0, "/svc/early")
+    assert mesh.converge(timeout=30)
+    inj = FaultInjector(net, seed=4)
+    t0 = net.now
+    # down windows of 0.05s, far below hello_interval (0.25s) and
+    # dead_interval; the announcement's triggered flush lands inside one
+    inj.flap_link([mesh.faces[(0, 1)], mesh.faces[(1, 0)]],
+                  period=0.1, start=t0 + 0.01, stop=t0 + 0.41)
+    net.schedule(0.02, lambda: _announce(mesh, 0, "/svc/late"))
+    net.run(until=t0 + 2.0)
+    assert mesh.agents[0].stats["sends_deferred"] >= 1
+    assert mesh.nodes[1].fib.nexthops(Name.parse("/svc/late"))
+    assert mesh.is_converged()

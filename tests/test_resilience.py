@@ -1,0 +1,367 @@
+"""Unified resilience policy: named schedules, budgets, breakers, hedging.
+
+Two properties anchor this file:
+
+* **legacy equivalence** — every named default in core/resilience.py
+  reproduces the hard-coded constant it replaced, both as a delay series
+  (unit tests) and end-to-end: with faults off, a scenario run under the
+  default policies and the same scenario run under explicitly-constructed
+  legacy-literal policies produce bit-identical ``(t, seq)`` event traces;
+* **determinism** — jitter, budgets and breakers advance only on the
+  virtual clock and hashed keys, never wall-clock entropy, so seeded
+  scenarios replay exactly.
+"""
+
+import pytest
+
+from repro.core.forwarder import Consumer, Forwarder, Nack, Network, link
+from repro.core.names import Name
+from repro.core.packets import Data
+from repro.core.resilience import (CONSUMER_EXPRESS, ENGINE_BUSY,
+                                   ENGINE_EXPRESS, ENGINE_NOROUTE,
+                                   ENGINE_STAGE, FETCH_BACKOFF,
+                                   NOROUTE_FAST_RETRY, SESSION_EXPRESS,
+                                   SESSION_RESUBMIT, SPILL_RETRY,
+                                   CircuitBreaker, RetryBudget, RetryPolicy)
+from repro.core.strategy import AdaptiveStrategy
+from repro.workflow import WorkflowEngine, WorkflowSpec
+from repro.workflow.apps import build_workflow_fleet
+
+
+# ---------------------------------------------------------------------------
+# named defaults == legacy literals (the auditable migration contract)
+# ---------------------------------------------------------------------------
+
+def test_noroute_policy_reproduces_legacy_backoff_series():
+    # was: st["noroute_retries"] < 6 with backoff = 0.02 * 2 ** (n - 1)
+    assert [NOROUTE_FAST_RETRY.delay(n) for n in range(1, 7)] \
+        == [0.02 * 2 ** (n - 1) for n in range(1, 7)]
+    assert NOROUTE_FAST_RETRY.allows(6) and not NOROUTE_FAST_RETRY.allows(7)
+
+
+def test_engine_busy_policy_is_linear_in_poll_interval():
+    # was: busy_retries < 4 with delay = poll_interval * busy_retries
+    for poll in (0.25, 1.0, 3.0):
+        scaled = ENGINE_BUSY.scaled(poll)
+        assert [scaled.delay(n) for n in range(1, 5)] \
+            == [poll * n for n in range(1, 5)]
+    assert ENGINE_BUSY.allows(4) and not ENGINE_BUSY.allows(5)
+
+
+def test_fetch_backoff_doubles_and_caps_at_64():
+    # was: backoff = min(backoff * 2, 64.0) starting from 1.0
+    series = [FETCH_BACKOFF.delay(n) for n in range(1, 10)]
+    assert series == [1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 64.0, 64.0]
+
+
+def test_retry_caps_match_legacy_constants():
+    assert CONSUMER_EXPRESS.max_retries == 3       # Consumer.express default
+    assert ENGINE_EXPRESS.max_retries == 3         # engine express_retries
+    assert ENGINE_NOROUTE.max_retries == 3         # engine noroute retries
+    assert ENGINE_STAGE.max_attempts == 4          # max_stage_attempts
+    assert SESSION_EXPRESS.max_retries == 8        # serve express retries
+    assert SESSION_RESUBMIT.max_retries == 8       # serve max_resubmits
+    assert SPILL_RETRY.max_retries == 1            # gateway spill attempt
+    assert FETCH_BACKOFF.max_retries == 10         # fetcher max_retries
+
+
+def test_delay_validates_and_jitter_is_deterministic():
+    p = RetryPolicy(max_retries=3, base_delay=0.1, jitter=0.5)
+    with pytest.raises(ValueError):
+        p.delay(0)
+    # same (key, retry) -> same jittered delay; different keys diverge
+    assert p.delay(2, key="a") == p.delay(2, key="a")
+    assert p.delay(2, key="a") != p.delay(2, key="b")
+    base = RetryPolicy(max_retries=3, base_delay=0.1).delay(2)
+    assert base <= p.delay(2, key="a") <= base * 1.5
+    # the default policies carry no jitter: delays are exact legacy values
+    assert NOROUTE_FAST_RETRY.jitter == 0.0
+
+
+def test_scaled_preserves_infinite_cap():
+    scaled = ENGINE_BUSY.scaled(0.25)
+    assert scaled.max_delay == float("inf")
+    assert scaled.max_retries == ENGINE_BUSY.max_retries
+    capped = FETCH_BACKOFF.scaled(2.0)
+    assert capped.max_delay == 128.0
+
+
+# ---------------------------------------------------------------------------
+# retry budgets
+# ---------------------------------------------------------------------------
+
+def test_retry_budget_spends_burst_then_denies():
+    b = RetryBudget(rate=1.0, burst=2.0)
+    assert b.try_spend("k", now=0.0)
+    assert b.try_spend("k", now=0.0)
+    assert not b.try_spend("k", now=0.0)       # burst exhausted
+    assert (b.spent, b.denied) == (2, 1)
+    assert b.try_spend("k", now=1.0)           # 1 token/s refilled
+    assert b.try_spend("other", now=0.0)       # keys are independent
+
+
+def test_retry_budget_refill_caps_at_burst():
+    b = RetryBudget(rate=100.0, burst=1.0)
+    assert b.try_spend("k", now=0.0)
+    assert b.try_spend("k", now=10.0)
+    assert not b.try_spend("k", now=10.0)      # refill capped at burst=1
+
+
+def test_consumer_timeout_retransmits_bounded_by_budget():
+    """A dry budget turns the retransmit loop into a prompt failure —
+    per-prefix amplification is bounded no matter the per-request cap."""
+    net = Network()
+    hub = Forwarder(net, "hub")
+    leaf = Forwarder(net, "leaf")
+    hub_face, _ = link(net, hub, leaf, latency=0.001)
+    leaf.attach_producer(Name.parse("/svc"),
+                         lambda interest, publish, now: None)  # silent
+    hub.register_route(Name.parse("/svc"), hub_face)
+    budget = RetryBudget(rate=0.0, burst=1.0)
+    c = Consumer(net, hub, retry_budget=budget)
+    box = c.get(Name.parse("/svc/x"), retries=5, lifetime=0.2)
+    assert "error" in box and "timeout" in box["error"]
+    assert c.expressed == 2            # initial + the single budgeted retry
+    assert budget.spent == 1 and budget.denied == 1
+
+
+# ---------------------------------------------------------------------------
+# circuit breaker
+# ---------------------------------------------------------------------------
+
+def test_breaker_opens_after_threshold_and_probes_after_cooloff():
+    br = CircuitBreaker(fail_threshold=3, cooloff=1.0)
+    for i in range(2):
+        br.record("up", ok=False, now=float(i))
+        assert br.state("up") == "closed"
+    br.record("up", ok=False, now=2.0)
+    assert br.state("up") == "open" and br.opened == 1
+    assert not br.allow("up", now=2.5)          # inside cooloff: denied
+    assert br.allow("up", now=3.0)              # cooloff over: one probe
+    assert br.state("up") == "half-open"
+    br.record("up", ok=True, now=3.1)           # probe succeeded
+    assert br.state("up") == "closed"
+    assert br.open_keys() == ()
+
+
+def test_breaker_failed_probe_reopens_with_fresh_cooloff():
+    br = CircuitBreaker(fail_threshold=1, cooloff=1.0)
+    br.record("up", ok=False, now=0.0)
+    assert br.allow("up", now=1.0)
+    br.record("up", ok=False, now=1.0)          # probe failed
+    assert br.state("up") == "open" and br.opened == 2
+    assert not br.allow("up", now=1.5)
+    assert br.allow("up", now=2.0)
+
+
+def test_breaker_stuck_half_open_readmits_probe_each_cooloff():
+    """An admitted probe that is never routed (the strategy preferred
+    another hop) must not quarantine a healed upstream forever."""
+    br = CircuitBreaker(fail_threshold=1, cooloff=1.0)
+    br.record("up", ok=False, now=0.0)
+    assert br.allow("up", now=1.0)              # probe 1 admitted, unanswered
+    assert not br.allow("up", now=1.5)          # within the probe window
+    assert br.allow("up", now=2.0)              # re-admitted, not stuck
+
+
+def test_breaker_success_forgets_failure_history():
+    br = CircuitBreaker(fail_threshold=3)
+    br.record("up", ok=False, now=0.0)
+    br.record("up", ok=False, now=0.0)
+    br.record("up", ok=True, now=0.0)
+    for _ in range(2):
+        br.record("up", ok=False, now=0.0)      # streak restarted from 0
+    assert br.state("up") == "closed"
+
+
+# ---------------------------------------------------------------------------
+# breaker wired into AdaptiveStrategy: quarantine + probe-back-in
+# ---------------------------------------------------------------------------
+
+def _producer(node, prefix, value=b"v", fail_box=None):
+    calls = {"n": 0}
+
+    def handler(interest, publish, now):
+        calls["n"] += 1
+        if fail_box is not None and fail_box.get("fail"):
+            return Nack(interest, "synthetic")
+        return Data(name=interest.name, content=value, created_at=now,
+                    freshness=10.0)
+
+    node.attach_producer(Name.parse(prefix), handler)
+    return calls
+
+
+def _star(strategy, n=3):
+    net = Network()
+    hub = Forwarder(net, "hub", strategy=strategy)
+    leaves = []
+    for i in range(n):
+        leaf = Forwarder(net, f"leaf{i}")
+        hub_face, _ = link(net, hub, leaf, latency=0.001)
+        leaves.append((leaf, hub_face))
+        hub.register_route(Name.parse("/svc"), hub_face, cost=1.0 + i)
+    return net, hub, leaves
+
+
+def test_strategy_quarantines_open_upstream_and_probes_back_in():
+    # one failure trips the circuit (the strategy's own EWMA shifts
+    # traffic before a longer streak could accumulate), and the cooloff
+    # spans several requests so the quarantine window is observable
+    breaker = CircuitBreaker(fail_threshold=1, cooloff=30.0)
+    strat = AdaptiveStrategy(probe_fanout=1, explore_every=4,
+                             breaker=breaker)
+    net, hub, leaves = _star(strat)
+    fail0 = {"fail": False}
+    calls = [_producer(leaves[0][0], "/svc", fail_box=fail0)]
+    calls += [_producer(leaf, "/svc") for leaf, _ in leaves[1:]]
+    c = Consumer(net, hub)
+    for i in range(4):
+        assert "data" in c.get(Name.parse(f"/svc/w{i}"))
+    face0 = leaves[0][1].face_id
+    # leaf0 starts NACKing: the first failure opens the circuit, and every
+    # request inside the cooloff window skips leaf0 entirely
+    fail0["fail"] = True
+    for i in range(6):
+        assert "data" in c.get(Name.parse(f"/svc/b{i}"))
+    assert breaker.state(face0) != "closed"
+    assert breaker.opened >= 1
+    assert strat.quarantine_skips > 0
+    assert calls[0]["n"] <= 4 + 2      # at most the tripping call + a probe
+    # leaf0 heals; once the cooloff expires a probe is admitted, succeeds,
+    # and closes the circuit — leaf0 (cheapest) wins traffic back
+    fail0["fail"] = False
+    healed = calls[0]["n"]
+    for i in range(30):
+        assert "data" in c.get(Name.parse(f"/svc/h{i}"))
+    assert calls[0]["n"] > healed
+    assert breaker.state(face0) == "closed"
+
+
+def test_breaker_never_blackholes_the_only_route():
+    breaker = CircuitBreaker(fail_threshold=1, cooloff=10.0)
+    strat = AdaptiveStrategy(probe_fanout=1, breaker=breaker)
+    net, hub, leaves = _star(strat, n=1)
+    flaky = {"fail": True}
+    calls = _producer(leaves[0][0], "/svc", fail_box=flaky)
+    c = Consumer(net, hub)
+    c.get(Name.parse("/svc/a"), retries=0)       # opens the breaker
+    assert breaker.state(leaves[0][1].face_id) != "closed"
+    flaky["fail"] = False
+    # sole upstream: _admit must fall back to it rather than drop to NACK
+    box = c.get(Name.parse("/svc/b"), retries=0)
+    assert box["data"].content == b"v"
+    assert calls["n"] == 2
+
+
+# ---------------------------------------------------------------------------
+# hedged Interests
+# ---------------------------------------------------------------------------
+
+def test_hedged_interest_cuts_tail_and_dedupes_loser():
+    net = Network()
+    hub = Forwarder(net, "hub")
+    slow = Forwarder(net, "slow")
+    fast = Forwarder(net, "fast")
+    f_slow, _ = link(net, hub, slow, latency=0.001)
+    f_fast, _ = link(net, hub, fast, latency=0.001)
+
+    def slow_handler(interest, publish, now):
+        d = Data(name=interest.name, content=b"slow", created_at=now,
+                 freshness=10.0)
+        net.schedule(1.0, lambda: publish(d))    # the straggler
+        return None
+
+    slow.attach_producer(Name.parse("/svc"), slow_handler)
+    _producer(fast, "/svc", value=b"fast")
+    hub.register_route(Name.parse("/svc"), f_slow, cost=1.0)  # preferred
+    hub.register_route(Name.parse("/svc"), f_fast, cost=2.0)
+    c = Consumer(net, hub)
+    got = []
+    from repro.core.packets import Interest
+    c.express(Interest(name=Name.parse("/svc/x"), lifetime=4.0),
+              on_data=lambda d: got.append((net.now, d)),
+              hedge_delay=0.05)
+    net.run()
+    assert c.hedges == 1
+    assert len(got) == 1                   # PIT deduped the race loser
+    t, d = got[0]
+    assert d.content == b"fast"
+    assert t < 0.1                         # hedged answer, not the 1s tail
+
+
+def test_hedge_noop_when_answer_beats_the_delay():
+    net = Network()
+    hub = Forwarder(net, "hub")
+    leaf = Forwarder(net, "leaf")
+    hub_face, _ = link(net, hub, leaf, latency=0.001)
+    _producer(leaf, "/svc")
+    hub.register_route(Name.parse("/svc"), hub_face)
+    c = Consumer(net, hub)
+    got = []
+    from repro.core.packets import Interest
+    c.express(Interest(name=Name.parse("/svc/x")),
+              on_data=got.append, hedge_delay=0.5)
+    net.run()
+    assert len(got) == 1 and c.hedges == 0
+    assert c.expressed == 1                # hedging cost nothing
+
+
+# ---------------------------------------------------------------------------
+# trace equivalence: default policies == explicit legacy literals
+# ---------------------------------------------------------------------------
+
+_LEGACY_NOROUTE = RetryPolicy(max_retries=6, base_delay=0.02, factor=2.0)
+_LEGACY_EXPRESS = RetryPolicy(max_retries=3)
+_LEGACY_BUSY = RetryPolicy(max_retries=4, base_delay=1.0, linear=True)
+
+
+def _noroute_trace(engine, policies):
+    """The no-route fast-retry loop, hit end-to-end: a hub with no routes
+    NACKs every Interest; the consumer walks the full backoff schedule."""
+    net = Network(engine=engine)
+    net.trace = []
+    hub = Forwarder(net, "hub")
+    c = Consumer(net, hub, **policies)
+    box = c.get(Name.parse("/nowhere/x"), lifetime=1.0)
+    assert "error" in box
+    return net.trace
+
+
+@pytest.mark.parametrize("engine", ["calendar", "heap"])
+def test_consumer_policy_migration_is_trace_identical(engine):
+    default = _noroute_trace(engine, {})
+    explicit = _noroute_trace(engine, {"noroute_policy": _LEGACY_NOROUTE,
+                                       "express_policy": _LEGACY_EXPRESS})
+    assert default == explicit and len(default) > 0
+
+
+def _workflow_trace(engine_policies):
+    # pin the process-global job-id counter so back-to-back scenarios mint
+    # identical ids (payload sizes embed them)
+    import itertools
+
+    from repro.core import jobs
+    jobs._job_seq = itertools.count(1000)
+    system, log = build_workflow_fleet(3, chips=4)
+    system.lake.put_bytes(Name.parse("/lidc/data/reads/eq"),
+                          bytes(range(256)) * 512)
+    wf = (WorkflowSpec("eq")
+          .stage("shard", "wf-shard", inputs=["/lidc/data/reads/eq"],
+                 parts=3)
+          .stage("align", "wf-align", inputs=["@shard"], fanout=3)
+          .stage("merge", "wf-merge", inputs=["@align"])
+          .compile())
+    system.net.trace = []
+    eng = WorkflowEngine(system.net, system.overlay.edge, **engine_policies)
+    run = eng.run(wf)
+    assert run.complete, run.stage_report()
+    return system.net.trace, run.trace
+
+
+def test_engine_policy_migration_is_trace_identical():
+    net_a, run_a = _workflow_trace({})
+    net_b, run_b = _workflow_trace({"noroute_policy": RetryPolicy(3),
+                                    "busy_policy": _LEGACY_BUSY})
+    assert run_a == run_b
+    assert net_a == net_b and len(net_a) > 0
