@@ -1,0 +1,304 @@
+"""Elastic map fan-out at scale: 10,000 tasks, batched vs naive, stragglers.
+
+Three scenarios for the taskmap layer:
+
+1. **Scale** — ``map_reduce`` over a 10,000-segment dataset on a
+   50-cluster fleet: delivery 1.0, exactly-once effective execution
+   (the ExecutionLog is ground truth), the reduce folding to the exact
+   global word count, and protocol overhead measured in Interests per
+   task (batched submission + coalesced polling keep it far below 1).
+2. **Submission** — wall-clock scheduler+gateway cost per task of
+   batched submission vs the naive one-Interest-per-task path, on
+   otherwise identical fleets whose jobs are too long to finish during
+   submission.  Gate: batched is >= 3x cheaper per task.
+3. **Straggler** — one cluster runs gray-slow (time_dilation): tail
+   ratio p99/p50 of per-task sojourn with speculation on vs off.
+   Gates: speculation improves the tail >= 1.5x at <= 1.15x
+   executed-task amplification.
+
+``--smoke`` runs the CI configuration, writes BENCH_taskmap.json for the
+perf-trajectory gate, and exits nonzero if any invariant regresses.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from typing import Dict, List, Optional
+
+sys.path.insert(0, "src")  # allow running as a script from the repo root
+
+from _bench_io import write_bench_json  # noqa: E402
+from repro.core.forwarder import Consumer  # noqa: E402
+from repro.core.jobs import INPUTS_FIELD, encode_input_names  # noqa: E402
+from repro.core.names import (DATA_PREFIX, Name,  # noqa: E402
+                              canonical_job_name)
+from repro.core.packets import Interest  # noqa: E402
+from repro.workflow.taskmap import (MAP_APP,  # noqa: E402
+                                    TaskMapExecutor, build_taskmap_fleet)
+
+DATASET = Name.parse(DATA_PREFIX).append("text", "corpus")
+RECORD = b"alpha bravo charlie delta echo foxtrot golf hotel indigo juliet "
+WORDS_PER_RECORD = 10
+SEGMENT = 4096                            # 64 records per segment
+RECORDS_PER_SEGMENT = SEGMENT // len(RECORD)
+
+
+def build(n_clusters: int, chips: int, segments: int):
+    system, log = build_taskmap_fleet(n_clusters, chips=chips,
+                                      segment_size=SEGMENT)
+    system.lake.put_bytes(DATASET, RECORD * (RECORDS_PER_SEGMENT * segments))
+    system.net.run(until=system.net.now + 5)      # routes gossip
+    return system, log
+
+
+def percentile(sorted_vals: List[float], q: float) -> float:
+    if not sorted_vals:
+        return 0.0
+    idx = min(len(sorted_vals) - 1, int(q * (len(sorted_vals) - 1) + 0.5))
+    return sorted_vals[idx]
+
+
+# ---------------------------------------------------------------------------
+# scenario 1: the 10,000-task hot path
+# ---------------------------------------------------------------------------
+
+def scenario_scale(n_clusters: int, chips: int, tasks: int
+                   ) -> Dict[str, object]:
+    t0 = time.perf_counter()
+    system, log = build(n_clusters, chips, segments=tasks)
+    tm = TaskMapExecutor.for_system(system, batch_size=128)
+    run = tm.map_reduce("wordcount", "wordcount-reduce", DATASET)
+    assert run.failed is None, run.failed
+    expect = tasks * RECORDS_PER_SEGMENT * WORDS_PER_RECORD
+    wall = time.perf_counter() - t0
+    return {
+        "scenario": "scale",
+        "clusters": n_clusters, "tasks": tasks,
+        "delivery": run.delivery,
+        "executions": log.total,
+        "exactly_once": log.reexecuted() == {},
+        "reduce_ok": (run.reduce_result or {}).get("count") == expect,
+        "clusters_used": len(log.clusters_used()),
+        "makespan_s": round(run.makespan or -1.0, 4),
+        "submit_interests": tm.submit_interests,
+        "status_interests": tm.status_interests,
+        "interests_per_task": round(
+            (tm.submit_interests + tm.status_interests) / tasks, 4),
+        "wall_s": round(wall, 3),
+        "wall_us_per_task": round(wall / tasks * 1e6, 1),
+    }
+
+
+# ---------------------------------------------------------------------------
+# scenario 2: batched vs naive submission overhead
+# ---------------------------------------------------------------------------
+
+def _template(tasks: int) -> Dict[str, object]:
+    return {"app": MAP_APP, "fn": "wordcount",
+            INPUTS_FIELD: encode_input_names([DATASET]),
+            "parts": tasks, "segs": tasks, "spt": 1, "cost": 60.0}
+
+
+def _drive_until(system, done) -> None:
+    guard = 0
+    while not done() and guard < 10_000:
+        system.net.run(until=system.net.now + 0.25)
+        guard += 1
+    assert done(), "submission never completed"
+
+
+def _saturated_fleet(n_clusters: int, chips: int, segments: int):
+    """A fleet whose every chip is pinned by a hog job, so submissions
+    park Pending and the measurement isolates scheduler+gateway
+    admission cost (matchmaking, dispatch, ETA quoting, receipts) from
+    task start-up."""
+    from repro.core.cluster import ExecResult
+    from repro.core.jobs import JobSpec
+    from repro.core.matchmaker import ServiceEndpoint
+
+    system, _ = build(n_clusters, chips, segments=segments)
+    for cluster in system.overlay.clusters.values():
+        cluster.add_endpoint(ServiceEndpoint(
+            service="hog.svc", app="hog",
+            executor=lambda job, cl: ExecResult(payload={}, duration=3600.0)))
+        cluster.submit(JobSpec(app="hog", fields={"chips": chips}),
+                       system.net.now)
+        assert cluster.free_chips == 0
+    return system
+
+
+def _submit_batched(n_clusters: int, chips: int, tasks: int) -> float:
+    system = _saturated_fleet(n_clusters, chips, segments=tasks)
+    tm = TaskMapExecutor.for_system(system, batch_size=128)
+    t0 = time.perf_counter()
+    run = tm.start_map("wordcount", DATASET, cost=60.0)
+    _drive_until(system, lambda: run.submit_done_at is not None
+                 or run.failed is not None)
+    assert run.failed is None, run.failed
+    wall = time.perf_counter() - t0
+    admitted = sum(len(c.jobs) for c in system.overlay.clusters.values())
+    assert admitted >= tasks, f"only {admitted}/{tasks} admitted"
+    return wall / tasks
+
+
+def _submit_naive(n_clusters: int, chips: int, tasks: int) -> float:
+    system = _saturated_fleet(n_clusters, chips, segments=tasks)
+    consumer = Consumer(system.net, system.overlay.edge, name="naive")
+    template = _template(tasks)
+    got = {"n": 0}
+
+    def receipt(_d) -> None:
+        got["n"] += 1
+
+    t0 = time.perf_counter()
+    for part in range(tasks):
+        consumer.express(
+            Interest(name=canonical_job_name({**template, "part": part}),
+                     lifetime=4.0, must_be_fresh=True),
+            on_data=receipt,
+            on_fail=lambda r: (_ for _ in ()).throw(
+                AssertionError(f"naive submit failed: {r}")),
+            retries=3)
+    _drive_until(system, lambda: got["n"] >= tasks)
+    return (time.perf_counter() - t0) / tasks
+
+
+def scenario_submission(n_clusters: int, chips: int, tasks: int,
+                        naive_tasks: int) -> Dict[str, object]:
+    t0 = time.perf_counter()
+    batched = _submit_batched(n_clusters, chips, tasks)
+    naive = _submit_naive(n_clusters, chips, naive_tasks)
+    return {
+        "scenario": "submission",
+        "clusters": n_clusters,
+        "batched_tasks": tasks, "naive_tasks": naive_tasks,
+        "batched_us_per_task": round(batched * 1e6, 1),
+        "naive_us_per_task": round(naive * 1e6, 1),
+        "speedup": round(naive / batched, 2),
+        "wall_s": round(time.perf_counter() - t0, 3),
+    }
+
+
+# ---------------------------------------------------------------------------
+# scenario 3: speculative straggler re-execution
+# ---------------------------------------------------------------------------
+
+def _straggler_run(n_clusters: int, chips: int, tasks: int,
+                   speculation: bool):
+    system, log = build(n_clusters, chips, segments=tasks)
+    tm = TaskMapExecutor.for_system(system, batch_size=tasks // n_clusters,
+                                    speculation=speculation)
+    system.overlay.clusters["tmpod1"].time_dilation = 10.0
+    run = tm.map("wordcount", DATASET, cost=2.0)
+    assert run.failed is None, run.failed
+    assert run.delivery == 1.0
+    sojourns = sorted(t - run.started_at for t in run.done.values())
+    return run, log, sojourns
+
+
+def scenario_straggler(n_clusters: int, chips: int, tasks: int
+                       ) -> Dict[str, object]:
+    t0 = time.perf_counter()
+    run_on, log_on, s_on = _straggler_run(n_clusters, chips, tasks, True)
+    _run_off, log_off, s_off = _straggler_run(n_clusters, chips, tasks, False)
+    tail_on = percentile(s_on, 0.99) / max(percentile(s_on, 0.50), 1e-9)
+    tail_off = percentile(s_off, 0.99) / max(percentile(s_off, 0.50), 1e-9)
+    return {
+        "scenario": "straggler",
+        "clusters": n_clusters, "tasks": tasks,
+        "p99_over_p50_spec_on": round(tail_on, 3),
+        "p99_over_p50_spec_off": round(tail_off, 3),
+        "tail_improvement": round(tail_off / tail_on, 3),
+        "speculated": len(run_on.speculated),
+        "spec_wins": run_on.spec_wins,
+        "amplification": round(log_on.total / tasks, 4),
+        "executions_spec_off": log_off.total,
+        "wall_s": round(time.perf_counter() - t0, 3),
+    }
+
+
+# ---------------------------------------------------------------------------
+# entry point
+# ---------------------------------------------------------------------------
+
+def main(argv: Optional[list] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run; exit nonzero if invariants regress")
+    ap.add_argument("--clusters", type=int, default=None)
+    ap.add_argument("--tasks", type=int, default=None)
+    ap.add_argument("--json", action="store_true", help="JSON-lines output")
+    args = ap.parse_args(argv)
+
+    n = args.clusters or 50
+    tasks = args.tasks or 10_000
+    naive_tasks = 2_000 if args.smoke else tasks
+
+    results = [
+        scenario_scale(n, 200, tasks),
+        scenario_submission(n, 200, tasks, naive_tasks),
+        scenario_straggler(8, 32, 256),
+    ]
+    for r in results:
+        if args.json:
+            print(json.dumps(r))
+        else:
+            head = r.pop("scenario")
+            print(f"[{head}] " + " ".join(f"{k}={v}" for k, v in r.items()))
+            r["scenario"] = head
+
+    by = {r["scenario"]: r for r in results}
+    if args.smoke:
+        # perf-trajectory artifact: baselines capped at 1.25x the hard
+        # gate floor so machine noise never fails the 20% regression gate
+        write_bench_json(
+            "taskmap",
+            ["delivery", "submission_speedup", "straggler_tail_improvement"],
+            {"delivery": float(by["scale"]["delivery"]),
+             "submission_speedup": min(float(by["submission"]["speedup"]),
+                                       3.0 * 1.25),
+             "submission_speedup_measured": float(by["submission"]["speedup"]),
+             "straggler_tail_improvement": min(
+                 float(by["straggler"]["tail_improvement"]), 1.5 * 1.25),
+             "straggler_tail_improvement_measured": float(
+                 by["straggler"]["tail_improvement"]),
+             "interests_per_task": float(by["scale"]["interests_per_task"]),
+             "amplification": float(by["straggler"]["amplification"])},
+            "BENCH_taskmap.json")
+
+    failures = []
+    if by["scale"]["delivery"] != 1.0:
+        failures.append(f"scale: delivery {by['scale']['delivery']} != 1.0")
+    if not by["scale"]["exactly_once"]:
+        failures.append("scale: a task executed more than once")
+    if not by["scale"]["reduce_ok"]:
+        failures.append("scale: reduce produced the wrong global count")
+    if by["scale"]["interests_per_task"] >= 1.0:
+        failures.append("scale: protocol overhead >= 1 Interest per task")
+    if by["submission"]["speedup"] < 3.0:
+        failures.append(
+            f"submission: batched only {by['submission']['speedup']}x "
+            "cheaper than naive (< 3x)")
+    if by["straggler"]["tail_improvement"] < 1.5:
+        failures.append(
+            f"straggler: tail improvement {by['straggler']['tail_improvement']}"
+            " < 1.5x")
+    if by["straggler"]["amplification"] > 1.15:
+        failures.append(
+            f"straggler: amplification {by['straggler']['amplification']}"
+            " > 1.15x")
+
+    if failures:
+        print("\nINVARIANT FAILURES:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print(f"\nall taskmap invariants hold ({n} clusters, {tasks} tasks)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -23,8 +23,8 @@ from .compute_plane import ClusterScheduler, SchedulerConfig
 from .forwarder import Forwarder, Network
 from .jobs import Job, JobSpec
 from .matchmaker import Matchmaker, ServiceEndpoint
-from .names import (COMPUTE_PREFIX, DATA_PREFIX, SERVE_PREFIX, STATUS_PREFIX,
-                    Name)
+from .names import (BATCH_PREFIX, COMPUTE_PREFIX, DATA_PREFIX, SERVE_PREFIX,
+                    STATUS_PREFIX, Name)
 
 __all__ = ["ComputeCluster", "ExecResult", "ExecPlan"]
 
@@ -187,6 +187,15 @@ class ComputeCluster:
                 if str(generic) not in seen:
                     seen.add(str(generic))
                     prefixes.append(generic)
+                # batched submission rides the same capability: any
+                # cluster that can run <app> jobs can fan a batch of
+                # them out internally (sessions are inherently per-
+                # client, so the serve app does not batch)
+                if e.app != "serve":
+                    batch = Name.parse(BATCH_PREFIX).append(e.app)
+                    if str(batch) not in seen:
+                        seen.add(str(batch))
+                        prefixes.append(batch)
                 for arch in e.archs:
                     refined = generic.append(arch)
                     if str(refined) not in seen:
@@ -275,6 +284,40 @@ class ComputeCluster:
         self.jobs[job.job_id] = job
         scheduler.admit(job, endpoint, grant)
         return job
+
+    def submit_batch(self, specs: List[JobSpec], now: float,
+                     on_admitted: Optional[Callable[[List[Job]], None]] = None
+                     ) -> List[Job]:
+        """Admit a *homogeneous* batch: one matchmaking decision and one
+        run estimate for the template, O(1) bookkeeping per member.
+
+        ``on_admitted(jobs)`` — when given — runs after the members are
+        registered in :attr:`jobs` but *before* the scheduler dispatches
+        them, so callers (the gateway's batch bookkeeping) observe every
+        completion hook, including members that finish synchronously
+        during dispatch."""
+        if not specs:
+            return []
+        scheduler = self.scheduler
+        template = specs[0]
+        endpoint, grant = self.matchmaker.match(
+            template, self.endpoints, self.free_chips,
+            queue_depth=scheduler.queue_depth,
+            total_chips=self.chips,
+            advertised=self.capability_record(),
+            eta_fn=lambda e, g: scheduler.run_estimate(template)
+                                * (1.0 + e.running))
+        est = scheduler.run_estimate(template)
+        jobs = []
+        for spec in specs:
+            job = Job(spec=spec, cluster=self.name, submitted_at=now,
+                      granted_chips=grant, endpoint=endpoint.service)
+            self.jobs[job.job_id] = job
+            jobs.append(job)
+        if on_admitted is not None:
+            on_admitted(jobs)
+        scheduler.admit_batch(jobs, endpoint, grant, est)
+        return jobs
 
     # -- failure injection ----------------------------------------------------
     def fail(self) -> None:

@@ -152,6 +152,12 @@ class ClusterScheduler:
         self._queue: List[_Queued] = []
         self._running: Dict[str, _Running] = {}
         self._seq = itertools.count(1)
+        # dispatch reentrancy: a synchronously failing executor finishes
+        # inside _start and recursively re-dispatches; the guard folds
+        # that into the outer loop so the outer pass never works from a
+        # stale snapshot of the queue
+        self._dispatching = False
+        self._redispatch = False
         # observers: gateway evicts its dedupe map, benchmarks count, ...
         self.on_job_done: List[Callable[[Job], None]] = []
         self.stats = {"started": 0, "completed": 0, "failed": 0,
@@ -252,6 +258,22 @@ class ClusterScheduler:
         etas, _ = self._simulate()
         return etas.get(job_id)
 
+    def queued_etas(self) -> Dict[str, float]:
+        """One chip-timeline replay for *all* queued jobs — callers
+        answering a multi-job status poll pay the O(queue log queue)
+        simulation once instead of once per job."""
+        etas, _ = self._simulate()
+        return etas
+
+    def running_started(self) -> Dict[str, float]:
+        """start time of every on-chip job — the straggler signal batch
+        status answers carry (a task's on-chip age, not its queue age,
+        is what speculation should trigger on)."""
+        now = self.net.now
+        return {jid: (rec.job.started_at
+                      if rec.job.started_at is not None else now)
+                for jid, rec in self._running.items()}
+
     def eta_p50(self) -> float:
         """Median predicted completion over currently queued jobs — the
         load signal ``capability_record()`` gossips.  0 when nothing
@@ -326,17 +348,59 @@ class ClusterScheduler:
         self._queue.append(q)
         self._dispatch()
 
+    def admit_batch(self, jobs: List[Job], endpoint, grant: int,
+                    run_estimate: float) -> None:
+        """Admit homogeneous batch members in one call: the run estimate
+        and grant were computed once for the template, so admission is
+        O(1) bookkeeping per member plus ONE dispatch pass — not a
+        per-job completion-model predict and queue re-sort."""
+        now = self.net.now
+        for job in jobs:
+            self._queue.append(_Queued(job=job, endpoint=endpoint,
+                                       grant=grant,
+                                       priority=job.spec.priority,
+                                       enqueued_at=now,
+                                       seq=next(self._seq),
+                                       run_estimate=run_estimate))
+        self._dispatch()
+
     # ----------------------------------------------------------- dispatch
     def _dispatch(self) -> None:
         if not self.cluster.alive:
             return
+        if self._dispatching:
+            # a synchronous finish inside _start re-entered us: flag the
+            # outer pass to re-sort instead of nesting
+            self._redispatch = True
+            return
+        self._dispatching = True
+        try:
+            while True:
+                self._redispatch = False
+                self._dispatch_pass()
+                if not self._redispatch:
+                    break
+        finally:
+            self._dispatching = False
+        self._reconcile_preempt_marks()
+        self.cluster._load_changed()
+
+    def _dispatch_pass(self) -> None:
+        """One pass over the priority order, sorted ONCE: virtual time
+        cannot advance within a pass, so effective priorities (and hence
+        the sort) are invariant until something starts or finishes — a
+        10k-member batch admission dispatches in O(n log n), not the
+        O(n² log n) of re-sorting per started job."""
+        now = self.net.now
+        order = self._ordered(now)
         progress = True
-        while progress and self._queue:
+        while progress and order:
+            if self._redispatch:
+                return      # sync finish mutated the queue: re-sort
             progress = False
-            now = self.net.now
-            order = self._ordered(now)
             head = order[0]
             if head.grant <= self.cluster.free_chips:
+                order.pop(0)
                 self._queue.remove(head)
                 self._start(head)
                 progress = True
@@ -347,15 +411,15 @@ class ClusterScheduler:
             if now - head.enqueued_at <= self.cfg.starvation_age:
                 # backfill around the head — but only while it is young;
                 # an aged head reserves every freed chip until it fits
-                for q in order[1:]:
+                for i in range(1, len(order)):
+                    q = order[i]
                     if q.grant <= self.cluster.free_chips:
+                        order.pop(i)
                         self._queue.remove(q)
                         self._start(q)
                         self.stats["backfills"] += 1
                         progress = True
                         break
-        self._reconcile_preempt_marks()
-        self.cluster._load_changed()
 
     def _reconcile_preempt_marks(self) -> None:
         """Unmark victims whose chips are no longer needed — the blocked

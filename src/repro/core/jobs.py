@@ -19,9 +19,11 @@ from .names import DATA_PREFIX, Name, canonical_job_name
 
 __all__ = ["JobState", "JobSpec", "Job", "result_name_for",
            "INPUTS_FIELD", "PRIORITY_FIELD", "SPILL_FIELD",
+           "AVOID_FIELD", "TRANSPORT_FIELDS",
            "SESSION_FIELD", "PROMPT_FIELD",
            "encode_input_names", "decode_input_names",
-           "encode_spill_path", "decode_spill_path"]
+           "encode_spill_path", "decode_spill_path",
+           "compress_ranges", "expand_ranges"]
 
 # Job field carrying the data-lake names a computation reads (workflow
 # stages use this; the field is part of the canonical name, so the same
@@ -50,6 +52,42 @@ PROMPT_FIELD = "p"
 # the job's signature so a spilled request keeps the canonical result
 # name (and result-cache identity) of the original.
 SPILL_FIELD = "spill"
+
+# Speculation steering: a speculative re-execution of a straggling task
+# carries the cluster(s) believed to be slow (":"-joined, same codec as
+# spill=).  A gateway whose cluster appears in the list answers Busy so
+# the strategy routes the duplicate elsewhere.  Like spill=, this is
+# transport metadata — excluded from the signature so the duplicate keeps
+# the original's canonical result name, and the result cache makes the
+# race winner exactly-once.
+AVOID_FIELD = "avoid"
+
+# Fields that steer *where* a request runs, not *what* it computes — all
+# excluded from JobSpec.signature().
+TRANSPORT_FIELDS = frozenset({SPILL_FIELD, AVOID_FIELD})
+
+
+def compress_ranges(parts):
+    """Compress sorted-able part indices into [lo, hi) pairs.
+
+    ``[0, 1, 2, 5, 7, 8] -> [[0, 3], [5, 6], [7, 9]]`` — the compact
+    form batch receipts and batch status answers carry so a 10k-member
+    done-set serializes in O(ranges), not O(members)."""
+    out = []
+    for p in sorted(set(int(p) for p in parts)):
+        if out and p == out[-1][1]:
+            out[-1][1] = p + 1
+        else:
+            out.append([p, p + 1])
+    return out
+
+
+def expand_ranges(ranges):
+    """Invert :func:`compress_ranges` back into a sorted index list."""
+    out = []
+    for lo, hi in ranges:
+        out.extend(range(int(lo), int(hi)))
+    return out
 
 
 def encode_spill_path(path) -> str:
@@ -137,10 +175,13 @@ class JobSpec:
     def signature(self) -> str:
         """Stable identity of the *work* (drives caching & the scheduler).
 
-        The hop-carried spill path is transport metadata, not work: a
-        request shed across clusters keeps the original's signature, so
+        Transport fields (the hop-carried spill path, the speculation
+        avoid list) steer *where* the work lands, not what it computes:
+        a request shed across clusters — or speculatively re-executed
+        away from a straggler — keeps the original's signature, so
         result caching and dedupe see one computation."""
-        fields = {k: v for k, v in self.fields.items() if k != SPILL_FIELD}
+        fields = {k: v for k, v in self.fields.items()
+                  if k not in TRANSPORT_FIELDS}
         name = canonical_job_name({"app": self.app, **fields})
         return hashlib.sha256(str(name).encode()).hexdigest()[:16]
 

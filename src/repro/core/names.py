@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import re
 import sys
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Any, Dict, Iterable, Mapping, Optional, Tuple
 
@@ -31,13 +32,19 @@ __all__ = [
     "encode_job",
     "parse_job",
     "canonical_job_name",
+    "batch_job_name",
+    "batch_fields_of",
+    "job_fields_of",
     "serve_session_name",
     "serve_fields_of",
+    "configure_name_caches",
+    "name_cache_stats",
     "COMPUTE_PREFIX",
     "DATA_PREFIX",
     "STATUS_PREFIX",
     "CAPABILITY_PREFIX",
     "SERVE_PREFIX",
+    "BATCH_PREFIX",
 ]
 
 # Well-known prefixes, mirroring the paper's /ndn/k8s/{compute,data,status}.
@@ -51,16 +58,56 @@ CAPABILITY_PREFIX = "/lidc/cap"
 # request is an ordinary compute Interest under a model-rooted prefix, so
 # LPM places a session on *any* cluster advertising that model.
 SERVE_PREFIX = "/lidc/serve"
+# Batched job submission: one /lidc/jobs/batch/<app>/<k=v&lo=&hi=> Interest
+# carries a homogeneous [lo, hi) part range, so a 10k-task map pays per-job
+# signing/validation/admission once per batch, not once per task.  Clusters
+# advertise /lidc/jobs/batch/<app> alongside their compute prefixes.
+BATCH_PREFIX = "/lidc/jobs/batch"
 
 _COMPONENT_RE = re.compile(r"^[A-Za-z0-9_.,=&\-+%:]+$")
 
 # Parsed-name memo: routing agents, codecs and benchmarks re-parse the same
 # handful of uri strings per packet / per advertisement, so cache the Name
 # (components interned so equal names share component strings process-wide).
-# Bounded clear-on-full keeps pathological unique-uri workloads from growing
-# it without bound; Names are immutable, so sharing instances is safe.
-_PARSE_CACHE: Dict[str, "Name"] = {}
+# The cache is a true LRU (hits refresh recency, eviction drops the oldest
+# entry) so a 10k-task map minting 10k+ unique `part=i` names churns the
+# cold tail without ever evicting the hot routing/control names — and the
+# footprint stays bounded by the capacity, not the workload.  Names are
+# immutable, so sharing instances is safe.
+_PARSE_CACHE: "OrderedDict[str, Name]" = OrderedDict()
 _PARSE_CACHE_MAX = 65536
+# eviction counters: the memory-bound regression test (and ops curiosity)
+# can tell "cache big enough" apart from "cache churning"
+_CACHE_EVICTIONS = {"parse": 0, "job": 0}
+
+
+def configure_name_caches(*, parse_capacity: Optional[int] = None,
+                          job_capacity: Optional[int] = None) -> None:
+    """Resize the parse/job LRU caches (None leaves a capacity unchanged).
+
+    Shrinking evicts least-recently-used entries immediately, so the
+    memory bound holds from the moment of the call."""
+    global _PARSE_CACHE_MAX, _JOB_CACHE_MAX
+    if parse_capacity is not None:
+        _PARSE_CACHE_MAX = max(1, int(parse_capacity))
+        while len(_PARSE_CACHE) > _PARSE_CACHE_MAX:
+            _PARSE_CACHE.popitem(last=False)
+            _CACHE_EVICTIONS["parse"] += 1
+    if job_capacity is not None:
+        _JOB_CACHE_MAX = max(1, int(job_capacity))
+        while len(_JOB_CACHE) > _JOB_CACHE_MAX:
+            _JOB_CACHE.popitem(last=False)
+            _CACHE_EVICTIONS["job"] += 1
+
+
+def name_cache_stats() -> Dict[str, int]:
+    """Live size/capacity/eviction counters for both name caches."""
+    return {"parse_size": len(_PARSE_CACHE),
+            "parse_capacity": _PARSE_CACHE_MAX,
+            "parse_evictions": _CACHE_EVICTIONS["parse"],
+            "job_size": len(_JOB_CACHE),
+            "job_capacity": _JOB_CACHE_MAX,
+            "job_evictions": _CACHE_EVICTIONS["job"]}
 
 
 @dataclass(frozen=True)
@@ -88,10 +135,11 @@ class Name:
     # -- construction ------------------------------------------------------
     @staticmethod
     def parse(uri: str) -> "Name":
-        cached = _PARSE_CACHE.get(uri)
-        if cached is not None:
-            return cached
         raw = uri
+        cached = _PARSE_CACHE.get(raw)
+        if cached is not None:
+            _PARSE_CACHE.move_to_end(raw)
+            return cached
         uri = uri.strip()
         if not uri.startswith("/"):
             raise ValueError(f"name must start with '/': {uri!r}")
@@ -100,8 +148,9 @@ class Name:
             if not _COMPONENT_RE.match(p):
                 raise ValueError(f"illegal name component {p!r} in {uri!r}")
         name = Name(parts)
-        if len(_PARSE_CACHE) >= _PARSE_CACHE_MAX:
-            _PARSE_CACHE.clear()
+        while len(_PARSE_CACHE) >= _PARSE_CACHE_MAX:
+            _PARSE_CACHE.popitem(last=False)
+            _CACHE_EVICTIONS["parse"] += 1
         _PARSE_CACHE[raw] = name
         return name
 
@@ -167,7 +216,8 @@ _JOB_KEY_RE = re.compile(r"^[A-Za-z0-9_.\-]+$")
 # component-string -> parsed field dict.  Strategies and gateways invert the
 # same job component on every hop of every packet; parsing it once and
 # handing out shallow copies keeps the codec off the per-hop profile.
-_JOB_CACHE: Dict[str, Dict[str, str]] = {}
+# Same bounded-LRU discipline as _PARSE_CACHE (see configure_name_caches).
+_JOB_CACHE: "OrderedDict[str, Dict[str, str]]" = OrderedDict()
 _JOB_CACHE_MAX = 16384
 
 
@@ -200,6 +250,7 @@ def parse_job(component: str) -> Dict[str, str]:
     """Parse ``k=v&k=v`` back into a dict. Raises on malformed input."""
     cached = _JOB_CACHE.get(component)
     if cached is not None:
+        _JOB_CACHE.move_to_end(component)
         return dict(cached)     # callers mutate the result; hand out copies
     out: Dict[str, str] = {}
     if not component:
@@ -211,8 +262,9 @@ def parse_job(component: str) -> Dict[str, str]:
         if k in out:
             raise ValueError(f"duplicate job field {k!r}")
         out[k] = v
-    if len(_JOB_CACHE) >= _JOB_CACHE_MAX:
-        _JOB_CACHE.clear()
+    while len(_JOB_CACHE) >= _JOB_CACHE_MAX:
+        _JOB_CACHE.popitem(last=False)
+        _CACHE_EVICTIONS["job"] += 1
     _JOB_CACHE[component] = out
     return dict(out)
 
@@ -246,6 +298,51 @@ def canonical_job_name(fields: Mapping[str, Any], prefix: str = COMPUTE_PREFIX) 
     if f:
         name = name.append(encode_job(f, canonical=True))
     return name
+
+
+def batch_job_name(fields: Mapping[str, Any], lo: int, hi: int) -> Name:
+    """Build the canonical name of a *batched* submission::
+
+        /lidc/jobs/batch/<app>/<canonical k=v tail incl. lo= & hi=>
+
+    ``fields`` is the member template (everything but ``part``); the
+    gateway derives member ``part=i`` specs for i in [lo, hi).  Because
+    members are homogeneous, one batch Interest replaces hi-lo compute
+    Interests — signing, validation, matchmaking and the receipt are all
+    paid once per batch."""
+    f = dict(fields)
+    if "app" not in f:
+        raise ValueError("batch description requires an 'app' field")
+    if "lo" in f or "hi" in f or "part" in f:
+        raise ValueError("lo=/hi=/part= are batch-range fields, not "
+                         "template fields")
+    lo, hi = int(lo), int(hi)
+    if not 0 <= lo < hi:
+        raise ValueError(f"batch range must satisfy 0 <= lo < hi: [{lo},{hi})")
+    app = str(f.pop("app"))
+    f["lo"], f["hi"] = lo, hi
+    return Name.parse(BATCH_PREFIX).append(app, encode_job(f, canonical=True))
+
+
+def batch_fields_of(name: Name
+                    ) -> Optional[Tuple[Dict[str, str], int, int]]:
+    """Invert :func:`batch_job_name` into (template fields incl. ``app``,
+    lo, hi); None if the name is not a well-formed batch name."""
+    base = Name.parse(BATCH_PREFIX)
+    if not base.is_prefix_of(name) or len(name) != len(base) + 2:
+        return None
+    app, tail = name.components[len(base)], name.components[len(base) + 1]
+    if "=" not in tail:
+        return None
+    try:
+        fields = parse_job(tail)
+        lo, hi = int(fields.pop("lo")), int(fields.pop("hi"))
+    except (KeyError, ValueError):
+        return None
+    if not 0 <= lo < hi or "part" in fields:
+        return None
+    fields["app"] = app
+    return fields, lo, hi
 
 
 def serve_session_name(model: str, fields: Mapping[str, Any]) -> Name:

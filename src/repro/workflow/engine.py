@@ -28,7 +28,7 @@ from typing import Any, Dict, List, Optional, Tuple
 
 from ..core import reasons
 from ..core.forwarder import Consumer, Forwarder, Network
-from ..core.names import Name
+from ..core.names import STATUS_PREFIX, Name
 from ..core.packets import Data, Interest, verify_trusted
 from ..core.resilience import ENGINE_BUSY, ENGINE_NOROUTE, RetryPolicy
 from ..datalake.fetch import SegmentFetcher
@@ -129,6 +129,14 @@ class WorkflowEngine:
         # optional repro.core.scheduler.CompletionModel: observed stage
         # durations feed the paper's §VII completion-time intelligence
         self.completion_model = completion_model
+        # poll coalescing: stages pending at the same gateway share one
+        # timer and one ids= multi-status Interest per cadence instead of
+        # polling independently — a fanout-N scatter costs O(1) status
+        # traffic per cluster per interval, not O(N)
+        self._poll_groups: Dict[str, Dict[str, Tuple[WorkflowRun, _StageRun,
+                                                     int]]] = {}
+        self.stage_polls = 0         # per-stage poll requests
+        self.status_interests = 0    # status Interests actually expressed
 
     # ------------------------------------------------------------------ api
     def run(self, workflow: Workflow) -> WorkflowRun:
@@ -249,16 +257,108 @@ class WorkflowEngine:
         self._trace(run, "stage-failed", sr.inst.id, reason)
 
     # ------------------------------------------------------------- status
+    # how many stages one ids= multi-status Interest may cover (stays
+    # comfortably inside the gateway's MAX_STATUS_IDS answer bound)
+    POLL_CHUNK = 32
+
     def _schedule_poll(self, run: WorkflowRun, sr: _StageRun, delay: float
                       ) -> None:
+        """Arm the next status poll for a running stage.
+
+        Stages pending at the same gateway coalesce: the first request
+        arms one timer for that cluster; stages joining before it fires
+        ride along, and the firing sends one ids= multi-status Interest
+        for the whole group.  (A joiner keeps the incumbent cadence — at
+        worst it is polled one interval early, and the answer's 0.25 s
+        freshness makes the extra sample cheap.)"""
+        self.stage_polls += 1
         attempt = sr.attempts
-        self.net.schedule(delay, lambda: self._poll(run, sr, attempt))
+        if sr.cluster is None:
+            # no receipt-confirmed gateway to group under: poll solo
+            self.net.schedule(delay, lambda: self._poll(run, sr, attempt))
+            return
+        cluster = sr.cluster
+        group = self._poll_groups.get(cluster)
+        if group is None:
+            self._poll_groups[cluster] = {sr.inst.id: (run, sr, attempt)}
+            self.net.schedule(delay, lambda: self._poll_cluster(cluster))
+        else:
+            group[sr.inst.id] = (run, sr, attempt)
+
+    def _poll_live(self, entry: Tuple[WorkflowRun, _StageRun, int]) -> bool:
+        run, sr, attempt = entry
+        return (sr.status == StageStatus.RUNNING and sr.attempts == attempt
+                and run.failed is None)
+
+    def _poll_cluster(self, cluster: str) -> None:
+        """One cadence firing for every stage pending at ``cluster``."""
+        group = self._poll_groups.pop(cluster, None)
+        if not group:
+            return
+        live = [e for e in group.values() if self._poll_live(e)]
+        if not live:
+            return
+        if len(live) == 1:
+            run, sr, attempt = live[0]
+            self._poll(run, sr, attempt)
+            return
+        for i in range(0, len(live), self.POLL_CHUNK):
+            chunk = live[i:i + self.POLL_CHUNK]
+            # deduped twin stages share one gateway job — key by job_id,
+            # fan the one answer out to every stage waiting on it
+            by_jid: Dict[str, List[Tuple[WorkflowRun, _StageRun, int]]] = {}
+            for e in chunk:
+                by_jid.setdefault(e[1].receipt["job_id"], []).append(e)
+            name = Name.parse(STATUS_PREFIX).append(
+                cluster, "ids=" + ",".join(sorted(by_jid)))
+            self.status_interests += 1
+            self.consumer.express(
+                Interest(name=name, must_be_fresh=True, lifetime=2.0),
+                on_data=lambda d, by_jid=by_jid: self._on_multi_status(
+                    by_jid, d),
+                on_fail=lambda r, by_jid=by_jid: self._fan_status_fail(
+                    by_jid, r),
+                retries=1)
+
+    def _on_multi_status(self, by_jid: Dict[str, List[Tuple[WorkflowRun,
+                                                            _StageRun, int]]],
+                         d: Data) -> None:
+        payload = self._checked_payload(d)
+        if payload is None:
+            # corrupted answer: re-arm every still-live member
+            for entries in by_jid.values():
+                for run, sr, attempt in entries:
+                    if self._poll_live((run, sr, attempt)):
+                        self._schedule_poll(run, sr, delay=self.poll_interval)
+            return
+        jobs = payload.get("jobs", {})
+        for jid, entries in by_jid.items():
+            status = jobs.get(jid)
+            for run, sr, attempt in entries:
+                if not self._poll_live((run, sr, attempt)):
+                    continue
+                if status is None or status.get("state") == "Unknown":
+                    # the gateway no longer knows the job (restarted
+                    # cluster): same recovery as a status loss — re-
+                    # express the compute Interest
+                    self._on_status_fail(run, sr, attempt, "unknown-job")
+                else:
+                    self._apply_status(run, sr, status)
+
+    def _fan_status_fail(self, by_jid: Dict[str, List[Tuple[WorkflowRun,
+                                                            _StageRun, int]]],
+                         reason: str) -> None:
+        for entries in by_jid.values():
+            for run, sr, attempt in entries:
+                if self._poll_live((run, sr, attempt)):
+                    self._on_status_fail(run, sr, attempt, reason)
 
     def _poll(self, run: WorkflowRun, sr: _StageRun, attempt: int) -> None:
         if sr.status != StageStatus.RUNNING or sr.attempts != attempt \
                 or run.failed is not None:
             return  # stage moved on (completed / re-submitted / aborted)
         status_name = Name.parse(sr.receipt["status_name"])
+        self.status_interests += 1
         self.consumer.express(
             Interest(name=status_name, must_be_fresh=True, lifetime=2.0),
             on_data=lambda d, sr=sr, a=attempt: self._on_status(run, sr, a, d),
@@ -266,20 +366,29 @@ class WorkflowEngine:
                 run, sr, a, r),
             retries=1)
 
+    @staticmethod
+    def _checked_payload(d: Data) -> Optional[Dict[str, Any]]:
+        """Verify + decode a status answer; None means 'poll again'
+        (the CS admission gate keeps corrupted Data out of caches)."""
+        if verify_trusted(d) is False:
+            return None
+        try:
+            return d.json()
+        except (ValueError, UnicodeDecodeError):
+            return None
+
     def _on_status(self, run: WorkflowRun, sr: _StageRun, attempt: int,
                    d: Data) -> None:
         if sr.status != StageStatus.RUNNING or sr.attempts != attempt:
             return
-        if verify_trusted(d) is False:
-            # corrupted status payload: poll again rather than acting on
-            # garbage (the CS admission gate keeps it out of caches)
+        payload = self._checked_payload(d)
+        if payload is None:
             self._schedule_poll(run, sr, delay=self.poll_interval)
             return
-        try:
-            payload = d.json()
-        except (ValueError, UnicodeDecodeError):
-            self._schedule_poll(run, sr, delay=self.poll_interval)
-            return
+        self._apply_status(run, sr, payload)
+
+    def _apply_status(self, run: WorkflowRun, sr: _StageRun,
+                      payload: Dict[str, Any]) -> None:
         state = payload.get("state")
         if state == "Completed":
             self._complete(run, sr)

@@ -1,0 +1,96 @@
+"""Bounded name caches: a 10k-task fan-out must not grow them unbounded.
+
+The parse/intern caches sped up the hot path in the router work, but an
+elastic map mints tens of thousands of distinct ``part=i`` names per
+run — an unbounded cache is a slow memory leak.  These tests pin the
+LRU discipline: hard capacity, eviction accounting, and recency (a hot
+name survives churn that evicts cold ones).
+"""
+
+from repro.core.names import (Name, canonical_job_name,
+                              configure_name_caches, name_cache_stats,
+                              parse_job)
+
+DEFAULTS = {"parse_capacity": 65536, "job_capacity": 16384}
+
+
+def with_small_caches(parse=64, job=32):
+    configure_name_caches(parse_capacity=parse, job_capacity=job)
+
+
+def restore():
+    configure_name_caches(**DEFAULTS)
+
+
+def test_parse_cache_bounded_under_fanout_churn():
+    with_small_caches()
+    try:
+        before = name_cache_stats()["parse_evictions"]
+        for i in range(10_000):
+            Name.parse(f"/lidc/compute/tm-map/part={i}&parts=10000")
+        stats = name_cache_stats()
+        assert stats["parse_size"] <= stats["parse_capacity"] == 64
+        assert stats["parse_evictions"] > before
+    finally:
+        restore()
+
+
+def test_job_cache_bounded_under_fanout_churn():
+    with_small_caches()
+    try:
+        before = name_cache_stats()["job_evictions"]
+        for i in range(10_000):
+            parse_job(f"fn=wordcount&part={i}&parts=10000")
+        stats = name_cache_stats()
+        assert stats["job_size"] <= stats["job_capacity"] == 32
+        assert stats["job_evictions"] > before
+    finally:
+        restore()
+
+
+def test_lru_recency_keeps_hot_entry():
+    """A name re-parsed between churn bursts stays cached (same object
+    back), while the cold churn names are evicted around it."""
+    with_small_caches(parse=16)
+    try:
+        hot = "/lidc/status/podA/jobhot"
+        first = Name.parse(hot)
+        for i in range(200):
+            Name.parse(f"/lidc/data/churn/{i}")
+            if i % 8 == 0:
+                Name.parse(hot)             # touch: move to MRU
+        assert Name.parse(hot) is first     # identity == cache hit
+        stats = name_cache_stats()
+        assert stats["parse_size"] <= 16
+    finally:
+        restore()
+
+
+def test_configure_shrink_trims_immediately():
+    with_small_caches(parse=128, job=128)
+    try:
+        for i in range(128):
+            Name.parse(f"/lidc/data/trim/{i}")
+            parse_job(f"k={i}")
+        configure_name_caches(parse_capacity=8, job_capacity=8)
+        stats = name_cache_stats()
+        assert stats["parse_size"] <= 8
+        assert stats["job_size"] <= 8
+    finally:
+        restore()
+
+
+def test_canonical_name_identical_after_eviction():
+    """Eviction is invisible to correctness: the canonical name built
+    before and after a full cache wipe is byte-identical (exactly-once
+    depends on this)."""
+    fields = {"app": "tm-map", "fn": "wordcount", "part": 7, "parts": 100}
+    a = str(canonical_job_name(fields))
+    with_small_caches(parse=4, job=4)
+    try:
+        for i in range(100):
+            Name.parse(f"/lidc/data/wipe/{i}")
+            parse_job(f"w={i}")
+        assert str(canonical_job_name(fields)) == a
+    finally:
+        restore()

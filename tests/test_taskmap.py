@@ -1,0 +1,244 @@
+"""Elastic map fan-out: partition tiling, batched fan-out, speculation.
+
+The tiling property test pins the tentpole's correctness foundation:
+manifest-driven partition discovery must cover a dataset exactly — no
+gap, no overlap, byte-identical reassembly — at every boundary size,
+because every downstream guarantee (exactly-once via ``part=i`` result
+names, reduce correctness) assumes the tiles are a partition in the
+mathematical sense.
+
+The speculation tests pin the exactly-once contract both ways: a
+speculative duplicate that *loses* the race is absorbed by the result
+cache (``log.reexecuted() == {}``), and a duplicate that *wins* against
+a time-dilated straggler is counted as a speculation win without
+breaking delivery.
+"""
+
+import pytest
+
+from repro.core.jobs import INPUTS_FIELD, JobSpec, encode_input_names
+from repro.core.names import DATA_PREFIX, Name
+from repro.workflow.taskmap import (TaskMapExecutor, build_taskmap_fleet,
+                                    plan_partitions)
+
+# a 64-byte record: segment sizes that divide into records keep words
+# from spanning segment boundaries, so wordcount is exact
+RECORD = b"alpha bravo charlie delta echo foxtrot golf hotel indigo juliet "
+WORDS_PER_RECORD = 10
+DATASET = Name.parse(DATA_PREFIX).append("text", "corpus")
+
+
+def fleet(n=3, *, chips=4, segment_size=256, records=64, **kw):
+    system, log = build_taskmap_fleet(n, chips=chips,
+                                      segment_size=segment_size, **kw)
+    blob = RECORD * records
+    system.lake.put_bytes(DATASET, blob)
+    system.net.run(until=system.net.now + 5)      # let routes gossip
+    return system, log, len(blob)
+
+
+# ---------------------------------------------------------------------------
+# partition discovery tiles exactly (deterministic sweep; the hypothesis
+# version of these invariants lives in test_taskmap_properties.py)
+# ---------------------------------------------------------------------------
+
+SEG = 64
+
+
+def n_segments(size: int) -> int:
+    # the lake stores objects <= one segment unsegmented
+    return -(-size // SEG) if size > SEG else 1
+
+
+BOUNDARY_SIZES = [1, SEG - 1, SEG, SEG + 1, 2 * SEG, 5 * SEG - 1, 5 * SEG,
+                  5 * SEG + 1, 17 * SEG + 3, 40 * SEG]
+
+
+@pytest.mark.parametrize("size", BOUNDARY_SIZES)
+@pytest.mark.parametrize("tasks", [None, 1, 3, 7, 64])
+def test_partitions_tile_exactly(size, tasks):
+    segments = n_segments(size)
+    parts = plan_partitions(size=size, segments=segments, segment_size=SEG,
+                            tasks=tasks)
+    # segment ranges: contiguous, gap-free, total == segments
+    assert parts[0].seg_lo == 0
+    assert parts[-1].seg_hi == segments
+    for a, b in zip(parts, parts[1:]):
+        assert a.seg_hi == b.seg_lo
+        assert a.seg_hi > a.seg_lo
+    # byte ranges: tile [0, size) exactly
+    assert parts[0].byte_lo == 0
+    assert parts[-1].byte_hi == size
+    for a, b in zip(parts, parts[1:]):
+        assert a.byte_hi == b.byte_lo
+    # part ids are dense 0..n-1 (the result-cache dedupe key)
+    assert [p.part for p in parts] == list(range(len(parts)))
+    if tasks is not None:
+        assert len(parts) <= max(1, min(tasks, segments))
+
+
+@pytest.mark.parametrize("size", BOUNDARY_SIZES)
+def test_partitions_reassemble_byte_identical(size):
+    """Reading each partition's byte range back to back reproduces the
+    original blob byte-for-byte."""
+    blob = bytes((i * 37 + 11) % 256 for i in range(size))
+    parts = plan_partitions(size=size, segments=n_segments(size),
+                            segment_size=SEG)
+    pieces = [blob[p.byte_lo:p.byte_hi] for p in parts]
+    assert b"".join(pieces) == blob
+    assert all(len(pc) > 0 for pc in pieces[:-1])
+
+
+# ---------------------------------------------------------------------------
+# end-to-end map / map_reduce
+# ---------------------------------------------------------------------------
+
+def test_map_end_to_end_exactly_once():
+    system, log, size = fleet(3)
+    tm = TaskMapExecutor.for_system(system, batch_size=4)
+    run = tm.map("wordcount", DATASET)
+    assert run.failed is None and run.complete
+    assert run.delivery == 1.0
+    assert run.tasks == size // 256
+    # ground truth: every task executed exactly once, nothing twice
+    assert log.total == run.tasks
+    assert log.reexecuted() == {}
+    # batched submission + coalesced polling: protocol traffic is far
+    # below one Interest per task
+    assert tm.submit_interests < run.tasks
+    assert tm.status_interests < run.tasks
+
+
+def test_map_reduce_and_second_run_fully_cached():
+    system, log, size = fleet(3)
+    records = size // len(RECORD)
+    tm = TaskMapExecutor.for_system(system, batch_size=4)
+    run = tm.map_reduce("wordcount", "wordcount-reduce", DATASET)
+    assert run.failed is None and run.complete
+    assert run.reduce_result is not None
+    assert run.reduce_result["count"] == records * WORDS_PER_RECORD
+    executed = log.total
+    assert executed == run.tasks + 1          # maps + one reduce
+    # identical map_reduce again: every part AND the reduce are served
+    # from the result cache — zero new executions
+    run2 = tm.map_reduce("wordcount", "wordcount-reduce", DATASET)
+    assert run2.failed is None and run2.complete
+    assert run2.reduce_result["count"] == records * WORDS_PER_RECORD
+    assert log.total == executed
+
+
+def test_unsegmented_dataset_single_task():
+    # 512 B <= segment_size: stored unsegmented, no manifest — discovery
+    # falls back to fetching the object itself and plans one task
+    system, log, _ = fleet(3, segment_size=1 << 20, records=8)
+    tm = TaskMapExecutor.for_system(system)
+    run = tm.map("wordcount", DATASET)
+    assert run.failed is None and run.complete
+    assert run.tasks == 1
+    assert log.total == 1
+
+
+# ---------------------------------------------------------------------------
+# speculation: exactly-once both ways
+# ---------------------------------------------------------------------------
+
+def test_speculative_duplicate_never_double_executes():
+    """A duplicate that cannot win (the only other cluster is drained)
+    bounces off avoided/busy receipts until the original finishes, then
+    is absorbed by the result cache: zero re-executions, zero wins."""
+    system, log, size = fleet(2, chips=4, records=32)
+    system.overlay.clusters["tmpod1"].advertise(chips=0)   # drained
+    system.net.run(until=system.net.now + 5)
+    tm = TaskMapExecutor.for_system(
+        system, batch_size=8,
+        speculation=True, spec_factor=0.4, spec_min_samples=2)
+    run = tm.map("wordcount", DATASET, cost=1.0)
+    assert run.failed is None and run.complete
+    assert run.delivery == 1.0
+    # the second on-chip wave ages past 0.4 x p50 and is speculated ...
+    assert run.speculated, "expected the second wave to be speculated"
+    # ... but the duplicates execute nowhere: the home cluster answers
+    # avoid= with busy, and by the time they retry the original's result
+    # is cached — exactly-once effective execution
+    assert log.reexecuted() == {}
+    assert log.total == run.tasks
+    assert run.spec_wins == 0
+    assert log.clusters_used() == ["tmpod0"]
+
+
+def test_speculation_beats_time_dilated_straggler():
+    """A gray-slow cluster (time_dilation) holds its tasks on-chip 10x
+    longer than predicted; the monitor speculates them toward the
+    healthy cluster, which finishes first — speculation wins, delivery
+    stays 1.0, and executed-task amplification stays bounded."""
+    system, log, size = fleet(2, chips=8, records=64)     # 16 tasks
+    tm = TaskMapExecutor.for_system(
+        system, batch_size=4,
+        speculation=True, spec_factor=2.0, spec_min_samples=2)
+    system.overlay.clusters["tmpod1"].time_dilation = 10.0
+    run = tm.map("wordcount", DATASET, cost=2.0)
+    assert run.failed is None and run.complete
+    assert run.delivery == 1.0
+    assert len(log.clusters_used()) == 2      # fan-out hit both clusters
+    assert run.spec_wins >= 1
+    # at most one duplicate execution per speculated part
+    assert log.total <= run.tasks + len(run.speculated)
+    # a dilated 2 s task holds its chip for 20 s; the wins keep the map's
+    # completion well under that
+    assert run.makespan < 20.0
+
+
+def test_speculation_disabled_waits_out_straggler():
+    system, log, size = fleet(2, chips=8, records=64)
+    tm = TaskMapExecutor.for_system(system, batch_size=4, speculation=False)
+    system.overlay.clusters["tmpod1"].time_dilation = 10.0
+    run = tm.map("wordcount", DATASET, cost=2.0)
+    assert run.failed is None and run.complete
+    assert run.spec_wins == 0 and not run.speculated
+    assert log.total == run.tasks             # strict exactly-once
+    assert len(log.clusters_used()) == 2
+    assert run.makespan >= 20.0               # paid the dilation in full
+
+
+# ---------------------------------------------------------------------------
+# saturation + crash recovery
+# ---------------------------------------------------------------------------
+
+def test_batch_busy_backoff_until_chip_frees():
+    """A fully occupied cluster with no queue budget answers the batch
+    with a busy receipt; the client backs off and the map completes once
+    the chip frees."""
+    system, log, size = fleet(1, chips=1, records=16, max_queue_depth=0)
+    cluster = system.overlay.clusters["tmpod0"]
+    # occupy the only chip for 2 virtual seconds
+    blocker = JobSpec(app="tm-map", fields={
+        "fn": "wordcount", "part": "0", "segs": "4", "spt": "4",
+        "cost": "2.0", "blocker": "1",
+        INPUTS_FIELD: encode_input_names([DATASET])})
+    cluster.submit(blocker, system.net.now)
+    assert cluster.free_chips == 0
+    tm = TaskMapExecutor.for_system(system, batch_size=4)
+    run = tm.map("wordcount", DATASET, cost=0.01)
+    assert run.failed is None and run.complete
+    assert run.delivery == 1.0
+    assert system.overlay.gateways["tmpod0"].busy_receipts > 0
+
+
+def test_crash_recovery_reexpresses_batch():
+    """Kill the cluster holding a batch mid-run: its status goes dark,
+    the canonical batch name is re-expressed, and the survivor re-runs
+    the lost work."""
+    system, log, size = fleet(2, chips=8, records=32)     # 8 tasks
+    tm = TaskMapExecutor.for_system(system, batch_size=16,
+                                    speculation=False)
+    run = tm.start_map("wordcount", DATASET, cost=2.0)
+    system.net.run(until=system.net.now + 1.0)    # batch admitted
+    victims = {b.cluster for b in run.batches if b.cluster is not None}
+    assert len(victims) == 1                  # one batch, one home
+    system.overlay.fail_cluster(victims.pop())
+    system.net.run()
+    assert run.failed is None and run.complete
+    assert run.delivery == 1.0
+    # crash recovery re-ran the in-flight tasks on the survivor — at
+    # most one re-execution per task, never more
+    assert all(n == 2 for n in log.reexecuted().values())

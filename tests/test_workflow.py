@@ -254,3 +254,18 @@ def test_engine_backs_off_on_busy_receipts_and_recovers():
     shard = run.stages["shard"]
     assert shard.busy_retries >= 1
     assert run.finished_at > 20.0          # completed after the hog drained
+
+
+def test_engine_coalesces_status_polls_per_cluster():
+    """A wide scatter parked on one saturated cluster polls with ONE
+    ``ids=`` Interest per cluster per cadence, not one per stage — the
+    status-poll amplification fix."""
+    system, log = fleet(1)
+    eng = WorkflowEngine(system.net, system.overlay.edge)
+    run = eng.run(blast_spec(parts=6, tag="coal").compile())
+    assert run.complete and run.failed is None
+    assert sorted(log.per_signature().values()) == [1] * 8
+    # the 6-wide align layer polls concurrently: coalescing must answer
+    # strictly fewer status Interests than poll cycles requested
+    assert eng.stage_polls > 0
+    assert eng.status_interests < eng.stage_polls
