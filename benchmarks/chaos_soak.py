@@ -22,7 +22,12 @@ exact run replays deterministically):
 * **bounded amplification** — total Interests expressed / satisfied
   across every consumer stays <= 3x;
 * **post-heal reconvergence** — the edge FIB regains a route to every
-  cluster and a fresh post-heal probe workflow completes promptly.
+  cluster and a fresh post-heal probe workflow completes promptly;
+* **replication under chaos** — the edge's demand-driven
+  ReplicationManager (its transfers cross the same faulted links)
+  installs at least one replica, every managed replica is byte-identical
+  to the lake oracle (never stale or corrupt), the byte budget is never
+  exceeded at any instant, and the durable retry queue drains post-heal.
 
 ``--smoke`` runs the CI-sized configuration and writes the
 ``BENCH_chaos_soak.json`` perf-trajectory artifact; ``--seed`` replays a
@@ -55,6 +60,8 @@ from repro.core.resilience import CircuitBreaker  # noqa: E402
 from repro.core.strategy import AdaptiveStrategy  # noqa: E402
 from repro.datalake.fetch import SegmentFetcher  # noqa: E402
 from repro.datalake.kv import prompt_digest  # noqa: E402
+from repro.datalake.replication import (ReplicationManager,  # noqa: E402
+                                        ReplicationPolicy)
 from repro.serve.plane import (ServeModelSpec, ServingPlane,  # noqa: E402
                                SessionClient, token_at)
 from repro.workflow import (FaultInjector, WorkflowEngine,  # noqa: E402
@@ -166,6 +173,19 @@ def soak(*, n_clusters: int, data_mib: int, n_jobs: int, n_sessions: int,
         on_complete=lambda b: bulk_box.__setitem__("bytes", b),
         on_error=lambda r: bulk_box.__setitem__("error", r))
     net.schedule(0.40, fetcher.start)
+
+    # -- plane 5: demand-driven replication at the edge -------------------
+    # the edge holds no lake data, so every transfer this manager starts
+    # crosses the same flapping/corrupting/lossy overlay links as the
+    # foreground planes.  Gated below: replicas end byte-identical to the
+    # lake oracle (never stale/corrupt), the byte budget is never
+    # exceeded, and the durable retry queue drains once faults heal.
+    repl = ReplicationManager(
+        net, sys_.overlay.edge, agent=sys_.overlay.edge_agent,
+        policy=ReplicationPolicy(hot_rate=0.8, half_life=4.0,
+                                 budget_bytes=4 * data_mib * 2 ** 20,
+                                 retry_base=0.25, retry_cap=2.0),
+        name="edge-repl").start()
 
     # -- plane 3: compute jobs with hedged Interests ----------------------
     job_out: Dict[str, object] = {}
@@ -280,6 +300,20 @@ def soak(*, n_clusters: int, data_mib: int, n_jobs: int, n_sessions: int,
         failures.append("corruption occurred but no CS admission rejection "
                         "was recorded")
 
+    rst = repl.stats()
+    bad_replicas = repl.audit(sys_.lake)
+    if bad_replicas:
+        failures.append(f"managed replicas diverged from the lake oracle: "
+                        f"{bad_replicas}")
+    if rst["max_bytes_used"] > rst["budget_bytes"]:
+        failures.append(f"replication budget exceeded: "
+                        f"{rst['max_bytes_used']} > {rst['budget_bytes']}")
+    if rst["transfers_completed"] < 1:
+        failures.append("replication manager installed no replica "
+                        "through the storm")
+    if rst["retry_queue"] or rst["in_flight"]:
+        failures.append("replication retry queue did not drain post-heal")
+
     return {
         "seed": seed,
         "victims": victims,
@@ -297,6 +331,10 @@ def soak(*, n_clusters: int, data_mib: int, n_jobs: int, n_sessions: int,
         "brownouts": sum(g.brownouts for g in sys_.overlay.gateways.values()),
         "cs_poison_rejected": poison_rejected,
         "corruptions": corruptions,
+        "replicas": rst["replicas"],
+        "replica_transfers": rst["transfers_completed"],
+        "replica_retries": rst["retries"],
+        "replica_serves": rst["serves"],
         "injector_trace": inj.trace,
         "wall_s": round(time.perf_counter() - t0, 3),
     }
@@ -346,7 +384,9 @@ def main(argv: Optional[list] = None) -> int:
              "duplicate_execs": float(r["duplicate_execs"]),
              "makespan_s": float(r["makespan_s"]),
              "hedges": float(r["hedges"]),
-             "cs_poison_rejected": float(r["cs_poison_rejected"])},
+             "cs_poison_rejected": float(r["cs_poison_rejected"]),
+             "replica_transfers": float(r["replica_transfers"]),
+             "replica_retries": float(r["replica_retries"])},
             "BENCH_chaos_soak.json")
 
     if failures:

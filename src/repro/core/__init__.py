@@ -3,6 +3,7 @@
 from .names import (COMPUTE_PREFIX, DATA_PREFIX, STATUS_PREFIX, Name,
                     canonical_job_name, encode_job, job_fields_of, parse_job)
 from .packets import Data, Interest, sign_data, verify_data
+from .demand import DemandTracker
 from .tables import ContentStore, Fib, LinearFib, NextHop, Pit, Rib, RibRoute
 from .forwarder import Consumer, Forwarder, Nack, Network, link
 from .routing import RoutingAgent, RoutingConfig, capability_cost
@@ -23,7 +24,7 @@ from .scheduler import CompletionModel
 __all__ = [
     "Name", "canonical_job_name", "encode_job", "parse_job", "job_fields_of",
     "COMPUTE_PREFIX", "DATA_PREFIX", "STATUS_PREFIX",
-    "Data", "Interest", "sign_data", "verify_data",
+    "Data", "Interest", "sign_data", "verify_data", "DemandTracker",
     "ContentStore", "Fib", "LinearFib", "NextHop", "Pit", "Rib", "RibRoute",
     "Consumer", "Forwarder", "Nack", "Network", "link",
     "RoutingAgent", "RoutingConfig", "capability_cost",

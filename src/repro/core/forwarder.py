@@ -486,6 +486,10 @@ class Forwarder:
         # prefix Name of every Interest
         self._producers: Dict[Tuple[str, ...], ProducerHandler] = {}
         self._producer_lens: List[int] = []
+        # optional per-prefix demand telemetry (repro.core.demand.
+        # DemandTracker), attached by a replication manager; None keeps
+        # the Interest hot path one attribute check away from unchanged
+        self.demand = None
         self.stats = {"in_interest": 0, "in_data": 0, "in_nack": 0,
                       "cs_hit": 0, "dropped": 0, "agg": 0, "retx": 0,
                       "cs_poison_rejected": 0}
@@ -503,6 +507,12 @@ class Forwarder:
         if n not in self._producer_lens:
             self._producer_lens.append(n)
             self._producer_lens.sort(reverse=True)
+
+    def detach_producer(self, prefix: Name) -> None:
+        """Remove a local producer (e.g. an evicted managed replica)."""
+        if self._producers.pop(prefix.components, None) is not None:
+            lens = {len(k) for k in self._producers}
+            self._producer_lens = sorted(lens, reverse=True)
 
     def register_route(self, prefix: Name, face: Face, cost: float = 1.0) -> None:
         self.fib.register(prefix, face.face_id, cost)
@@ -565,6 +575,8 @@ class Forwarder:
     def _on_interest(self, in_face: int, interest: Interest) -> None:
         now = self.net.now
         self.stats["in_interest"] += 1
+        if self.demand is not None:
+            self.demand.observe(interest.name, now, in_face)
         self._expire_pit(now)
         if interest.hop_limit <= 0:
             self.stats["dropped"] += 1

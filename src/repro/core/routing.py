@@ -125,6 +125,12 @@ def capability_cost(caps: Optional[Dict[str, Any]]) -> float:
     """
     if not caps:
         return 0.0
+    if caps.get("replica"):
+        # a managed data replica advertises *data availability*, not
+        # compute capacity: its cost is pure hop distance, so strategies
+        # steer readers to the nearest copy instead of penalizing the
+        # replica for having no chips to offer
+        return 0.0
     cost = 0.0
     chips = caps.get("chips")
     free = caps.get("free_chips", chips)

@@ -741,12 +741,23 @@ class ContentStore:
     """
 
     def __init__(self, capacity: int = 4096,
-                 capacity_bytes: Optional[int] = None) -> None:
+                 capacity_bytes: Optional[int] = None,
+                 prefix_stats_depth: int = 3,
+                 prefix_stats_capacity: int = 512) -> None:
         self.capacity = capacity
         self.capacity_bytes = capacity_bytes
         self.bytes_stored = 0
         self._store: "OrderedDict[Key, Data]" = OrderedDict()
         self._prefix_index: Dict[Key, Set[Key]] = {}
+        # per-prefix hit/miss accounting (keys truncated to
+        # ``prefix_stats_depth`` components — dataset granularity for the
+        # default /lidc/data/<name> layout), LRU-bounded like the name
+        # caches so distinct-name churn cannot grow it without bound.
+        # The global ``hit_rate`` scalar is unchanged.
+        self.prefix_stats_depth = prefix_stats_depth
+        self.prefix_stats_capacity = prefix_stats_capacity
+        self.prefix_stats_evictions = 0
+        self._pstats: "OrderedDict[Key, List[int]]" = OrderedDict()
         # keys inserted but not yet folded into the prefix index.  Building
         # the len+1 prefix slices costs ~40µs per insert and most traffic
         # (exact-match compute results, routing scenarios) never issues a
@@ -825,10 +836,22 @@ class ContentStore:
                     continue
                 hit = d
                 break
+        pk = key[:self.prefix_stats_depth]
+        rec = self._pstats.get(pk)
+        if rec is None:
+            rec = [0, 0]
+            self._pstats[pk] = rec
+            if len(self._pstats) > self.prefix_stats_capacity:
+                self._pstats.popitem(last=False)
+                self.prefix_stats_evictions += 1
+        else:
+            self._pstats.move_to_end(pk)
         if hit is None:
             self.misses += 1
+            rec[1] += 1
             return None
         self.hits += 1
+        rec[0] += 1
         self._store.move_to_end(hit.name.components)
         return hit
 
@@ -849,7 +872,23 @@ class ContentStore:
         total = self.hits + self.misses
         return self.hits / total if total else 0.0
 
+    def hit_rate_for(self, prefix: Name) -> float:
+        """Hit rate over matches whose Interest fell under ``prefix``
+        (truncated to the tracked depth); 0.0 when never matched."""
+        rec = self._pstats.get(prefix.components[:self.prefix_stats_depth])
+        if rec is None or rec[0] + rec[1] == 0:
+            return 0.0
+        return rec[0] / (rec[0] + rec[1])
+
+    def prefix_hit_rates(self) -> Dict[str, float]:
+        """Per-prefix hit rates (the replication policy / bench surface);
+        the global scalar :attr:`hit_rate` is unchanged."""
+        return {str(Name(k)): h / (h + m)
+                for k, (h, m) in self._pstats.items() if h + m}
+
     def stats(self) -> Dict[str, float]:
         return {"entries": len(self._store), "bytes_stored": self.bytes_stored,
                 "hits": self.hits, "misses": self.misses,
-                "evictions": self.evictions, "hit_rate": self.hit_rate}
+                "evictions": self.evictions, "hit_rate": self.hit_rate,
+                "prefix_stats_entries": len(self._pstats),
+                "prefix_stats_evictions": self.prefix_stats_evictions}

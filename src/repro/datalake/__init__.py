@@ -1,6 +1,8 @@
 from .fetch import SegmentFetcher, fetch
 from .lake import SEGMENT_SIZE, DataLake
+from .replication import ReplicationManager, ReplicationPolicy
 from .store import DirStore, MemoryStore, ObjectStore
 
 __all__ = ["DataLake", "SEGMENT_SIZE", "ObjectStore", "MemoryStore",
-           "DirStore", "SegmentFetcher", "fetch"]
+           "DirStore", "SegmentFetcher", "fetch",
+           "ReplicationManager", "ReplicationPolicy"]

@@ -67,7 +67,10 @@ class SegmentFetcher:
                  single_retries: int = 2,
                  single_lifetime: Optional[float] = None,
                  verify_key: Optional[bytes] = None,
-                 record_trace: bool = True):
+                 record_trace: bool = True,
+                 on_segment: Optional[Callable[[int, Data], None]] = None,
+                 have: Optional[Dict[int, bytes]] = None,
+                 admit: Optional[Callable[[Dict[str, Any]], bool]] = None):
         self.net = net
         self.node = node
         self.name = name
@@ -92,6 +95,15 @@ class SegmentFetcher:
         self.single_lifetime = single_lifetime
         self.verify_key = verify_key
         self.record_trace = record_trace
+        # replication-manager hooks: ``on_segment`` observes each verified
+        # segment as it lands (incremental persistence for crash-resume),
+        # ``have`` pre-seeds already-fetched segments so a resumed
+        # transfer pulls only what is missing, ``admit`` sees the parsed
+        # manifest before any segment Interest goes out and may refuse
+        # the transfer (byte-budget admission control)
+        self.on_segment = on_segment
+        self._have = dict(have) if have else {}
+        self.admit = admit
 
         # rto estimator (RFC 6298), seeded from forwarder telemetry.  The
         # timeout backoff multiplier follows the named FETCH_BACKOFF
@@ -130,7 +142,7 @@ class SegmentFetcher:
         self.stats: Dict[str, float] = {
             "segments": 0, "retransmissions": 0, "timeouts": 0, "nacks": 0,
             "window_decreases": 0, "bytes": 0, "duration": 0.0, "goodput": 0.0,
-            "max_cwnd": self.cwnd,
+            "max_cwnd": self.cwnd, "resumed": 0,
         }
         self.started_at: Optional[float] = None
 
@@ -244,9 +256,29 @@ class SegmentFetcher:
         except (ValueError, KeyError) as e:
             self._fail(f"manifest-malformed:{e}")
             return
+        if self.admit is not None and not self.admit(self.manifest):
+            self._fail("admission-refused")
+            return
         self._buf = bytearray(size)
         self.state = "windowed"
         self._trace("manifest")
+        # resume: segments fetched by a previous (crashed/failed) transfer
+        # land straight in the buffer; only the gap goes on the wire
+        for i in sorted(self._have):
+            chunk = self._have[i]
+            if 0 <= i < self._nseg and i not in self._received:
+                off = i * self._seg_size
+                self._buf[off:off + len(chunk)] = chunk
+                self._received.add(i)
+                self._bytes_received += len(chunk)
+                self.stats["resumed"] += 1
+        if self._nseg and len(self._received) == self._nseg:
+            if self._bytes_received != len(self._buf):
+                self._fail(f"size-mismatch:{self._bytes_received}"
+                           f"!={len(self._buf)}")
+            else:
+                self._finish(bytes(self._buf))
+            return
         self._fill_window()
 
     def _on_manifest_fail(self, reason: str) -> None:
@@ -341,6 +373,8 @@ class SegmentFetcher:
         off = i * self._seg_size
         self._buf[off:off + len(d.content)] = d.content
         self._bytes_received += len(d.content)
+        if self.on_segment is not None:
+            self.on_segment(i, d)    # after verification: never a bad byte
         self._increase_window(sample)
         self._trace("ack")
         if len(self._received) == self._nseg:

@@ -191,6 +191,42 @@ class FaultInjector:
         self._at(start, "reorder-delay", f"delay={delay}", begin)
         self._gray_rate(faces, "reorder", rate, start, stop)
 
+    def blackout(self, faces: Sequence[Face], *, at: float, heal_at: float,
+                 flag: Optional[List[bool]] = None) -> List[bool]:
+        """Crash-like blackout for a bare (non-overlay) node: every face
+        drops packets both ways between ``at`` and ``heal_at``, and the
+        returned liveness box reads ``[False]`` while dark.  Wire the box
+        into a :class:`~repro.datalake.replication.ReplicationManager` as
+        ``alive=lambda: box[0]`` to model the manager process dying with
+        its node: in-flight transfers fail, the durable retry queue holds
+        on the virtual clock, and resumes drain after heal.  Fully
+        deterministic — no RNG."""
+        faces = tuple(faces)
+        box = flag if flag is not None else [True]
+        label = f"faces={len(faces)}"
+
+        def set_dark(dark: bool) -> None:
+            box[0] = not dark
+            for f in faces:
+                f.down = dark
+
+        self._at(at, "blackout", label, lambda: set_dark(True))
+        self._at(heal_at, "blackout-heal", label, lambda: set_dark(False))
+        return box
+
+    def churn(self, faces: Sequence[Face], *, period: float, down: float,
+              start: float, stop: float,
+              flag: Optional[List[bool]] = None) -> List[bool]:
+        """Repeated :meth:`blackout` cycles — crash/heal churn, phase
+        anchored at ``start`` like :meth:`flap_link`; always ends healed
+        at ``stop``."""
+        box = flag if flag is not None else [True]
+        t = start
+        while t < stop:
+            self.blackout(faces, at=t, heal_at=min(t + down, stop), flag=box)
+            t += period
+        return box
+
     def _gray_rate(self, faces: Sequence[Face], attr: str, rate: float,
                    start: float, stop: Optional[float]) -> None:
         """Shared arm/disarm plumbing for the per-packet gray faults; the

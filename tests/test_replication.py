@@ -1,0 +1,292 @@
+"""Demand-driven replication plane: policy, durability, determinism.
+
+Covers the replication invariants the benchmark gates at scale:
+
+* no replication storms — one hot object yields exactly one transfer per
+  manager and total origin egress bounded by replica_count x size + eps;
+* the byte budget is never exceeded at any instant (``max_bytes_used``),
+  with cold-first eviction making room for hotter objects;
+* a transfer that dies mid-flight (node blackout) resumes from the
+  segments it already persisted, not from zero;
+* a partition parks failed pulls in the durable retry queue; healing
+  drains it and the replica installs;
+* the whole plane is replay-deterministic on both event engines;
+* the DemandTracker stays bounded under 10k-name churn.
+"""
+
+import pytest
+
+from repro.core import Forwarder, Name, Network
+from repro.core.demand import DemandTracker
+from repro.core.forwarder import link
+from repro.core.routing import capability_cost
+from repro.datalake import (DataLake, ReplicationManager,
+                            ReplicationPolicy, fetch)
+from repro.workflow.faults import FaultInjector
+
+DATA = Name.parse("/lidc/data")
+
+
+class Plane:
+    """client -- edge -- origin over a slow WAN hop; manager on the edge."""
+
+    def __init__(self, *, engine: str = "calendar", segment: int = 4096,
+                 wan_latency: float = 0.02, edge_cs_bytes: int = 1 << 20,
+                 policy: ReplicationPolicy = None):
+        self.net = Network(engine=engine)
+        self.origin = Forwarder(self.net, "origin")
+        self.edge = Forwarder(self.net, "edge",
+                              cs_capacity_bytes=edge_cs_bytes)
+        self.client = Forwarder(self.net, "client", cs_capacity_bytes=4096)
+        self.fe, self.fo = link(self.net, self.edge, self.origin, wan_latency)
+        fc, _ = link(self.net, self.client, self.edge, 0.001)
+        self.edge.register_route(DATA, self.fe)
+        self.client.register_route(DATA, fc)
+        self.lake = DataLake(segment_size=segment)
+        self.lake.attach(self.origin)
+        self.policy = policy or ReplicationPolicy(
+            hot_rate=3.0, budget_bytes=1 << 20, interval=0.25,
+            retry_base=0.25, retry_cap=1.0)
+        self.mgr = ReplicationManager(self.net, self.edge,
+                                      policy=self.policy).start()
+
+    def publish(self, name: str, nbytes: int, fill: int = 7) -> Name:
+        n = Name.parse(name)
+        self.lake.put_bytes(n, bytes([fill]) * nbytes)
+        return n
+
+    def heat(self, name: Name, t: float = 0.0, times: int = 4) -> None:
+        """Synthetic reader demand, no data traffic behind it."""
+        for _ in range(times):
+            self.mgr.demand.observe(name, t)
+
+
+def test_hot_object_replicated_served_and_audited():
+    p = Plane()
+    name = p.publish("/lidc/data/ds0/blob", 40960)
+    p.heat(name)
+    p.net.run(until=10.0)
+    st = p.mgr.stats()
+    assert st["replicas"] == 1 and st["transfers_completed"] == 1
+    assert p.mgr.audit(p.lake) == []          # byte-identical to the origin
+    assert name.components in p.edge._producers   # served, not just cached
+    # a post-replication read is satisfied locally: zero origin egress
+    tx0 = p.fo.tx_data_bytes
+    f = fetch(p.net, p.client, name, verify_key=p.lake.key)
+    p.net.run()
+    assert f.result == bytes([7]) * 40960
+    assert p.fo.tx_data_bytes == tx0
+    assert p.mgr.serves > 0 or p.edge.stats["cs_hit"] > 0
+
+
+def test_no_replication_storm_bounded_egress():
+    # demand stays hot across many ticks; still exactly one transfer,
+    # and origin egress is bounded by one copy of the object (+manifest)
+    p = Plane()
+    name = p.publish("/lidc/data/ds0/blob", 65536)
+    for t in range(8):
+        p.heat(name, t=0.1 * t)
+    p.net.run(until=15.0)
+    st = p.mgr.stats()
+    assert st["transfers_started"] == 1
+    assert st["replicas"] == 1
+    assert p.fo.tx_data_bytes <= 65536 * 1.05 + 4096
+
+
+def test_budget_never_exceeded_cold_first_eviction():
+    size = 32768
+    pol = ReplicationPolicy(hot_rate=3.0, interval=0.25, cooldown=0.5,
+                            budget_bytes=int(2.5 * size))
+    p = Plane(policy=pol)
+    names = [p.publish(f"/lidc/data/ds{i}/blob", size, fill=i) for i in range(4)]
+    # heat the four objects in sequence: the budget fits only two, so the
+    # coldest must give way as hotter arrivals need room
+    for i, n in enumerate(names):
+        p.net.schedule(2.0 * i, lambda n=n: p.heat(n, p.net.now, times=6))
+    p.net.run(until=20.0)
+    st = p.mgr.stats()
+    assert st["max_bytes_used"] <= pol.budget_bytes    # never, at any instant
+    assert st["evictions"] >= 1
+    assert st["transfers_completed"] >= 3
+    assert p.mgr.audit(p.lake) == []
+    # evicted replicas are de-registered: no stale local producers
+    assert len(p.edge._producers) == st["replicas"]
+
+
+def test_crash_mid_transfer_resumes_from_persisted_segments():
+    p = Plane(segment=1024)
+    name = p.publish("/lidc/data/ds0/blob", 65536)   # 64 segments
+    p.heat(name)
+    inj = FaultInjector(p.net, seed=1)
+    # transfer starts at the 0.25s tick; go dark mid-flight, heal later.
+    # the blackout flag doubles as the manager's liveness: while dark the
+    # tick parks and the retry queue waits on the clock.
+    box = inj.blackout([p.fe, p.fo], at=0.4, heal_at=3.0)
+    p.mgr.alive = lambda: box[0]
+    p.net.run(until=30.0)
+    st = p.mgr.stats()
+    assert st["replicas"] == 1 and st["transfers_completed"] == 1
+    assert st["retries"] >= 1
+    assert st["segments_resumed"] >= 1     # did NOT restart from zero
+    assert st["segments_resumed"] < 64     # ... and had something to fetch
+    assert p.mgr.audit(p.lake) == []
+
+
+def test_partition_heal_drains_retry_queue():
+    p = Plane(segment=1024)
+    name = p.publish("/lidc/data/ds0/blob", 32768)
+    p.heat(name)
+    inj = FaultInjector(p.net, seed=1)
+    inj.blackout([p.fe, p.fo], at=0.3, heal_at=6.0)   # WAN partition only:
+    # the manager stays alive, so failed pulls queue and back off
+    queue_seen = []
+
+    def probe():
+        queue_seen.append(p.mgr.stats()["retry_queue"]
+                          + p.mgr.stats()["in_flight"])
+        if p.net.now < 5.5:
+            p.net.schedule(0.5, probe, daemon=True)
+
+    p.net.schedule(2.0, probe, daemon=True)
+    p.net.run(until=30.0)
+    assert max(queue_seen) >= 1            # the pull was parked, not lost
+    st = p.mgr.stats()
+    assert st["replicas"] == 1             # ... and drained after heal
+    assert st["retry_queue"] == 0
+    assert p.mgr.audit(p.lake) == []
+
+
+def _churn_scenario(engine: str):
+    p = Plane(engine=engine, segment=1024)
+    names = [p.publish(f"/lidc/data/ds{i}/blob", 16384, fill=i)
+             for i in range(3)]
+    for i, n in enumerate(names):
+        p.net.schedule(0.5 * i, lambda n=n: p.heat(n, p.net.now, times=5))
+    inj = FaultInjector(p.net, seed=3)
+    box = inj.churn([p.fe, p.fo], period=2.0, down=0.8, start=0.6, stop=6.0)
+    p.mgr.alive = lambda: box[0]
+    p.net.trace = []
+    p.net.run(until=40.0)
+    return p.net.trace, p.net.now, p.mgr.stats(), p.mgr.audit(p.lake)
+
+
+def test_replay_deterministic_across_engines_under_churn():
+    heap = _churn_scenario("heap")
+    cal = _churn_scenario("calendar")
+    assert heap == cal
+    trace, _, st, bad = cal
+    assert len(trace) > 100
+    assert st["replicas"] == 3 and bad == []
+
+
+def test_demand_tracker_bounded_under_name_churn():
+    d = DemandTracker(capacity=256, half_life=2.0)
+    for i in range(10_000):
+        d.observe(Name.parse(f"/lidc/data/ds{i}/blob"), now=i * 0.001)
+    assert len(d) <= 256
+    st = d.stats()
+    assert st["evictions"] == 10_000 - 256
+    assert st["observations"] == 10_000
+    # non-data names and bare prefix are not tracked at all
+    d2 = DemandTracker(capacity=8)
+    d2.observe(Name.parse("/lidc/compute/job1"), now=0.0)
+    d2.observe(Name.parse("/lidc/data"), now=0.0)
+    assert len(d2) == 0
+
+
+def test_demand_tracker_decay_segments_and_ignore_faces():
+    d = DemandTracker(capacity=8, half_life=1.0)
+    base = Name.parse("/lidc/data/ds0/blob")
+    # demand counts READS: the opener Interests of a windowed fetch
+    # (manifest, seg=0) count toward the base object; the later segment
+    # Interests are the same read and count nothing.  Counting both
+    # openers keeps the signal alive when a downstream cache absorbs
+    # one of them (a reader holding just the tiny manifest would
+    # otherwise hide every repeat read of the hottest object).
+    for _ in range(5):
+        d.observe(base.append("manifest"), now=0.0)
+    d.observe(base.append("seg=0"), now=0.0)
+    for i in range(1, 5):
+        d.observe(base.append(f"seg={i}"), now=0.0)
+    assert len(d) == 1
+    assert d.rate(base, now=0.0) == pytest.approx(6.0)
+    assert d.rate(base, now=1.0) == pytest.approx(3.0)   # one half-life
+    assert d.hot(0.0, threshold=3.0) == [(base.components, 6.0)]
+    assert d.hot(10.0, threshold=3.0) == []
+    # a manager's own transfer face never reads as reader demand
+    d.ignore_faces.add(99)
+    d.observe(base, now=0.0, in_face=99)
+    assert d.rate(base, now=0.0) == pytest.approx(6.0)
+
+
+def test_demand_tracker_excludes_derived_namespaces():
+    # compute results and live serving-session state are owned by their
+    # planes: proactively replicating them races stage retries
+    # (exactly-once) or serves stale session tokens — never candidates
+    d = DemandTracker(capacity=8,
+                      exclude=("/lidc/data/results", "/lidc/data/serve"))
+    for _ in range(5):
+        d.observe(Name.parse("/lidc/data/results/abcd1234"), now=0.0)
+        d.observe(Name.parse("/lidc/data/serve/sess/s0/chunk=0"), now=0.0)
+    assert len(d) == 0
+    d.observe(Name.parse("/lidc/data/ds0/blob"), now=0.0)
+    assert len(d) == 1
+    # the manager wires the policy's exclusions straight through
+    net = Network()
+    mgr = ReplicationManager(net, Forwarder(net, "n"))
+    assert mgr.demand.exclude_keys == (
+        ("lidc", "data", "results"), ("lidc", "data", "serve"))
+
+
+def test_replica_caps_rank_as_pure_hop_cost():
+    assert capability_cost({"replica": "edge-repl"}) == 0.0
+    assert capability_cost({}) == 0.0
+    assert capability_cost(None) == 0.0
+
+
+def test_replica_advertised_via_gossip_steers_readers():
+    # ring 0-1-2-3-4: origin lake at node 0; manager on node 2.  After the
+    # pull, node 2 originates the object name through routing gossip with
+    # replica caps; node 3's FIB must then prefer its 1-hop neighbor 2
+    # (longest-prefix route) over the 2-hop path to the origin.
+    from repro.core.overlay import MeshTopology
+
+    net = Network()
+    mesh = MeshTopology(net, 5, "ring", seed=2)
+    lake = DataLake(segment_size=2048)
+    lake.attach(mesh.nodes[0])
+    mesh.agents[0].originate(DATA)
+    mesh.converge(timeout=20.0)
+
+    name = Name.parse("/lidc/data/ds0/blob")
+    lake.put_bytes(name, b"\5" * 16384)
+    mgr = ReplicationManager(net, mesh.nodes[2], agent=mesh.agents[2],
+                             policy=ReplicationPolicy(hot_rate=3.0,
+                                                      budget_bytes=1 << 20)
+                             ).start()
+    for _ in range(4):
+        mgr.demand.observe(name, net.now)
+    net.run(until=30.0)
+    assert mgr.stats()["replicas"] == 1
+
+    prefix, hops = mesh.nodes[3].fib.lookup(name)
+    assert prefix is not None
+    assert len(prefix.components) > len(DATA.components)   # replica route
+    toward_replica = mesh.faces[(3, 2)].face_id
+    assert [h.face_id for h in hops] == [toward_replica]
+
+    tx0 = sum(f.tx_data_bytes for (i, _), f in mesh.faces.items() if i == 0)
+    f = fetch(net, mesh.nodes[3], name, verify_key=lake.key)
+    net.run()
+    assert f.result == b"\5" * 16384
+    tx1 = sum(f.tx_data_bytes for (i, _), f in mesh.faces.items() if i == 0)
+    assert tx1 == tx0                      # the origin never saw the read
+
+    # eviction withdraws the advertisement: the route must disappear.
+    # stop the policy first — the read above re-heated demand at node 2,
+    # and a live manager would (correctly) just re-replicate.
+    mgr.stop()
+    mgr._evict(name.components)
+    net.run(until=net.now + 15.0)
+    prefix2, _ = mesh.nodes[3].fib.lookup(name)
+    assert prefix2 is None or len(prefix2.components) == len(DATA.components)

@@ -102,3 +102,33 @@ def test_cs_capacity_invariant():
         assert len(cs) <= 8
 
     check()
+
+
+def test_cs_per_prefix_hit_rates():
+    cs = ContentStore(capacity=16, prefix_stats_depth=2)
+    cs.insert(Data(name=Name.parse("/a/hot/x"), content=b"v"))
+    for _ in range(9):
+        assert cs.match(Interest(name=Name.parse("/a/hot/x")), 0.0)
+    assert cs.match(Interest(name=Name.parse("/a/hot/y")), 0.0) is None
+    for _ in range(4):
+        assert cs.match(Interest(name=Name.parse("/a/cold/z")), 0.0) is None
+    assert cs.hit_rate_for(Name.parse("/a/hot/anything")) == 0.9
+    assert cs.hit_rate_for(Name.parse("/a/cold/z")) == 0.0
+    assert cs.hit_rate_for(Name.parse("/never/seen")) == 0.0
+    rates = cs.prefix_hit_rates()
+    assert rates == {"/a/hot": 0.9, "/a/cold": 0.0}
+    # the scalar stays the blended rate (backward compat)
+    assert cs.hit_rate == 9 / 14
+    st = cs.stats()
+    assert st["prefix_stats_entries"] == 2
+    assert st["prefix_stats_evictions"] == 0
+
+
+def test_cs_prefix_stats_bounded_under_churn():
+    cs = ContentStore(capacity=4, prefix_stats_depth=2,
+                      prefix_stats_capacity=8)
+    for i in range(1000):
+        cs.match(Interest(name=Name.parse(f"/p{i}/x")), 0.0)
+    st = cs.stats()
+    assert st["prefix_stats_entries"] <= 8
+    assert st["prefix_stats_evictions"] == 1000 - 8
